@@ -1,0 +1,478 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = modeled step/op time
+in microseconds where applicable) and writes artifacts/benchmarks/*.json.
+
+Measured-on-CPU quantities (kernel wall times, fidelity loss curves) run
+here; cluster-scale quantities are derived from (a) the calibrated alpha-beta
+model of the paper's AWS environment (benchmarks/paper_model.py) and (b) the
+compiled-HLO statistics cached by the multi-pod dry-run
+(artifacts/dryrun/*.json).  Nothing pretends to be a wall-clock TPU
+measurement; EXPERIMENTS.md labels every number's provenance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks import paper_model as pm
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+OUT = ART / "benchmarks"
+
+ROWS: list[tuple[str, float, str]] = []
+RESULTS: dict[str, object] = {}
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.3f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 — effective all-gather bandwidth vs scale and message size
+# ---------------------------------------------------------------------------
+
+def bench_fig2_effective_bandwidth():
+    table = {}
+    for nodes in (2, 4, 8, 16, 32):
+        g = nodes * 8
+        for mb in (32, 128, 512, 1024):
+            b = pm.effective_bandwidth(pm.NET_100G, g, mb * 1e6) / 1e9
+            table[f"{nodes}n_{mb}MB"] = round(b, 2)
+    RESULTS["fig2"] = table
+    small = table["32n_32MB"]
+    big = table["2n_1024MB"]
+    emit("fig2_effective_bandwidth",
+         pm.t_all_gather(pm.NET_100G, 64, 128e6) * 1e6,
+         f"32n@32MB={small}GBps vs 2n@1GB={big}GBps vs intra-node "
+         f"{pm.effective_bandwidth(pm.NET_100G, 8, 1e9)/1e9:.0f}GBps "
+         f"(paper: 128 intra, ~11 at 64 GPUs, worse for small msgs)")
+    assert small < big < 128
+
+
+# ---------------------------------------------------------------------------
+# Fig 7/8 — strong scaling on 100 Gbps; Fig 9 TFLOPS
+# ---------------------------------------------------------------------------
+
+WORKLOADS = {
+    "bert-10b": (10e9, 127, 8),
+    "bert-15b": (15e9, 190, 16),
+    "bert-20b": (20e9, 64, 16),
+    "bert-50b": (50e9, 62, 64),
+    "roberta-20b": (20e9, 62, 16),
+    "gpt2-20b": (20e9, 62, 16),
+}
+
+
+def bench_fig7_8_scaling():
+    out = {}
+    best = 0.0
+    for name, (n_params, layers, p) in WORKLOADS.items():
+        w = pm.bert_workload(name, n_params, layers)
+        rows = []
+        for n in (16, 32, 64, 128):
+            if n < p:
+                rows.append(None)
+                continue
+            t_m = pm.step_time(w, pm.NET_100G, n, p)
+            t_d = pm.step_time(w, pm.NET_100G, n, p, system="zero3",
+                               coalesced=False, fine_sync=False)
+            rows.append({
+                "n": n,
+                "mics_samples_s": round(n * 32 / t_m, 1),
+                "deepspeed_samples_s": round(n * 32 / t_d, 1),
+                "ratio": round(t_d / t_m, 2),
+            })
+            best = max(best, t_d / t_m)
+        valid = [r for r in rows if r]
+        base = valid[0]
+        eff = (valid[-1]["mics_samples_s"] / valid[-1]["n"]) / \
+              (base["mics_samples_s"] / base["n"])
+        out[name] = {"rows": rows, "scaling_efficiency": round(eff, 3)}
+        emit(f"fig7_{name}",
+             pm.step_time(w, pm.NET_100G, max(p, 16), p) * 1e6,
+             f"MiCS/DS up to {max(r['ratio'] for r in valid):.2f}x, "
+             f"strong-scaling eff {eff:.3f}")
+    RESULTS["fig7_8"] = out
+    emit("fig7_8_max_ratio", 0.0,
+         f"max modeled MiCS/DeepSpeed={best:.2f}x (paper reports up to 2.89x)")
+
+
+def bench_fig9_tflops():
+    out = {}
+    for name, (n_params, layers, p) in WORKLOADS.items():
+        w = pm.bert_workload(name, n_params, layers)
+        n = max(p, 64)
+        t = pm.step_time(w, pm.NET_100G, n, p)
+        flops_gpu = 32 * w.flops_per_sample * (6 / 8) / t  # useful 6ND
+        out[name] = round(flops_gpu / 1e12, 1)
+        emit(f"fig9_tflops_{name}", t * 1e6,
+             f"{flops_gpu/1e12:.0f} TFLOPS/GPU "
+             f"({flops_gpu/pm.V100_PEAK*100:.0f}% of V100 peak; "
+             f"paper: 42% for 10B)")
+    RESULTS["fig9"] = out
+
+
+# ---------------------------------------------------------------------------
+# Fig 10 — 400 Gbps A100 cluster; §5.1.5 — 100B case study at 512
+# ---------------------------------------------------------------------------
+
+def bench_fig10_400g():
+    out = {}
+    for name in ("bert-15b", "bert-20b"):
+        n_params, layers, p = WORKLOADS[name]
+        w = pm.bert_workload(name, n_params, layers)
+        ratios = []
+        for n in (16, 32, 64):
+            t_m = pm.step_time(w, pm.NET_400G, n, p, peak=312e12)
+            t_d = pm.step_time(w, pm.NET_400G, n, p, system="zero3",
+                               coalesced=False, fine_sync=False, peak=312e12)
+            ratios.append(round(t_d / t_m, 2))
+        out[name] = ratios
+        emit(f"fig10_{name}", 0.0,
+             f"MiCS/DS at 16/32/64 A100s: {ratios} (paper: up to 2.21x, "
+             f"gap narrows vs 100Gbps)")
+    RESULTS["fig10"] = out
+
+
+def bench_case_study_100b():
+    w = dataclasses.replace(
+        pm.bert_workload("100b", 100e9, 80, seq=2048), micro_batch=16)
+    rows = {}
+    for n in (128, 512):
+        t = pm.step_time(w, pm.NET_400G, n, 128, peak=312e12, eff=0.57)
+        tf = w.micro_batch * w.micro_steps * w.flops_per_sample * (6 / 8) \
+            / t / 1e12
+        rows[n] = round(tf, 1)
+    eff = rows[512] / rows[128]
+    hw = round(rows[512] * 8 / 6, 1)  # incl. activation recompute, as the
+    # paper reports ("with activation checkpointing")
+    RESULTS["case_study_100b"] = {"useful_tflops": rows,
+                                  "hardware_tflops_512": hw,
+                                  "weak_scaling": round(eff, 4)}
+    emit("case_study_100b", 0.0,
+         f"modeled {hw:.0f} hardware TFLOPS/GPU at 512 "
+         f"({rows[512]:.0f} useful 6ND), weak scaling {eff:.3f} "
+         f"(paper: 170-179 TFLOPS incl. recompute, 0.994). DeepSpeed's "
+         f"measured collapse to 62 TFLOPS is allocator/fragmentation-driven "
+         f"and outside an alpha-beta model — recorded as a deviation.")
+
+
+# ---------------------------------------------------------------------------
+# Fig 12 — partition-group size ablation (dry-run artifacts + model)
+# ---------------------------------------------------------------------------
+
+def _dryrun_records(tag=""):
+    recs = []
+    for p in sorted((ART / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if (r.get("tag") or "") == tag:
+            recs.append(r)
+    return recs
+
+
+def bench_fig12_partition_group():
+    # analytic (paper environment)
+    w = pm.bert_workload("bert-10b", 10e9, 127)
+    th = {p: round(pm.throughput(w, pm.NET_100G, 64, p), 1)
+          for p in (8, 16, 32, 64)}
+    RESULTS["fig12_model"] = th
+    ratio = th[8] / th[64]
+    emit("fig12_partition_group", 0.0,
+         f"throughput p=8 vs p=64 on 64 GPUs: {ratio:.2f}x (paper: 1.6x)")
+
+    # HLO-derived (TPU dry-run ablation artifacts, if generated)
+    cells = [r for p in sorted((ART / "dryrun").glob("*fig12*.json"))
+             for r in [json.loads(p.read_text())]
+             if r["shape"] == "train_4k"]
+    if cells:
+        by_p = {r["partition_size"]:
+                r["stats"]["total_wire_bytes"] for r in sorted(
+                    cells, key=lambda r: r["partition_size"])}
+        RESULTS["fig12_hlo_wire_bytes"] = by_p
+        emit("fig12_hlo", 0.0,
+             "wire bytes by p: " + str({k: f"{v:.2e}" for k, v in by_p.items()}))
+
+
+# ---------------------------------------------------------------------------
+# Fig 11 — Megatron-LM-3D comparison (modeled)
+# ---------------------------------------------------------------------------
+
+def bench_fig11_megatron():
+    """Paper §5.1.3: 128-layer BERT-10B-wide model, 64 GPUs, micro 8,
+    global 4096 (s=8).  Megatron-3D step = pipeline-bubbled compute + TP
+    activation all-reduces + DP gradient all-reduce; the bubble fraction is
+    (p_stages-1)/(m+p_stages-1)."""
+    n = 64
+    n_params = 10e9
+    layers = 128
+    w = dataclasses.replace(pm.bert_workload("bert-10b-128L", n_params, layers),
+                            micro_steps=8)
+    s, mb = w.micro_steps, w.micro_batch
+    t_comp = s * mb * w.flops_per_sample / (pm.V100_PEAK * pm.V100_EFF)
+
+    def megatron(tp, pp):
+        dp = n // (tp * pp)
+        micros = s * dp  # microbatches filling the pipeline per step
+        bubble = (pp - 1) / (micros + pp - 1)
+        comp = t_comp / 1.0  # same per-GPU compute (model split over tp*pp,
+        # data over dp -> per-GPU work constant at fixed n)
+        # TP all-reduces: 4 per layer-pass (fwd+bwd) on activations
+        act_bytes = mb * 512 * 2560 * 2
+        t_tp = 0.0
+        if tp > 1:
+            per = pm.t_all_reduce(pm.NET_100G, tp, act_bytes)
+            t_tp = 4 * (layers / pp) * s * per * 2
+        # DP gradient all-reduce at the boundary
+        t_dp = pm.t_all_reduce(pm.NET_100G, dp, 2 * n_params / (tp * pp)) \
+            if dp > 1 else 0.0
+        return (comp + t_tp + t_dp) / (1 - bubble)
+
+    t_cfg = {f"tp{tp}_pp{pp}": megatron(tp, pp)
+             for tp, pp in ((8, 1), (4, 4), (2, 8))}
+    t_mics = pm.step_time(w, pm.NET_100G, n, 8)
+    best = min(t_cfg.values())
+    worst = max(t_cfg.values())
+    RESULTS["fig11"] = {
+        "megatron_steps_s": {k: round(v, 1) for k, v in t_cfg.items()},
+        "mics_step_s": round(t_mics, 1),
+        "mics_vs_best_megatron": round(best / t_mics, 2),
+        "megatron_config_spread": round(worst / best, 2),
+    }
+    emit("fig11_megatron3d", t_mics * 1e6,
+         f"MiCS vs best Megatron-3D config: {best/t_mics:.2f}x (paper: up "
+         f"to 1.31x); Megatron config spread {worst/best:.2f}x (paper: 1.38x)"
+         f" — direction + sensitivity reproduced; the alpha-beta model ranks"
+         f" tp8pp1 best while the paper measured tp2pp8 (their TP-sync"
+         f" overheads exceed the pure-bandwidth cost)")
+
+
+# ---------------------------------------------------------------------------
+# Fig 13 — hierarchical all-gather
+# ---------------------------------------------------------------------------
+
+def bench_fig13_hierarchical():
+    # micro-benchmark analogue: 2 nodes, 16 GPUs, varying message size
+    out = {}
+    for mb in (32, 64, 128, 256):
+        m = mb * 1e6
+        t_van = pm.t_all_gather(pm.NET_100G, 16, m)
+        t_hier = pm.t_hier_all_gather(pm.NET_100G, 16, m)
+        out[f"{mb}MB"] = round(t_hier / t_van, 3)
+    RESULTS["fig13_time_ratio"] = out
+    emit("fig13_hierarchical_micro",
+         pm.t_all_gather(pm.NET_100G, 16, 128e6) * 1e6,
+         f"hier/vanilla time at 128MB: {out['128MB']:.2f} (paper: 0.721)")
+    # exact volume law: inter-node bytes drop from (p-1)M/p to (p-k)M/p
+    for p, k in ((16, 8), (32, 8), (64, 8)):
+        red = 1 - (p - k) / (p - 1)
+        emit(f"fig13_volume_law_p{p}", 0.0,
+             f"inter-node traffic reduced {red:.1%} "
+             f"(paper: 11.1-46.6% for 8<=p<=64)")
+
+
+# ---------------------------------------------------------------------------
+# Fig 14 — 2-hop gradient synchronization
+# ---------------------------------------------------------------------------
+
+def bench_fig14_two_hop():
+    w = pm.bert_workload("bert-10b", 10e9, 127)
+    out = {}
+    for n in (32, 64, 128):
+        t_2hop = pm.step_time(w, pm.NET_100G, n, 8)
+        t_alt = pm.step_time(w, pm.NET_100G, n, 8, system="mics_alt")
+        out[n] = round(t_alt / t_2hop - 1, 3)
+    RESULTS["fig14"] = out
+    emit("fig14_two_hop", 0.0,
+         f"2-hop improvement vs alternative schedule at 32/64/128 GPUs: "
+         f"{[f'{v:+.1%}' for v in out.values()]} (paper: 11-24.9%)")
+    # analytic lower bound from §3.4: C_alt/C_2hop >= 2s/(s + 2) at equal BW
+    s = 4
+    emit("fig14_lower_bound", 0.0,
+         f"paper's s=4 equal-bandwidth bound: {2*s/(s+2):.3f}x (>=25% gain)")
+
+
+# ---------------------------------------------------------------------------
+# Fig 15 — implementation optimizations (coalesced gathers, fine sync)
+# ---------------------------------------------------------------------------
+
+def bench_fig15_impl_opts():
+    w = pm.bert_workload("bert-10b", 10e9, 127)
+    out = {}
+    for n in (32, 64, 128):
+        t_ds = pm.step_time(w, pm.NET_100G, n, n, system="zero3",
+                            coalesced=False, fine_sync=False)
+        t_mz = pm.step_time(w, pm.NET_100G, n, n, system="zero3")
+        t_m = pm.step_time(w, pm.NET_100G, n, 8)
+        out[n] = {"mics_zero3_vs_ds": round(t_ds / t_mz - 1, 3),
+                  "mics_vs_mics_zero3": round(t_mz / t_m, 2)}
+    RESULTS["fig15"] = out
+    emit("fig15_impl_opts", 0.0,
+         f"MiCS(ZeRO-3) vs DeepSpeed at 128: "
+         f"{out[128]['mics_zero3_vs_ds']:+.1%} (paper: +54.1%); "
+         f"full MiCS another {out[128]['mics_vs_mics_zero3']:.2f}x on top")
+    # structural fact from the flat-pool implementation:
+    from repro.configs import get_config
+    from repro.models.build import build_model
+    model = build_model(get_config("granite-8b"), tp=16)
+    segs = len(model.pool("layers").layout.segments)
+    emit("fig15_coalescing_factor", 0.0,
+         f"flat pools turn {segs} per-layer tensors into 1 gather "
+         f"({segs}x fewer collectives than per-tensor fetching)")
+
+
+# ---------------------------------------------------------------------------
+# Fig 16 — fidelity (real CPU training, synthetic corpus)
+# ---------------------------------------------------------------------------
+
+def bench_fig16_fidelity():
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke_variant
+    from repro.core.mics import MiCSConfig, build_train_step, init_state
+    from repro.core.topology import MiCSTopology, make_host_mesh
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.build import build_model
+    from repro.optim.adamw import OptConfig
+
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    topo = MiCSTopology(make_host_mesh(1, 1, 1, 1))
+    model = build_model(cfg, tp=1)
+    dc = DataConfig(vocab=cfg.vocab, seq=64, global_batch=8, micro_steps=2)
+    src = SyntheticLM(dc)
+
+    curves = {}
+    for label, mcfg in (("2hop", MiCSConfig(micro_steps=2)),
+                        ("alternative", MiCSConfig(micro_steps=2,
+                                                   sync_mode="allreduce_slice"))):
+        state = init_state(model, topo, seed=9)
+        step = build_train_step(model, topo, mcfg,
+                                OptConfig(total_steps=40, warmup_steps=2,
+                                          lr_max=2e-3))
+        losses = []
+        t0 = time.time()
+        for i in range(30):
+            batch = {k: jnp.asarray(v) for k, v in
+                     src.global_step_batch(i).items()}
+            state, metrics = step(state, batch)
+            losses.append(round(float(metrics["loss"]), 4))
+        dt = (time.time() - t0) / 30
+        curves[label] = losses
+    RESULTS["fig16"] = curves
+    gap = max(abs(a - b) for a, b in zip(curves["2hop"],
+                                         curves["alternative"]))
+    emit("fig16_fidelity", dt * 1e6,
+         f"loss {curves['2hop'][0]:.2f}->{curves['2hop'][-1]:.2f} over 30 "
+         f"steps; max |2hop - alternative| = {gap:.3f} (same convergence, "
+         f"paper Fig 16)")
+    assert curves["2hop"][-1] < curves["2hop"][0] - 0.5
+    assert gap < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — model zoo parameter counts
+# ---------------------------------------------------------------------------
+
+def bench_table1_model_zoo():
+    from repro.configs import ASSIGNED, PAPER_CONFIGS
+    from repro.models.build import exact_param_count
+
+    out = {}
+    for cfg in list(PAPER_CONFIGS.values()) + list(ASSIGNED):
+        out[cfg.name] = round(exact_param_count(cfg) / 1e9, 2)
+    RESULTS["table1"] = out
+    for name, target in (("bert-10b", 10), ("bert-15b", 15), ("bert-20b", 20),
+                         ("bert-50b", 50), ("qwen1.5-110b", 111),
+                         ("dbrx-132b", 132)):
+        got = out[name]
+        assert abs(got - target) / target < 0.18, (name, got)
+    emit("table1_model_zoo", 0.0,
+         "; ".join(f"{k}={v}B" for k, v in out.items()))
+
+
+# ---------------------------------------------------------------------------
+# Roofline table (from dry-run artifacts) + kernel wall-times
+# ---------------------------------------------------------------------------
+
+def bench_roofline_table():
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+    from repro.roofline.analysis import build_table, markdown_table
+
+    rows = build_table()
+    RESULTS["roofline"] = rows
+    if rows:
+        (ART / "roofline.json").write_text(json.dumps(rows, indent=1))
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        emit("roofline_table", 0.0,
+             f"{len(rows)} cells; best fraction "
+             f"{best['roofline_fraction']:.3f} ({best['arch']}/{best['shape']}), "
+             f"worst {worst['roofline_fraction']:.4f} "
+             f"({worst['arch']}/{worst['shape']})")
+    else:
+        emit("roofline_table", 0.0, "no dry-run artifacts found — run "
+             "python -m repro.launch.dryrun --all first")
+
+
+def bench_kernel_walltime():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    q = jnp.ones((4, 256, 64), jnp.float32)
+    f = jax.jit(lambda q: attention_ref(q, q, q, causal=True))
+    f(q).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        f(q).block_until_ready()
+    emit("kernel_attention_ref_cpu", (time.time() - t0) / 5 * 1e6,
+         "pure-jnp oracle wall time (Pallas kernel validated interpret=True; "
+         "TPU timing n/a on this host)")
+
+
+BENCHES = [
+    bench_fig2_effective_bandwidth,
+    bench_fig7_8_scaling,
+    bench_fig9_tflops,
+    bench_fig10_400g,
+    bench_case_study_100b,
+    bench_fig11_megatron,
+    bench_fig12_partition_group,
+    bench_fig13_hierarchical,
+    bench_fig14_two_hop,
+    bench_fig15_impl_opts,
+    bench_fig16_fidelity,
+    bench_table1_model_zoo,
+    bench_roofline_table,
+    bench_kernel_walltime,
+]
+
+
+def main() -> None:
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in BENCHES:
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            emit(bench.__name__, -1.0, f"FAILED: {type(e).__name__}: {e}")
+    (OUT / "results.json").write_text(json.dumps(RESULTS, indent=1, default=str))
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

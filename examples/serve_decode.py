@@ -1,0 +1,19 @@
+"""Serving example: prefill a batch of prompts and greedy-decode
+continuations with the MiCS-sharded serving runtime (ZeRO-3-style parameter
+gathering, per-rank KV cache).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    import sys
+
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "recurrentgemma-2b"]
+    if "--smoke" not in sys.argv:
+        sys.argv += ["--smoke"]
+    serve_main()

@@ -1,0 +1,102 @@
+"""Architecture configuration schema.
+
+One ``ArchConfig`` per assigned architecture (exact public-literature
+configuration) plus a ``smoke()`` reduction of the same family for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+Family = Literal["dense", "vlm", "encdec", "griffin", "xlstm", "moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"          # swiglu | geglu | gelu
+    norm: str = "rms"            # rms | ln
+    rope_theta: float = 500_000.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- griffin / local attention ------------------------------------------
+    window: int = 0              # local-attention window (0 = full)
+    pattern: tuple[str, ...] = ()  # block pattern, e.g. ("rec","rec","attn")
+    lru_width: int = 0           # RG-LRU channel count (0 -> d_model)
+    conv_width: int = 4
+
+    # --- vlm ------------------------------------------------------------------
+    cross_interval: int = 0      # 1 cross-attn layer after every N self layers
+    n_vision_tokens: int = 1024  # stub frontend output length
+
+    # --- encdec -----------------------------------------------------------------
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 1500   # stub conv frontend output length
+
+    # --- xlstm -------------------------------------------------------------------
+    slstm_every: int = 0         # one sLSTM block per this many layers
+    expand: float = 2.0          # mLSTM up-projection factor
+
+    # --- serving / shapes ----------------------------------------------------
+    max_seq: int = 32768
+    sub_quadratic: bool = False  # eligible for long_500k
+
+    # --- distribution hints ---------------------------------------------------
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (for partition-size heuristic and
+        MODEL_FLOPS).  Computed from the layout builders, so exact: see
+        models/build.py:param_count which sums the real layouts; this is the
+        quick analytic version used before layouts exist."""
+        from repro.models.build import exact_param_count
+
+        return exact_param_count(self)
+
+
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw: dict = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        max_seq=128,
+    )
+    if cfg.family == "moe":
+        kw.update(n_experts=8, top_k=2, n_shared_experts=cfg.n_shared_experts, d_ff=32)
+    if cfg.family == "griffin":
+        kw.update(window=32, lru_width=64, n_layers=min(cfg.n_layers, 6))
+    if cfg.family == "xlstm":
+        kw.update(n_layers=4, n_heads=2, n_kv_heads=2)
+    if cfg.family == "vlm":
+        kw.update(n_layers=5, n_vision_tokens=16)
+    if cfg.family == "encdec":
+        kw.update(n_encoder_layers=2, n_layers=2, n_audio_frames=16)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **kw)

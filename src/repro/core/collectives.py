@@ -1,0 +1,258 @@
+"""MiCS collectives: flat and hierarchical all-gather / reduce-scatter.
+
+Implements the paper's §3.3 three-stage hierarchical all-gather, adapted to
+TPU mesh axes, plus a beyond-paper *reorder-free* variant.
+
+Paper-faithful ("outer_first", 3 stages), partition group p = outer×inner
+(outer = "p/k nodes" over the slow links, inner = "k devices per node"):
+
+  stage 1: ``inner`` parallel all-gathers over the *outer* (slow) dimension
+           among same-local-rank devices  (paper Fig 5, inter-node)
+  stage 2: chunk reorder to fix memory contiguity (paper Fig 5, middle)
+  stage 3: batched all-gathers over the *inner* (fast) dimension
+
+Beyond-paper ("inner_first", 2 stages): gathering over the fast dimension
+first makes each device hold a *contiguous* block of chunks, so the outer
+gather concatenates blocks already in canonical order — the reorder stage
+vanishes and the slow-link stage moves k×-larger messages (better effective
+bandwidth per the paper's own Fig 2 argument) while transferring the same
+(p−k)M/p volume over the slow links.
+
+All functions are pure jnp/lax and differentiate correctly: the VJP of a
+hierarchical all-gather is the matching hierarchical reduce-scatter, which is
+how hop-1 gradient synchronization (§3.4) materializes from plain `jax.grad`.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.topology import MiCSTopology
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stage_groups(p: int, inner: int) -> tuple[list[list[int]], list[list[int]]]:
+    """axis_index_groups for the two stages within a single mesh axis.
+
+    outer groups: same local rank r, strided by ``inner``  (size p/inner)
+    inner groups: contiguous runs of ``inner`` indices      (size inner)
+    """
+    outer_groups = [list(range(r, p, inner)) for r in range(inner)]
+    inner_groups = [list(range(o * inner, (o + 1) * inner)) for o in range(p // inner)]
+    return outer_groups, inner_groups
+
+
+def flat_all_gather(x: jax.Array, axes: Sequence[str], axis: int = 0) -> jax.Array:
+    """Vanilla single-collective all-gather over the product of ``axes``."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+    return lax.all_gather(x, axes, axis=axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical all-gather
+# ---------------------------------------------------------------------------
+
+def hierarchical_all_gather(
+    x: jax.Array,
+    topo: MiCSTopology,
+    *,
+    axis: int = 0,
+    order: str = "inner_first",
+    inner: int | None = None,
+) -> jax.Array:
+    """All-gather ``x`` over the partition group, staged over the hierarchy.
+
+    ``x`` is this device's shard (1/p of the full buffer along ``axis``).
+    Returns the full buffer, identical to ``flat_all_gather`` over the
+    partition axes.
+    """
+    p = topo.partition_size
+    if p == 1:
+        return x
+
+    if len(topo.partition_axes) > 1:
+        return _hierarchical_multi_axis(x, topo, axis=axis, order=order)
+    return _hierarchical_single_axis(
+        x, topo.partition_axes[0], p, axis=axis, order=order, inner=inner
+    )
+
+
+def _hierarchical_single_axis(
+    x: jax.Array,
+    axis_name: str,
+    p: int,
+    *,
+    axis: int,
+    order: str,
+    inner: int | None,
+) -> jax.Array:
+    # factor p = outer * inner
+    if inner is None:
+        inner = 1
+        while inner * inner <= p // 2 and p % (inner * 2) == 0:
+            inner *= 2
+    if p % inner != 0:
+        raise ValueError(f"inner={inner} does not divide p={p}")
+    outer = p // inner
+    if inner == 1 or outer == 1:
+        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+    outer_groups, inner_groups = _stage_groups(p, inner)
+
+    if order == "outer_first":
+        # Paper-faithful: stage 1 over slow/outer links, stage 2 reorder,
+        # stage 3 over fast/inner links.
+        g1 = lax.all_gather(
+            x, axis_name, axis=axis, tiled=True, axis_index_groups=outer_groups
+        )
+        g2 = lax.all_gather(
+            g1, axis_name, axis=axis, tiled=True, axis_index_groups=inner_groups
+        )
+        # g2 chunk order along ``axis`` is (local_rank r, node o); canonical
+        # ownership (device i = o*inner + r owns chunk i) wants (o, r).
+        return _reorder_chunks(g2, axis, inner, outer)
+    elif order == "inner_first":
+        # Beyond-paper: fast links first -> contiguous blocks -> no reorder.
+        g1 = lax.all_gather(
+            x, axis_name, axis=axis, tiled=True, axis_index_groups=inner_groups
+        )
+        g2 = lax.all_gather(
+            g1, axis_name, axis=axis, tiled=True, axis_index_groups=outer_groups
+        )
+        return g2
+    raise ValueError(f"unknown order {order!r}")
+
+
+def _hierarchical_multi_axis(
+    x: jax.Array, topo: MiCSTopology, *, axis: int, order: str
+) -> jax.Array:
+    """Partition group spans mesh axes (e.g. ('pod','shard')).
+
+    Canonical chunk ownership follows PartitionSpec axis order: the first
+    (slowest) axis is major.  Gathering minor-axis-first yields contiguous
+    blocks, so concatenating over the major axis needs no reorder
+    (inner_first).  Major-axis-first is the paper's schedule and needs the
+    reorder stage.
+    """
+    axes = topo.partition_axes  # slowest first, major in chunk order
+    if order == "inner_first":
+        out = x
+        for name in reversed(axes):  # fast axes first
+            out = lax.all_gather(out, name, axis=axis, tiled=True)
+        return out
+    elif order == "outer_first":
+        out = x
+        sizes = [topo.axis_size(a) for a in axes]
+        for name in axes:  # slow axes first
+            out = lax.all_gather(out, name, axis=axis, tiled=True)
+        # chunk order is reversed-major; fix to canonical (major=axes[0]).
+        # After gathering slow-first, ordering along ``axis`` is
+        # (minor..major); canonical is (major..minor).
+        inner = 1
+        for s in sizes[1:]:
+            inner *= s
+        return _reorder_chunks(out, axis, inner, sizes[0])
+    raise ValueError(f"unknown order {order!r}")
+
+
+def _reorder_chunks(buf: jax.Array, axis: int, inner: int, outer: int) -> jax.Array:
+    """Paper stage 2: [r, o, chunk] -> [o, r, chunk] along ``axis``."""
+    shape = buf.shape
+    n = shape[axis]
+    chunk = n // (inner * outer)
+    new_shape = shape[:axis] + (inner, outer, chunk) + shape[axis + 1 :]
+    resh = buf.reshape(new_shape)
+    perm = list(range(resh.ndim))
+    perm[axis], perm[axis + 1] = perm[axis + 1], perm[axis]
+    return jnp.transpose(resh, perm).reshape(shape[:axis] + (n,) + shape[axis + 1 :])
+
+
+# ---------------------------------------------------------------------------
+# partition-group gather front-end (what mics.py calls)
+# ---------------------------------------------------------------------------
+
+def partition_all_gather(
+    x: jax.Array,
+    topo: MiCSTopology,
+    *,
+    axis: int = 0,
+    hierarchical: bool = True,
+    order: str = "inner_first",
+    inner: int | None = None,
+) -> jax.Array:
+    """Gather a model-state shard across its partition group (paper §3.2).
+
+    One call per layer on the layer's *flat* buffer — the coalesced
+    communication API of paper §4 is satisfied by construction.
+    """
+    if topo.partition_size == 1:
+        return x
+    if hierarchical:
+        return hierarchical_all_gather(
+            x, topo, axis=axis, order=order, inner=inner
+        )
+    return flat_all_gather(x, topo.partition_axes, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# gradient synchronization primitives (§3.4)
+# ---------------------------------------------------------------------------
+
+def hop1_reduce_scatter(g: jax.Array, topo: MiCSTopology, *, axis: int = 0) -> jax.Array:
+    """Reduce-scatter a full gradient across the partition group (hop 1).
+
+    Normally this arises implicitly as the VJP of ``partition_all_gather``;
+    the explicit form is used by the alternative-schedule ablation and tests.
+    """
+    if topo.partition_size == 1:
+        return g
+    return lax.psum_scatter(
+        g, topo.partition_axes, scatter_dimension=axis, tiled=True
+    )
+
+
+def hop2_all_reduce(g: jax.Array, topo: MiCSTopology) -> jax.Array:
+    """All-reduce shard gradients across replication groups (hop 2).
+
+    Runs once per gradient-accumulation boundary, over the replication axes
+    only — the paper's amortized global synchronization.
+    """
+    if not topo.replication_axes or topo.replication_degree == 1:
+        return g
+    return lax.psum(g, topo.replication_axes)
+
+
+def alternative_sync(g_full: jax.Array, topo: MiCSTopology, *, axis: int = 0) -> jax.Array:
+    """DeepSpeed's default schedule (paper §3.4 "alternative"): all-reduce the
+    *full* gradient over every data device each micro-step, then keep only the
+    local shard.  Implemented for the Fig 14 ablation; strictly redundant.
+    """
+    summed = lax.psum(g_full, topo.partition_axes + topo.replication_axes)
+    p = topo.partition_size
+    if p == 1:
+        return summed
+    idx = _partition_coord(topo)
+    size = summed.shape[axis] // p
+    return lax.dynamic_slice_in_dim(summed, idx * size, size, axis=axis)
+
+
+def _partition_coord(topo: MiCSTopology):
+    """Linearized index of this device within its partition group."""
+    idx = 0
+    for name in topo.partition_axes:
+        idx = idx * topo.axis_size(name) + lax.axis_index(name)
+    return idx
+
+
+def replica_mean(x: jax.Array, topo: MiCSTopology) -> jax.Array:
+    """Mean over every data-parallel device (for loss logging)."""
+    return lax.pmean(x, topo.data_axes)

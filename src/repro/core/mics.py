@@ -1,0 +1,304 @@
+"""The MiCS engine: scale-aware partitioned training step with 2-hop
+gradient synchronization (paper §3), plus the ZeRO-3 and alternative-schedule
+baselines used in the ablations.
+
+Schedule (one jitted step = one gradient-accumulation boundary, s micro-steps):
+
+  for each micro-step (lax.scan):
+      per layer (lax.scan inside the model):
+          all-gather the layer's bf16 flat shard across the partition group
+          (hierarchical, §3.3); compute under jax.checkpoint (backward
+          re-gathers — ZeRO-3 semantics + activation checkpointing)
+      backward: the gather's adjoint reduce-scatters gradients across the
+          partition group  -> hop 1 (§3.4), accumulated in fp32 shards
+  at the boundary:
+      psum over replication axes                 -> hop 2 (§3.4)
+      global-norm clip, AdamW on fp32 shards (optimizer states partitioned)
+
+ZeRO-3 baseline = partition_axes spanning every data axis (hop 2 vanishes).
+Alternative schedule (Fig 14) = all-reduce full gradient each micro-step then
+slice — implemented by overriding the gather's custom_vjp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import collectives as C
+from repro.core.flat_param import model_gather_fn_for
+from repro.core.topology import MODEL_AXIS, MiCSTopology
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.lm import ModelDef, Pool
+from repro.optim.adamw import OptConfig, adamw_shard_update
+
+
+@dataclasses.dataclass(frozen=True)
+class MiCSConfig:
+    """Knobs of the paper's three mechanisms + beyond-paper options."""
+
+    micro_steps: int = 1
+    hierarchical: bool = True
+    gather_order: str = "inner_first"   # 'outer_first' = paper-faithful 3-stage
+    gather_dtype: Any = jnp.bfloat16
+    sync_mode: str = "2hop"             # '2hop' | 'allreduce_slice' (ablation)
+    hierarchy_inner: int | None = None  # intra-"node" factor for staged gather
+    compress_hop2: bool = False         # bf16-compressed cross-replica hop 2
+    scores_bf16: bool = False           # bf16 attention scores (§Perf)
+    mlstm_chunk: int = 0                # chunkwise-parallel mLSTM (§Perf)
+    quant_gather: bool = False          # int8 serving-weight gathers (§Perf)
+
+
+# ---------------------------------------------------------------------------
+# parameter gathering
+# ---------------------------------------------------------------------------
+
+def make_gather_fn(topo: MiCSTopology, mcfg: MiCSConfig) -> Callable:
+    """Returns gather(pool, flat_shard_row) -> dict of layer tensors."""
+    mg = model_gather_fn_for(MODEL_AXIS, topo.model_size)
+
+    def ag(row):
+        return C.partition_all_gather(
+            row, topo, hierarchical=mcfg.hierarchical,
+            order=mcfg.gather_order, inner=mcfg.hierarchy_inner,
+        )
+
+    if mcfg.sync_mode == "allreduce_slice":
+        # DeepSpeed's default schedule (paper §3.4 "alternative"): the gather
+        # adjoint all-reduces the *full* gradient over every data device each
+        # micro-step and keeps the local slice.  Numerically identical to
+        # 2-hop, strictly more communication — the Fig 14 ablation.
+        @jax.custom_vjp
+        def gather_full(row):
+            return ag(row)
+
+        def fwd(row):
+            return ag(row), None
+
+        def bwd(_, ct):
+            return (C.alternative_sync(ct, topo),)
+
+        gather_full.defvjp(fwd, bwd)
+    else:
+        gather_full = ag
+
+    def gather(pool: Pool, row) -> dict[str, jax.Array]:
+        if isinstance(row, dict):  # int8 serving weights: {'q':…, 's':…}
+            from repro.core.quant import dequantize_flat
+
+            q = gather_full(row["q"])
+            s = gather_full(row["s"])
+            full = dequantize_flat(q, s, dtype=mcfg.gather_dtype)
+        else:
+            full = gather_full(row.astype(mcfg.gather_dtype))
+        return pool.layout.unflatten(full, model_gather_fn=mg)
+
+    return gather
+
+
+# ---------------------------------------------------------------------------
+# state containers + shardings
+# ---------------------------------------------------------------------------
+
+def init_state_shapes(model: ModelDef) -> dict[str, Any]:
+    """Global ShapeDtypeStructs for params/m/v/step (no allocation)."""
+    shapes = model.global_flat_shapes()
+    flat = {
+        name: jax.ShapeDtypeStruct(shape, jnp.float32)
+        for name, shape in shapes.items()
+    }
+    return {
+        "params": flat,
+        "m": dict(flat),
+        "v": dict(flat),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_pspecs(model: ModelDef, topo: MiCSTopology) -> dict[str, Any]:
+    pool_spec = P(None, MODEL_AXIS, topo.partition_axes)
+    flat = {name: pool_spec for name in model.global_flat_shapes()}
+    return {"params": flat, "m": dict(flat), "v": dict(flat), "step": P()}
+
+
+def state_shardings(model: ModelDef, topo: MiCSTopology):
+    return jax.tree.map(
+        lambda spec: NamedSharding(topo.mesh, spec),
+        state_pspecs(model, topo),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_pspecs(model: ModelDef, topo: MiCSTopology, *, micro: bool = True):
+    """PartitionSpecs for a training batch dict."""
+    lead = (None,) if micro else ()
+    base = {
+        "tokens": P(*lead, topo.data_axes, None),
+        "targets": P(*lead, topo.data_axes, None),
+        "mask": P(*lead, topo.data_axes, None),
+    }
+    if model.cfg.family == "vlm":
+        base["vision"] = P(*lead, topo.data_axes, None, None)
+    if model.cfg.family == "encdec":
+        base["audio"] = P(*lead, topo.data_axes, None, None)
+    return base
+
+
+def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
+    """Materialize sharded fp32 state (for runnable-scale models)."""
+    shapes = model.global_flat_shapes()
+    shardings = state_shardings(model, topo)
+
+    def _init(key):
+        import zlib
+
+        flat = {}
+        for pool in model.all_pools():
+            stack, tp, _ = shapes[pool.name]
+            pool_key = jax.random.fold_in(
+                key, zlib.crc32(pool.name.encode()) % (2**31))
+            keys = jax.random.split(pool_key, stack * tp).reshape(stack, tp)
+            rows = jax.vmap(jax.vmap(pool.layout.init_flat))(keys)
+            flat[pool.name] = rows
+        zeros = jax.tree.map(jnp.zeros_like, flat)
+        return {
+            "params": flat,
+            "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, flat),
+            "step": jnp.int32(0),
+        }
+
+    with topo.mesh:
+        return jax.jit(_init, out_shardings=shardings)(jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# the training step
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    model: ModelDef,
+    topo: MiCSTopology,
+    mcfg: MiCSConfig,
+    oc: OptConfig,
+):
+    """Returns a jitted (state, batch) -> (state, metrics) step function."""
+    gather = make_gather_fn(topo, mcfg)
+    ctx = L.Ctx(mode="train", tp=topo.model_size, tp_axis=MODEL_AXIS,
+                scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
+    s = mcfg.micro_steps
+    denom = float(s * topo.data_parallel_size)
+    shard_coord = functools.partial(C._partition_coord, topo)
+
+    def loss_of(flat, micro_batch):
+        return lm.loss_fn(model, flat, gather, ctx, micro_batch)
+
+    def sharded_step(state, batch):
+        params = state["params"]
+
+        def micro(carry, mb):
+            grads_acc, loss_acc, aux_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (grads_acc, loss_acc + metrics["loss"],
+                    aux_acc + metrics["aux"]), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (grads, loss_sum, aux_sum), _ = lax.scan(
+            micro, (zeros, jnp.float32(0.0), jnp.float32(0.0)), batch)
+
+        # ---- hop 2: replication-group all-reduce at the boundary ----------
+        if mcfg.sync_mode == "2hop":
+            def hop2(g):
+                if mcfg.compress_hop2:
+                    g = g.astype(jnp.bfloat16)
+                g = C.hop2_all_reduce(g, topo)
+                return g.astype(jnp.float32)
+            grads = jax.tree.map(hop2, grads)
+        grads = jax.tree.map(lambda g: g / denom, grads)
+
+        # ---- global-norm clip ---------------------------------------------
+        sq_local = sum(
+            jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        sq = lax.psum(sq_local, topo.partition_axes + (MODEL_AXIS,))
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        # ---- AdamW on fp32 shards ------------------------------------------
+        step = state["step"]
+        new_params, new_m, new_v = {}, {}, {}
+        for pool in model.all_pools():
+            name = pool.name
+            g = grads[name]
+            shard_len = g.shape[-1]
+            start = shard_coord() * shard_len
+            dm = pool.layout.decay_mask_for_shard(start, shard_len)
+            pm = pool.layout.padding_mask_for_shard(start, shard_len)
+            p, m, v = adamw_shard_update(
+                state["params"][name], g, state["m"][name], state["v"][name],
+                step, oc, decay_mask=dm, pad_mask=pm)
+            new_params[name], new_m[name], new_v[name] = p, m, v
+
+        metrics = {
+            "loss": lax.pmean(loss_sum / s, topo.data_axes),
+            "aux": lax.pmean(aux_sum / s, topo.data_axes),
+            "grad_norm": gnorm,
+        }
+        new_state = {
+            "params": new_params, "m": new_m, "v": new_v, "step": step + 1,
+        }
+        return new_state, metrics
+
+    st_specs = state_pspecs(model, topo)
+    b_specs = batch_pspecs(model, topo)
+    sharded = shard_map(
+        sharded_step, mesh=topo.mesh,
+        in_specs=(st_specs, b_specs),
+        out_specs=(st_specs, {"loss": P(), "aux": P(), "grad_norm": P()}),
+        check_vma=False,
+    )
+    ns = lambda spec: jax.tree.map(
+        lambda s_: NamedSharding(topo.mesh, s_), spec,
+        is_leaf=lambda x: isinstance(x, P))
+    step_fn = jax.jit(
+        sharded,
+        in_shardings=(ns(st_specs), ns(b_specs)),
+        out_shardings=(ns(st_specs),
+                       ns({"loss": P(), "aux": P(), "grad_norm": P()})),
+        donate_argnums=(0,),
+    )
+    return step_fn
+
+
+def make_batch_shapes(model: ModelDef, global_batch: int, seq: int,
+                      micro_steps: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """Global abstract shapes of one training batch (for the dry-run)."""
+    if global_batch % micro_steps:
+        raise ValueError("global_batch must divide by micro_steps")
+    b = global_batch // micro_steps
+    sds = jax.ShapeDtypeStruct
+    out = {
+        "tokens": sds((micro_steps, b, seq), jnp.int32),
+        "targets": sds((micro_steps, b, seq), jnp.int32),
+        "mask": sds((micro_steps, b, seq), jnp.float32),
+    }
+    cfg = model.cfg
+    if cfg.family == "vlm":
+        out["vision"] = sds(
+            (micro_steps, b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["audio"] = sds(
+            (micro_steps, b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return out

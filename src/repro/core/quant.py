@@ -1,0 +1,53 @@
+"""Int8 block-quantized parameter gathering for serving (§Perf cell B3).
+
+Decode steps re-gather every layer's weights across the partition group each
+step; at batch sizes that fit real serving traffic this is the binding
+roofline term (EXPERIMENTS.md).  Storing serving weights as int8 with
+per-block absmax scales halves the gather wire bytes *and* the HBM read
+traffic vs bf16 (1.03 B/param vs 2), at ~0.2-0.4% relative weight error —
+standard W8 inference practice (cf. LLM.int8()/SmoothQuant), applied here to
+the *collective* rather than the matmul:
+
+    stored:  q  int8 [*, flat_len]       (flat pools, MiCS-sharded as usual)
+             s  f32  [*, flat_len/BLOCK] (absmax scale per 128-elem block)
+    use:     all-gather(q) + all-gather(s)  ->  dequant  ->  unflatten
+
+Training is untouched (fp32 master states); quantization happens once at
+deployment (`quantize_state`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def quantize_flat(flat: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """flat [..., L] (L % BLOCK == 0) -> (int8 [..., L], f32 [..., L/BLOCK])."""
+    *lead, L = flat.shape
+    if L % BLOCK:
+        raise ValueError(f"flat length {L} not a multiple of {BLOCK}")
+    blocks = flat.astype(jnp.float32).reshape(*lead, L // BLOCK, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8).reshape(*lead, L), scale
+
+
+def dequantize_flat(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    *lead, L = q.shape
+    blocks = q.astype(jnp.float32).reshape(*lead, L // BLOCK, BLOCK)
+    out = blocks * scale[..., None]
+    return out.reshape(*lead, L).astype(dtype)
+
+
+def quantize_state(params: dict[str, jax.Array]) -> dict[str, dict]:
+    """Training/serving fp32 flat pools -> {'q':…, 's':…} per pool."""
+    out = {}
+    for name, flat in params.items():
+        q, s = quantize_flat(flat)
+        out[name] = {"q": q, "s": s}
+    return out

@@ -1,0 +1,5 @@
+from repro.kernels.rglru.kernel import rglru
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_ref
+
+__all__ = ["rglru", "rglru_scan", "rglru_ref"]

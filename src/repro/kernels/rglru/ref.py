@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU scan (associative scan, same math as
+models/recurrent.py)."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1; h_{-1} = 0."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    _, h = lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

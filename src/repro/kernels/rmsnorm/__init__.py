@@ -1,0 +1,5 @@
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ops import rmsnorm_nd
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_nd", "rmsnorm_ref"]

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent on the
+production mesh — (16,16) single pod and (2,16,16) two pods — and records
+``memory_analysis()``, ``cost_analysis()`` and the trip-count-weighted
+collective census (roofline inputs) to artifacts/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs N]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_config
+from repro.core.mics import (
+    MiCSConfig, build_train_step, init_state_shapes, make_batch_shapes,
+)
+from repro.launch.mesh import make_mics_topology
+from repro.models.build import active_param_count, build_model, exact_param_count
+from repro.optim.adamw import OptConfig
+from repro.roofline.hlo_stats import analyze
+from repro.runtime.serving import batch_axes_for, build_serve_steps, global_cache_shapes
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+TRAIN_MICRO_STEPS = 4  # paper §5.1.5 setup (s=4 gradient accumulation)
+
+
+def input_specs(arch: str, shape: str, topo, model):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    spec = SHAPES[shape]
+    seq, gb = spec["seq"], spec["global_batch"]
+    if spec["kind"] == "train":
+        return mics_train_inputs(model, seq, gb)
+    if spec["kind"] == "prefill":
+        return serve_prefill_inputs(model, topo, seq, gb)
+    return serve_decode_inputs(model, topo, seq, gb)
+
+
+def mics_train_inputs(model, seq, gb):
+    return make_batch_shapes(model, gb, seq, TRAIN_MICRO_STEPS)
+
+
+def serve_prefill_inputs(model, topo, seq, gb):
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((gb, seq), jnp.int32)}
+    cfg = model.cfg
+    if cfg.family == "vlm":
+        out["vision"] = sds((gb, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["audio"] = sds((gb, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def serve_decode_inputs(model, topo, seq, gb):
+    sds = jax.ShapeDtypeStruct
+    baxes = batch_axes_for(topo, gb)
+    caches, _ = global_cache_shapes(model, topo, gb, seq, baxes)
+    return {
+        "tokens": sds((gb, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "caches": caches,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
+             out_dir: pathlib.Path = ART, tag: str = "",
+             partition_size: int | None = None, zero3: bool = False,
+             tp: int | None = None, serve_footprint: bool = False) -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    t0 = time.time()
+    n_params = exact_param_count(cfg)
+    topo = make_mics_topology(
+        multi_pod=multi_pod, param_count=n_params,
+        partition_size=partition_size, zero3=zero3, tp=tp,
+        state_bytes_per_param=2 if serve_footprint else None)
+    model = build_model(cfg, tp=topo.model_size)
+
+    record = {
+        "arch": cfg.name, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": spec["kind"], "seq": spec["seq"],
+        "global_batch": spec["global_batch"],
+        "zero3": zero3,
+        "tp": topo.model_size,
+        "partition_axes": list(topo.partition_axes),
+        "partition_size": topo.partition_size,
+        "replication_degree": topo.replication_degree,
+        "params": n_params,
+        "active_params": active_param_count(cfg),
+        "micro_steps": TRAIN_MICRO_STEPS if spec["kind"] == "train" else 1,
+        "mics": dataclasses.asdict(mcfg) | {"gather_dtype": "bf16"},
+        "tag": tag,
+    }
+
+    serve_dtype = jnp.bfloat16 if serve_footprint else jnp.float32
+    if mcfg.quant_gather:
+        from repro.core.quant import BLOCK
+
+        serve_params = {
+            name: {
+                "q": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct(
+                    (*shape[:-1], shape[-1] // BLOCK), jnp.float32),
+            }
+            for name, shape in model.global_flat_shapes().items()
+        }
+        record["serve_param_dtype"] = "int8+blockscale"
+    else:
+        serve_params = {
+            name: jax.ShapeDtypeStruct(shape, serve_dtype)
+            for name, shape in model.global_flat_shapes().items()
+        }
+        record["serve_param_dtype"] = str(serve_dtype.__name__)
+
+    if spec["kind"] == "train":
+        step = build_train_step(model, topo, mcfg,
+                                OptConfig(total_steps=1000))
+        state = init_state_shapes(model)
+        batch = mics_train_inputs(model, spec["seq"], spec["global_batch"])
+        lowered = step.lower(state, batch)
+    elif spec["kind"] == "prefill":
+        prefill_fn, _ = build_serve_steps(
+            model, topo, mcfg, cache_len=spec["seq"],
+            batch_axes=batch_axes_for(topo, spec["global_batch"]))
+        lowered = prefill_fn.lower(
+            serve_params,
+            serve_prefill_inputs(model, topo, spec["seq"], spec["global_batch"]))
+    else:  # decode
+        baxes = batch_axes_for(topo, spec["global_batch"])
+        _, decode_fn = build_serve_steps(
+            model, topo, mcfg, cache_len=spec["seq"], batch_axes=baxes)
+        inp = serve_decode_inputs(model, topo, spec["seq"], spec["global_batch"])
+        lowered = decode_fn.lower(
+            serve_params, inp["caches"], inp["tokens"], inp["pos"])
+
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        record["memory_analysis"] = {
+            k: getattr(ma, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    ca = compiled.cost_analysis()
+    # NB: XLA's cost analysis visits while bodies ONCE (no trip weighting);
+    # kept raw for reference.  The roofline uses the trip-weighted stats.
+    record["cost_analysis_raw"] = {
+        k: ca[k] for k in ("flops", "bytes accessed", "transcendentals")
+        if k in ca
+    }
+
+    mesh_shape = dict(zip(topo.mesh.axis_names,
+                          topo.mesh.devices.shape))
+    record["stats"] = analyze(compiled.as_text(), mesh_shape)
+    record["total_s"] = round(time.time() - t0, 1)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stem = f"{cfg.name}__{shape}__{record['mesh']}" + (f"__{tag}" if tag else "")
+    (out_dir / f"{stem}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main():
+    global TRAIN_MICRO_STEPS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--hierarchical", type=int, default=1)
+    ap.add_argument("--gather-order", default="inner_first")
+    ap.add_argument("--sync-mode", default="2hop")
+    ap.add_argument("--partition-size", type=int, default=0)
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--bf16-scores", action="store_true")
+    ap.add_argument("--quant-gather", action="store_true",
+                    help="int8 block-quantized serving-weight gathers")
+    ap.add_argument("--mlstm-chunk", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=0)
+    ap.add_argument("--serve-footprint", action="store_true",
+                    help="pick p from the inference memory footprint")
+    ap.add_argument("--micro-steps", type=int, default=TRAIN_MICRO_STEPS)
+    args = ap.parse_args()
+    TRAIN_MICRO_STEPS = args.micro_steps
+
+    mcfg = MiCSConfig(
+        micro_steps=TRAIN_MICRO_STEPS,
+        hierarchical=bool(args.hierarchical),
+        gather_order=args.gather_order,
+        sync_mode=args.sync_mode,
+        scores_bf16=args.bf16_scores,
+        mlstm_chunk=args.mlstm_chunk,
+        quant_gather=args.quant_gather,
+    )
+
+    todo = []
+    if args.all:
+        for cfg, shape, spec, skip in cells():
+            todo.append((cfg.name, shape))
+    else:
+        todo.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in todo:
+        for multi in meshes:
+            label = f"{arch} x {shape} x {'multi' if multi else 'single'}"
+            try:
+                rec = run_cell(arch, shape, multi, mcfg, tag=args.tag,
+                               partition_size=args.partition_size or None,
+                               zero3=args.zero3, tp=args.tp or None,
+                               serve_footprint=args.serve_footprint)
+                print(f"OK   {label}: compile={rec['compile_s']}s "
+                      f"flops={rec['stats']['dot_flops']:.3e} "
+                      f"wire={rec['stats']['total_wire_bytes']:.3e}B",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"FAIL {label}: {type(e).__name__}: {str(e)[:400]}",
+                      flush=True)
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

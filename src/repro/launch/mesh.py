@@ -1,0 +1,56 @@
+"""Production mesh factories (assignment interface).
+
+``make_production_mesh`` is the assignment-specified entry point; MiCS
+refactors its data axis into (repl, shard) sub-axes via
+``repro.core.topology.make_mics_mesh`` (same devices, same order).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.topology import (  # re-exported for launch scripts
+    MiCSTopology,
+    choose_partition_size,
+    make_mics_mesh,
+)
+from repro.core.topology import make_production_mesh as _make_production_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) ('data','model') per pod; (2, 16, 16) ('pod','data','model')
+    for the two-pod production configuration."""
+    return _make_production_mesh(multi_pod=multi_pod)
+
+
+def make_mics_topology(
+    *, multi_pod: bool = False, partition_size: int | None = None,
+    param_count: int | None = None, zero3: bool = False,
+    tp: int | None = None, state_bytes_per_param: int | None = None,
+):
+    """Build the MiCS topology over the production mesh.
+
+    partition_size defaults to the paper's heuristic (§5.1.1): the smallest
+    group whose aggregate memory holds one model-state replica
+    (state_bytes_per_param=2 models inference-only bf16 weights).
+    zero3=True returns the ZeRO-3 baseline (partition = every data axis).
+    tp < 16 factors the model axis into (dp2, tp), donating the remainder to
+    data parallelism.
+    """
+    base = make_production_mesh(multi_pod=multi_pod)
+    if partition_size is None:
+        if param_count is None:
+            raise ValueError("need partition_size or param_count")
+        kw = {"model_axis": tp or 16}
+        if state_bytes_per_param:
+            kw["state_bytes_per_param"] = state_bytes_per_param
+        partition_size = choose_partition_size(param_count, **kw)
+    mesh = make_mics_mesh(base, partition_size, tp=tp)
+    if zero3:
+        part = ("pod", "repl", "shard") if multi_pod else ("repl", "shard")
+        part = tuple(a for a in part if mesh.shape[a] > 1) or ("shard",)
+        repl = tuple(a for a in ("dp2",) if mesh.shape[a] > 1)
+    else:
+        part = ("shard",)
+        repl = tuple(a for a in ("pod", "repl", "dp2") if mesh.shape[a] > 1)
+    return MiCSTopology(mesh, partition_axes=part, replication_axes=repl)

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+Examples:
+  # runnable on this host (reduced config, 1 device):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50
+
+  # production lowering check for the full config (no execution):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+      --shape train_4k --mesh multi
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro.configs import get_config, smoke_variant
+from repro.core.mics import MiCSConfig
+from repro.core.topology import MiCSTopology, make_host_mesh
+from repro.data.pipeline import DataConfig
+from repro.models.build import build_model
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import LoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro-steps", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--no-hierarchical", action="store_true")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+
+    topo = MiCSTopology(make_host_mesh(1, 1, 1, 1))
+    model = build_model(cfg, tp=topo.model_size)
+    mcfg = MiCSConfig(micro_steps=args.micro_steps,
+                      hierarchical=not args.no_hierarchical)
+    oc = OptConfig(lr_max=args.lr, total_steps=args.steps,
+                   warmup_steps=max(args.steps // 20, 1))
+    dc = DataConfig(vocab=cfg.vocab, seq=args.seq,
+                    global_batch=args.global_batch,
+                    micro_steps=args.micro_steps)
+    lc = LoopConfig(total_steps=args.steps,
+                    checkpoint_every=args.checkpoint_every,
+                    checkpoint_dir=args.checkpoint_dir)
+    stats = train(model, topo, mcfg, oc, dc, lc)
+    print(f"final loss {stats.losses[-1]:.4f} over {len(stats.losses)} steps; "
+          f"restarts={stats.restarts}")
+
+
+if __name__ == "__main__":
+    main()

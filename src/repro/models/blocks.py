@@ -1,0 +1,459 @@
+"""Transformer layer types: dense (llama/qwen/granite/yi), cross-attention
+(llama-3.2-vision), encoder/decoder (whisper), and MoE (deepseek, dbrx).
+
+Each layer type provides
+  * ``*_layout(cfg, tp, b)``   — appends its segments to a LayoutBuilder
+  * ``*_apply(t, x, ctx, ...)``— pure function over unflattened tensors
+  * cache constructors for decode.
+
+Weights are stored TP-local (see models/dims.py for the KV-gather scheme);
+activations are full ``d_model`` per rank, with a ``psum('model')`` after the
+attention output and MLP down projections (Megatron TP).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.flat_param import LayoutBuilder
+from repro.models import layers as L
+from repro.models.dims import AttnDims, attn_dims, shard_dim
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block
+# ---------------------------------------------------------------------------
+
+def attn_layout(
+    cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = "attn.",
+    *, bias: bool = False, kv_input_dim: int | None = None,
+):
+    ad = attn_dims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, tp)
+    d = cfg.d_model
+    kvd = kv_input_dim or d
+    std = 1.0 / math.sqrt(d)
+    out_std = 1.0 / math.sqrt(ad.hq_pad * ad.head_dim) / math.sqrt(2 * cfg.n_layers)
+    b.add(prefix + "wq", (d, ad.q_cols_local), std=std)
+    b.add(prefix + "wk", (kvd, ad.kv_cols_stored), std=std,
+          model_gather=ad.kv_gather, model_gather_dim=1)
+    b.add(prefix + "wv", (kvd, ad.kv_cols_stored), std=std,
+          model_gather=ad.kv_gather, model_gather_dim=1)
+    b.add(prefix + "wo", (ad.q_cols_local, d), std=out_std)
+    if bias:
+        b.add(prefix + "bq", (ad.q_cols_local,), init="zeros", decay=False)
+        b.add(prefix + "bk", (ad.kv_cols_stored,), init="zeros", decay=False,
+              model_gather=ad.kv_gather, model_gather_dim=0)
+        b.add(prefix + "bv", (ad.kv_cols_stored,), init="zeros", decay=False,
+              model_gather=ad.kv_gather, model_gather_dim=0)
+        b.add(prefix + "bo", (shard_dim(d, tp),), init="zeros", decay=False,
+              model_gather=tp, model_gather_dim=0)
+    return ad
+
+
+def attn_qkv(t, x, kv_x, ad: AttnDims, ctx: L.Ctx, prefix: str, *, bias: bool):
+    """Project to q [b,t,hkv_local,g,dh], k/v [b,t,hkv_local,dh]."""
+    bsz, tq, _ = x.shape
+    tk = kv_x.shape[1]
+    q = x @ t[prefix + "wq"]
+    k = kv_x @ t[prefix + "wk"]
+    v = kv_x @ t[prefix + "wv"]
+    if bias:
+        q = q + t[prefix + "bq"].astype(q.dtype)
+        k = k + t[prefix + "bk"].astype(k.dtype)
+        v = v + t[prefix + "bv"].astype(v.dtype)
+    q = q.reshape(bsz, tq, ad.hkv_local, ad.q_per_kv_local, ad.head_dim)
+    k = k.reshape(bsz, tk, ad.hkv_local, ad.head_dim)
+    v = v.reshape(bsz, tk, ad.hkv_local, ad.head_dim)
+    return q, k, v
+
+
+def attn_out(t, attn: jax.Array, ad: AttnDims, ctx: L.Ctx, prefix: str, *, bias: bool):
+    """attn [b,t,hkv_local,g,dh] -> [b,t,d] (full, post-psum)."""
+    bsz, tq = attn.shape[:2]
+    hmask = L.local_head_mask(ad.hq, ad.hq_pad, ad.hq_local, ctx)
+    attn = attn * hmask.reshape(1, 1, ad.hkv_local, ad.q_per_kv_local, 1).astype(attn.dtype)
+    out = attn.reshape(bsz, tq, ad.q_cols_local) @ t[prefix + "wo"]
+    out = L.tp_psum(out, ctx)
+    if bias:
+        out = out + t[prefix + "bo"].astype(out.dtype)
+    return out
+
+
+def self_attention(
+    t, x, ctx: L.Ctx, ad: AttnDims, cfg: ArchConfig, *,
+    prefix: str = "attn.", causal: bool = True, window: int = 0,
+    use_rope: bool = True, bias: bool = False, cache=None,
+):
+    """Self attention in train/prefill/decode modes.
+
+    cache: None (train) or dict(k, v[, pos]) for prefill-fill / decode.
+    Returns (out, new_cache).
+    """
+    bsz, tq, _ = x.shape
+    q, k, v = attn_qkv(t, x, x, ad, ctx, prefix, bias=bias)
+
+    if ctx.mode == "decode":
+        pos = ctx.pos
+        positions = jnp.broadcast_to(pos, (bsz, tq))
+        if use_rope:
+            q = _rope5(q, positions, cfg.rope_theta)
+            k = L.rotary(k, positions, cfg.rope_theta)
+        cap = cache["k"].shape[1]
+        slot = pos % cap if window else pos
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        valid = jnp.minimum(pos + 1, cap)
+        out = L.attention(
+            q, k_cache, v_cache, causal=False, window=0,
+            kv_valid_len=valid, scores_dtype=ctx.scores_dtype,
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+        return attn_out(t, out, ad, ctx, prefix, bias=bias), new_cache
+
+    positions = jnp.broadcast_to(jnp.arange(tq), (bsz, tq))
+    if use_rope:
+        q = _rope5(q, positions, cfg.rope_theta)
+        k = L.rotary(k, positions, cfg.rope_theta)
+    out = L.attention(q, k, v, causal=causal, window=window,
+                      scores_dtype=ctx.scores_dtype)
+    new_cache = None
+    if ctx.mode == "prefill":
+        cap = ctx.cache_len if not window else min(window, ctx.cache_len)
+        if tq >= cap:
+            # slot of absolute position a is a % cap (matches decode writes)
+            k_keep = jnp.roll(k[:, tq - cap:], tq % cap, axis=1)
+            v_keep = jnp.roll(v[:, tq - cap:], tq % cap, axis=1)
+        else:
+            pad = cap - tq
+            k_keep = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        new_cache = {"k": k_keep.astype(ctx.compute_dtype),
+                     "v": v_keep.astype(ctx.compute_dtype)}
+    return attn_out(t, out, ad, ctx, prefix, bias=bias), new_cache
+
+
+def cross_attention(
+    t, x, kv_src, ctx: L.Ctx, ad: AttnDims, cfg: ArchConfig, *,
+    prefix: str = "xattn.", bias: bool = False, cache=None,
+):
+    """Cross attention against a precomputed source (vision / encoder).
+
+    During decode the projected source KV comes from the cache (computed at
+    prefill) to keep the per-token cost O(1) in projections.
+    """
+    bsz, tq, _ = x.shape
+    if ctx.mode == "decode" and cache is not None:
+        q = x @ t[prefix + "wq"]
+        if bias:
+            q = q + t[prefix + "bq"].astype(q.dtype)
+        q = q.reshape(bsz, tq, ad.hkv_local, ad.q_per_kv_local, ad.head_dim)
+        k, v = cache["k"], cache["v"]
+        out = L.attention(q, k, v, causal=False, scores_dtype=ctx.scores_dtype)
+        return attn_out(t, out, ad, ctx, prefix, bias=bias), cache
+    q, k, v = attn_qkv(t, x, kv_src, ad, ctx, prefix, bias=bias)
+    out = L.attention(q, k, v, causal=False, scores_dtype=ctx.scores_dtype)
+    new_cache = None
+    if ctx.mode == "prefill":
+        new_cache = {"k": k.astype(ctx.compute_dtype), "v": v.astype(ctx.compute_dtype)}
+    return attn_out(t, out, ad, ctx, prefix, bias=bias), new_cache
+
+
+def _rope5(q: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary over [b, t, hkv, g, dh] (fold grouped head dims)."""
+    b, tq, hkv, g, dh = q.shape
+    out = L.rotary(q.reshape(b, tq, hkv * g, dh), positions, theta)
+    return out.reshape(b, tq, hkv, g, dh)
+
+
+def make_kv_cache(cfg: ArchConfig, tp: int, batch: int, cache_len: int, *, window: int = 0):
+    ad = attn_dims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, tp)
+    cap = min(window, cache_len) if window else cache_len
+    shape = (batch, cap, ad.hkv_local, ad.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def make_cross_cache(cfg: ArchConfig, tp: int, batch: int, src_len: int):
+    ad = attn_dims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, tp)
+    shape = (batch, src_len, ad.hkv_local, ad.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# norms + MLP sub-blocks
+# ---------------------------------------------------------------------------
+
+def norm_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, name: str):
+    d_local = shard_dim(cfg.d_model, tp)
+    b.add(name + ".scale", (d_local,), init="zeros", decay=False,
+          model_gather=tp, model_gather_dim=0)
+    if cfg.norm == "ln":
+        b.add(name + ".bias", (d_local,), init="zeros", decay=False,
+              model_gather=tp, model_gather_dim=0)
+
+
+def apply_norm(cfg: ArchConfig, t, x, name: str):
+    if cfg.norm == "ln":
+        return L.layer_norm(x, t[name + ".scale"], t[name + ".bias"])
+    return L.rms_norm(x, t[name + ".scale"])
+
+
+def mlp_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = "mlp.",
+               d_ff: int | None = None):
+    d = cfg.d_model
+    f_local = shard_dim(d_ff or cfg.d_ff, tp, "d_ff")
+    std = 1.0 / math.sqrt(d)
+    dstd = 1.0 / math.sqrt((d_ff or cfg.d_ff)) / math.sqrt(2 * cfg.n_layers)
+    if cfg.mlp in ("swiglu", "geglu"):
+        b.add(prefix + "wg", (d, f_local), std=std)
+        b.add(prefix + "wu", (d, f_local), std=std)
+        b.add(prefix + "wd", (f_local, d), std=dstd)
+    else:  # gelu (whisper)
+        b.add(prefix + "w1", (d, f_local), std=std)
+        b.add(prefix + "b1", (f_local,), init="zeros", decay=False)
+        b.add(prefix + "wd", (f_local, d), std=dstd)
+        b.add(prefix + "b2", (shard_dim(d, tp),), init="zeros", decay=False,
+              model_gather=tp, model_gather_dim=0)
+
+
+def mlp_apply(cfg: ArchConfig, t, x, ctx: L.Ctx, prefix: str = "mlp."):
+    if cfg.mlp == "swiglu":
+        out = L.mlp_swiglu(x, t[prefix + "wg"], t[prefix + "wu"], t[prefix + "wd"])
+    elif cfg.mlp == "geglu":
+        out = L.mlp_geglu(x, t[prefix + "wg"], t[prefix + "wu"], t[prefix + "wd"])
+    else:
+        out = L.mlp_gelu(x, t[prefix + "w1"], t[prefix + "b1"], t[prefix + "wd"])
+    out = L.tp_psum(out, ctx)
+    if cfg.mlp == "gelu":
+        out = out + t[prefix + "b2"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense decoder layer (llama / qwen / granite / yi family)
+# ---------------------------------------------------------------------------
+
+def dense_layer_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    norm_layout(cfg, tp, pb, "ln1")
+    attn_layout(cfg, tp, pb, "attn.", bias=cfg.qkv_bias)
+    norm_layout(cfg, tp, pb, "ln2")
+    mlp_layout(cfg, tp, pb, "mlp.")
+    b.extend(pb)
+
+
+def dense_layer_apply(cfg: ArchConfig, ad: AttnDims, t, x, ctx: L.Ctx,
+                      cache=None, prefix: str = "", *, window: int = 0,
+                      causal: bool = True):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    h = apply_norm(cfg, tt, x, "ln1")
+    a, new_cache = self_attention(
+        tt, h, ctx, ad, cfg, prefix="attn.", causal=causal, window=window,
+        use_rope=cfg.use_rope, bias=cfg.qkv_bias,
+        cache=cache,
+    )
+    x = x + a
+    h = apply_norm(cfg, tt, x, "ln2")
+    x = x + mlp_apply(cfg, tt, h, ctx, "mlp.")
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# gated cross-attention layer (llama-3.2-vision)
+# ---------------------------------------------------------------------------
+
+def cross_layer_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    norm_layout(cfg, tp, pb, "ln1")
+    attn_layout(cfg, tp, pb, "xattn.")
+    pb.add("gate_attn", (1,), init="zeros", decay=False)
+    norm_layout(cfg, tp, pb, "ln2")
+    mlp_layout(cfg, tp, pb, "mlp.")
+    pb.add("gate_mlp", (1,), init="zeros", decay=False)
+    b.extend(pb)
+
+
+def cross_layer_apply(cfg: ArchConfig, ad: AttnDims, t, x, ctx: L.Ctx,
+                      cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    h = apply_norm(cfg, tt, x, "ln1")
+    a, new_cache = cross_attention(
+        tt, h, ctx.vision if ctx.vision is not None else ctx.enc_out,
+        ctx, ad, cfg, prefix="xattn.", cache=cache)
+    x = x + jnp.tanh(tt["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    h = apply_norm(cfg, tt, x, "ln2")
+    m = mlp_apply(cfg, tt, h, ctx, "mlp.")
+    x = x + jnp.tanh(tt["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder / decoder layers
+# ---------------------------------------------------------------------------
+
+def encdec_dec_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    norm_layout(cfg, tp, pb, "ln1")
+    attn_layout(cfg, tp, pb, "attn.", bias=True)
+    norm_layout(cfg, tp, pb, "lnx")
+    attn_layout(cfg, tp, pb, "xattn.", bias=True)
+    norm_layout(cfg, tp, pb, "ln2")
+    mlp_layout(cfg, tp, pb, "mlp.")
+    b.extend(pb)
+
+
+def encdec_dec_apply(cfg: ArchConfig, ad: AttnDims, t, x, ctx: L.Ctx,
+                     cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    self_cache = cache.get("self") if cache else None
+    cross_cache = cache.get("cross") if cache else None
+    h = apply_norm(cfg, tt, x, "ln1")
+    a, nc_self = self_attention(
+        tt, h, ctx, ad, cfg, prefix="attn.", causal=True,
+        use_rope=False, bias=True, cache=self_cache)
+    x = x + a
+    h = apply_norm(cfg, tt, x, "lnx")
+    a, nc_cross = cross_attention(
+        tt, h, ctx.enc_out, ctx, ad, cfg, prefix="xattn.", bias=True,
+        cache=cross_cache)
+    x = x + a
+    h = apply_norm(cfg, tt, x, "ln2")
+    x = x + mlp_apply(cfg, tt, h, ctx, "mlp.")
+    new_cache = None
+    if nc_self is not None or nc_cross is not None:
+        new_cache = {"self": nc_self, "cross": nc_cross}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE layer (deepseek-moe / dbrx)
+# ---------------------------------------------------------------------------
+
+def moe_layer_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    norm_layout(cfg, tp, pb, "ln1")
+    attn_layout(cfg, tp, pb, "attn.", bias=cfg.qkv_bias)
+    norm_layout(cfg, tp, pb, "ln2")
+    d, f = cfg.d_model, cfg.d_ff
+    e_local = shard_dim(cfg.n_experts, tp, "n_experts")
+    std = 1.0 / math.sqrt(d)
+    dstd = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    pb.add("router.w", (d, e_local), std=std, model_gather=tp, model_gather_dim=1)
+    pb.add("moe.wg", (e_local, d, f), std=std)
+    pb.add("moe.wu", (e_local, d, f), std=std)
+    pb.add("moe.wd", (e_local, f, d), std=dstd)
+    if cfg.n_shared_experts:
+        mlp_layout(cfg, tp, pb, "shared.", d_ff=cfg.n_shared_experts * f)
+    b.extend(pb)
+
+
+def _moe_dispatch_tokens(x2d, t, cfg: ArchConfig, ctx: L.Ctx):
+    """GShard-style capacity dispatch with expert parallelism over 'model'.
+
+    x2d: [n, d] tokens.  Returns (out [n, d], aux_loss scalar).
+    """
+    n, d = x2d.shape
+    e = cfg.n_experts
+    k = cfg.top_k
+    cap = int(math.ceil(n * k / e * cfg.capacity_factor))
+    cap = max(4, ((cap + 3) // 4) * 4)
+
+    logits = (x2d @ t["router.w"]).astype(jnp.float32)       # [n, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, k)                # [n, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = gate_idx.reshape(-1)                            # [n*k], token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # [n*k, E]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(n * k), flat_e]
+    keep = (pos_in_e < cap).astype(x2d.dtype)                # capacity drop
+
+    # scatter tokens into [E, cap, d]
+    tok = jnp.repeat(x2d, k, axis=0) * keep[:, None]
+    buf = jnp.zeros((e, cap, d), x2d.dtype)
+    buf = buf.at[flat_e, jnp.clip(pos_in_e, 0, cap - 1)].add(tok)
+
+    # expert parallelism: ship expert slabs to their owner ranks
+    if ctx.tp > 1:
+        buf = lax.all_to_all(buf, ctx.tp_axis, split_axis=0, concat_axis=1, tiled=True)
+    # buf: [E_local, tp*cap, d]
+    h = jnp.einsum("ecd,edf->ecf", buf, t["moe.wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, t["moe.wu"])
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("ecf,efd->ecd", h, t["moe.wd"])
+    if ctx.tp > 1:
+        out = lax.all_to_all(out, ctx.tp_axis, split_axis=1, concat_axis=0, tiled=True)
+
+    # combine: gather each assignment's expert output, weight by gate
+    picked = out[flat_e, jnp.clip(pos_in_e, 0, cap - 1)]     # [n*k, d]
+    w = (gate_vals.reshape(-1) * keep).astype(picked.dtype)
+    y = jnp.sum((picked * w[:, None]).reshape(n, k, d), axis=1)
+
+    # switch-style load-balance loss
+    me = jnp.mean(probs, axis=0)                             # [E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_ffn(t, x, cfg: ArchConfig, ctx: L.Ctx):
+    """Token-parallel MoE: activations are replicated across the model axis,
+    so each rank routes only its 1/tp slice of the tokens (otherwise every
+    rank would redundantly dispatch identical copies — 16x wasted expert
+    FLOPs).  Outputs are re-assembled with an all-gather whose adjoint is a
+    reduce-scatter, keeping gradients exact.  Tiny token counts (decode)
+    fall back to the replicated path."""
+    b, s, d = x.shape
+    n = b * s
+    tp = ctx.tp
+    x2d = x.reshape(n, d)
+
+    shard_tokens = tp > 1 and n % tp == 0 and n >= tp
+    if shard_tokens:
+        n_local = n // tp
+        start = ctx.tp_index() * n_local
+        x2d = lax.dynamic_slice_in_dim(x2d, start, n_local, axis=0)
+        n = n_local
+
+    chunk = n
+    for cand in (4096, 2048, 1024):
+        if n > cand and n % cand == 0:
+            chunk = cand
+            break
+    x2 = x2d.reshape(n // chunk, chunk, d)
+
+    def body(aux, xc):
+        y, a = _moe_dispatch_tokens(xc, t, cfg, ctx)
+        return aux + a, y
+
+    aux, y = lax.scan(body, jnp.float32(0.0), x2)
+    aux = aux * (chunk / n)
+    y = y.reshape(n, d)
+    if shard_tokens:
+        y = lax.all_gather(y, ctx.tp_axis, axis=0, tiled=True)
+        aux = lax.pmean(aux, ctx.tp_axis)
+    out = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(cfg, t, x, ctx, "shared.")
+    return out, aux * (chunk / n)
+
+
+def moe_layer_apply(cfg: ArchConfig, ad: AttnDims, t, x, ctx: L.Ctx,
+                    cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    h = apply_norm(cfg, tt, x, "ln1")
+    a, new_cache = self_attention(
+        tt, h, ctx, ad, cfg, prefix="attn.", causal=True,
+        use_rope=cfg.use_rope, bias=cfg.qkv_bias, cache=cache,
+    )
+    x = x + a
+    h = apply_norm(cfg, tt, x, "ln2")
+    y, aux = moe_ffn(tt, h, cfg, ctx)
+    x = x + y
+    return (x, aux), new_cache

@@ -1,0 +1,283 @@
+"""Numeric building blocks shared by every architecture.
+
+Everything here is a pure function over explicit tensors; tensor-parallel
+collectives use named mesh axes (the functions are always called inside
+``shard_map`` — on a single device the axes simply have size 1).
+
+The chunked online-softmax attention is the pure-jnp oracle for the Pallas
+flash-attention kernel in ``repro.kernels.flash_attention``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# execution context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Static + dynamic context threaded through block applications."""
+
+    mode: str = "train"            # train | prefill | decode
+    tp_axis: str = "model"
+    tp: int = 1
+    pos: Any = None                # decode: current position scalar (traced)
+    cache_len: int = 0             # decode: static KV-cache capacity
+    window: int = 0                # local-attention window override
+    vision: Any = None             # [b, n_img, d] stub patch embeddings
+    enc_out: Any = None            # [b, n_frames, d] encoder output
+    compute_dtype: Any = jnp.bfloat16
+    scores_bf16: bool = False      # bf16 attention scores (§Perf)
+    mlstm_chunk: int = 0           # chunkwise-parallel mLSTM (§Perf; 0=scan)
+
+    @property
+    def scores_dtype(self):
+        return jnp.bfloat16 if self.scores_bf16 else jnp.float32
+
+    def tp_index(self):
+        if self.tp == 1:
+            return jnp.int32(0)
+        return lax.axis_index(self.tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [b, t, h, dh]; positions: [b, t] absolute token positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [b, t, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """q [b, tq, hkv, g, dh] x k [b, tk, hkv, dh] -> [b, hkv, g, tq, tk]."""
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=dtype
+    )
+
+
+def _masked_softmax(s: jax.Array, bias: jax.Array) -> jax.Array:
+    """Numerically-stable softmax in the score dtype; the row-max and the
+    normalizer are kept in fp32 (flash-kernel-style) so bf16 scores only
+    halve the HBM traffic of the [tq, tk] tensors, not the statistics."""
+    s = s + bias[None, None, None].astype(s.dtype)
+    m = lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+    return p / jnp.maximum(denom, 1e-30).astype(p.dtype)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p [b, hkv, g, tq, tk] x v [b, tk, hkv, dh] -> [b, tq, hkv, g, dh]."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, *, causal: bool, window: int,
+    kv_valid_len: jax.Array | None = None,
+) -> jax.Array:
+    """[tq, tk] additive mask (0 allowed, NEG_INF blocked)."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    diff = q_pos[:, None] - k_pos[None, :]
+    if causal:
+        m = jnp.where(diff < 0, NEG_INF, m)
+    if window:
+        m = jnp.where(diff >= window, NEG_INF, m)
+    if kv_valid_len is not None:
+        m = jnp.where(k_pos[None, :] >= kv_valid_len, NEG_INF, m)
+    return m
+
+
+def attention(
+    q: jax.Array,                 # [b, tq, hkv, g, dh]
+    k: jax.Array,                 # [b, tk, hkv, dh]
+    v: jax.Array,                 # [b, tk, hkv, dh]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: Any = 0,            # absolute position of q[0]
+    k_offset: Any = 0,
+    kv_valid_len: Any = None,     # decode: number of valid cache entries
+    chunk_q: int = 512,
+    scores_dtype=jnp.float32,
+) -> jax.Array:
+    """Scaled-dot-product GQA attention, chunked over queries.
+
+    Direct path for short query lengths; otherwise a `lax.scan` over query
+    chunks (scores are [chunk_q, tk] — memory-bounded for 32k prefill).
+    Local-window attention slices the KV to a static-length window per query
+    chunk, so HLO FLOPs reflect the sub-quadratic cost.
+    scores_dtype=bf16 halves the HBM traffic of the score/probability
+    tensors (fp32 statistics retained) — beyond-paper optimization, §Perf.
+    """
+    b, tq, hkv, g, dh = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    def direct(qc, q_pos):
+        bias = _mask_bias(
+            q_pos, k_offset + jnp.arange(tk), causal=causal, window=window,
+            kv_valid_len=kv_valid_len,
+        )
+        p = _masked_softmax(_gqa_scores(qc, k, scores_dtype), bias)
+        return _gqa_out(p, v)
+
+    if tq <= max(chunk_q, 1) or tq % chunk_q != 0:
+        return direct(qs, q_offset + jnp.arange(tq))
+
+    nq = tq // chunk_q
+
+    if window and window + chunk_q < tk:
+        # local attention: static-length KV slab per query chunk
+        slab = window + chunk_q
+
+        def body(_, i):
+            q_lo = i * chunk_q
+            qc = lax.dynamic_slice_in_dim(qs, q_lo, chunk_q, axis=1)
+            k_lo = jnp.clip(q_lo + chunk_q - slab, 0, tk - slab)
+            kc = lax.dynamic_slice_in_dim(k, k_lo, slab, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, k_lo, slab, axis=1)
+            bias = _mask_bias(
+                q_offset + q_lo + jnp.arange(chunk_q),
+                k_offset + k_lo + jnp.arange(slab),
+                causal=causal, window=window, kv_valid_len=kv_valid_len,
+            )
+            p = _masked_softmax(_gqa_scores(qc, kc, scores_dtype), bias)
+            return None, _gqa_out(p, vc)
+
+        _, chunks = lax.scan(body, None, jnp.arange(nq))
+    else:
+
+        def body(_, i):
+            q_lo = i * chunk_q
+            qc = lax.dynamic_slice_in_dim(qs, q_lo, chunk_q, axis=1)
+            out = direct(qc, q_offset + q_lo + jnp.arange(chunk_q))
+            return None, out
+
+        _, chunks = lax.scan(body, None, jnp.arange(nq))
+
+    # chunks: [nq, b, chunk_q, hkv, g, dh] -> [b, tq, hkv, g, dh]
+    return jnp.moveaxis(chunks, 0, 1).reshape(b, tq, hkv, g, dh)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (TP-sharded hidden dim; caller psums after the down projection)
+# ---------------------------------------------------------------------------
+
+def mlp_swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def mlp_geglu(x, wg, wu, wd):
+    h = jax.nn.gelu(x @ wg, approximate=True) * (x @ wu)
+    return h @ wd
+
+
+def mlp_gelu(x, w1, b1, w2):
+    h = jax.nn.gelu(x @ w1 + b1.astype(x.dtype), approximate=True)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# embeddings + vocab-parallel loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table_local: jax.Array, ids: jax.Array, ctx: Ctx) -> jax.Array:
+    """table_local: [vocab, d/tp] (d sharded over model) -> [b, t, d] full."""
+    emb_local = jnp.take(table_local, ids, axis=0)
+    if ctx.tp == 1:
+        return emb_local
+    return lax.all_gather(emb_local, ctx.tp_axis, axis=-1, tiled=True)
+
+
+def tp_cross_entropy(
+    logits_local: jax.Array,   # [b, t, V/tp] (vocab sharded over model)
+    targets: jax.Array,        # [b, t] int32 global vocab ids
+    mask: jax.Array,           # [b, t] 1.0 valid token
+    *,
+    vocab_real: int,
+    vocab_padded: int,
+    ctx: Ctx,
+) -> jax.Array:
+    """Vocab-parallel softmax cross-entropy (Megatron-style), fp32."""
+    vl = logits_local.shape[-1]
+    lg = logits_local.astype(jnp.float32)
+    start = ctx.tp_index() * vl
+    col = start + jnp.arange(vl)
+    lg = jnp.where(col[None, None, :] < vocab_real, lg, NEG_INF)
+
+    # the stabilizer max carries no gradient (softmax is shift-invariant)
+    m_local = lax.stop_gradient(jnp.max(lg, axis=-1))
+    m = lax.pmax(m_local, ctx.tp_axis) if ctx.tp > 1 else m_local
+    e = jnp.exp(lg - m[..., None])
+    denom_local = jnp.sum(e, axis=-1)
+    denom = lax.psum(denom_local, ctx.tp_axis) if ctx.tp > 1 else denom_local
+
+    tgt_local = targets - start
+    in_range = (tgt_local >= 0) & (tgt_local < vl)
+    tgt_logit_local = jnp.take_along_axis(
+        lg, jnp.clip(tgt_local, 0, vl - 1)[..., None], axis=-1
+    )[..., 0]
+    tgt_logit_local = jnp.where(in_range, tgt_logit_local, 0.0)
+    tgt_logit = lax.psum(tgt_logit_local, ctx.tp_axis) if ctx.tp > 1 else tgt_logit_local
+
+    nll = jnp.log(denom) + m - tgt_logit
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def tp_psum(x: jax.Array, ctx: Ctx) -> jax.Array:
+    return lax.psum(x, ctx.tp_axis) if ctx.tp > 1 else x
+
+
+def local_head_mask(hq: int, hq_pad: int, hq_local: int, ctx: Ctx) -> jax.Array:
+    """1.0 for real Q heads, 0.0 for padded heads, per model rank."""
+    if hq == hq_pad:
+        return jnp.ones((hq_local,), jnp.float32)
+    base = ctx.tp_index() * hq_local if ctx.tp > 1 else 0
+    return ((base + jnp.arange(hq_local)) < hq).astype(jnp.float32)

@@ -1,0 +1,264 @@
+"""Model assembly: pools of stacked layers + embedding/head, with the
+parameter-gathering hook injected by the MiCS runtime.
+
+A ``Pool`` is a stack of identical superblocks whose parameters live in one
+flat buffer per layer (``[stack, tp, flat_len]`` globally).  The forward pass
+scans over the stack; the scan body gathers the layer's flat shard across the
+partition group (one collective per layer — the paper's coalesced gather),
+unflattens, and applies the block under ``jax.checkpoint`` so the backward
+pass re-gathers (ZeRO-3 semantics + activation checkpointing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.flat_param import FlatLayout
+from repro.models import layers as L
+from repro.models.dims import pad_to_tp, shard_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    name: str
+    layout: FlatLayout
+    stack: int
+    # apply(tensors, x, ctx, cache) -> ((x, aux), new_cache)
+    apply: Callable
+    # make_cache(batch, cache_len) -> cache pytree for ONE stacked row
+    make_cache: Callable | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ArchConfig
+    tp: int
+    pools: tuple[Pool, ...]
+    embed: Pool
+    head: Pool
+    vocab_padded: int
+
+    def pool(self, name: str) -> Pool:
+        for p in (*self.pools, self.embed, self.head):
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+    def all_pools(self) -> tuple[Pool, ...]:
+        return (self.embed, *self.pools, self.head)
+
+    def global_flat_shapes(self) -> dict[str, tuple[int, int, int]]:
+        return {
+            p.name: (p.stack, self.tp, p.layout.flat_len) for p in self.all_pools()
+        }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _row(x, idx=(0,)):
+    """Index every leaf (flat pools may be {'q','s'} dicts when quantized)."""
+    return jax.tree.map(lambda a: a[idx], x)
+
+
+def _apply_pool(
+    pool: Pool, flat_rows, x: jax.Array, ctx: L.Ctx,
+    gather_fn, caches=None,
+):
+    """Scan a pool over its stack.  flat_rows: [stack, 1, S_local] leaves."""
+
+    def inner(x, row, cache):
+        tensors = gather_fn(pool, _row(row))
+        (x, aux), new_cache = pool.apply(tensors, x, ctx, cache)
+        return x, aux, new_cache
+
+    inner = jax.checkpoint(inner)
+
+    if caches is None:
+
+        def body(carry, row):
+            x, aux_tot = carry
+            x, aux, _ = inner(x, row, None)
+            return (x, aux_tot + aux), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), flat_rows)
+        return x, aux, None
+
+    def body(carry, xs):
+        x, aux_tot = carry
+        row, cache = xs
+        x, aux, new_cache = inner(x, row, cache)
+        return (x, aux_tot + aux), new_cache
+
+    (x, aux), new_caches = lax.scan(body, (x, jnp.float32(0.0)), (flat_rows, caches))
+    return x, aux, new_caches
+
+
+def embed_tokens(model: ModelDef, t_embed, tokens, ctx: L.Ctx, *, pos=None):
+    cfg = model.cfg
+    x = L.embed_lookup(t_embed["emb.table"], tokens, ctx)
+    if "emb.pos" in t_embed:
+        positions = (
+            jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+            if pos is None else jnp.broadcast_to(pos, tokens.shape)
+        )
+        pe = L.embed_lookup(t_embed["emb.pos"], positions, ctx)
+        x = x + pe
+    return x.astype(ctx.compute_dtype)
+
+
+def encode_audio(model: ModelDef, t_embed, audio, ctx: L.Ctx):
+    """Whisper stub frontend: precomputed frame embeddings + learned pos."""
+    frames = audio.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(frames), audio.shape[:2])
+    pe = L.embed_lookup(t_embed["emb.audio_pos"], positions, ctx)
+    return (audio + pe).astype(ctx.compute_dtype)
+
+
+def lm_logits(model: ModelDef, t_head, x, ctx: L.Ctx):
+    cfg = model.cfg
+    if cfg.norm == "ln":
+        x = L.layer_norm(x, t_head["final.scale"], t_head["final.bias"])
+    else:
+        x = L.rms_norm(x, t_head["final.scale"])
+    return x @ t_head["head.w"]
+
+
+def forward(
+    model: ModelDef,
+    flat: dict[str, jax.Array],
+    gather_fn,
+    ctx: L.Ctx,
+    batch: dict[str, jax.Array],
+    caches: dict | None = None,
+):
+    """Run embedding -> pools -> final hidden states.
+
+    Returns (hidden, aux_loss, new_caches, t_head).
+    """
+    cfg = model.cfg
+    t_embed = gather_fn(model.embed, _row(flat["embed"], (0, 0)))
+    aux_total = jnp.float32(0.0)
+    new_caches: dict[str, Any] = {}
+
+    if cfg.family == "encdec" and ctx.mode != "decode":
+        enc_x = encode_audio(model, t_embed, batch["audio"], ctx)
+        enc_ctx = dataclasses.replace(ctx, mode="train", pos=None)
+        for pool in model.pools:
+            if not pool.name.startswith("enc"):
+                continue
+            enc_x, aux, _ = _apply_pool(
+                pool, flat[pool.name], enc_x, enc_ctx, gather_fn, None)
+            aux_total = aux_total + aux
+        ctx = dataclasses.replace(ctx, enc_out=enc_x)
+    if cfg.family == "vlm" and ctx.mode != "decode":
+        ctx = dataclasses.replace(
+            ctx, vision=batch["vision"].astype(ctx.compute_dtype))
+
+    x = embed_tokens(model, t_embed, batch["tokens"], ctx, pos=ctx.pos)
+    for pool in model.pools:
+        if cfg.family == "encdec" and pool.name.startswith("enc"):
+            continue
+        pool_cache = caches.get(pool.name) if caches is not None else None
+        x, aux, nc = _apply_pool(
+            pool, flat[pool.name], x, ctx, gather_fn, pool_cache)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[pool.name] = nc
+
+    t_head = gather_fn(model.head, _row(flat["head"], (0, 0)))
+    return x, aux_total, new_caches, t_head
+
+
+def loss_fn(
+    model: ModelDef,
+    flat: dict[str, jax.Array],
+    gather_fn,
+    ctx: L.Ctx,
+    batch: dict[str, jax.Array],
+):
+    """Token cross-entropy + MoE aux.  batch: tokens/targets/mask [b, T]."""
+    hidden, aux, _, t_head = forward(model, flat, gather_fn, ctx, batch)
+    logits = lm_logits(model, t_head, hidden, ctx)
+    ce = L.tp_cross_entropy(
+        logits, batch["targets"], batch["mask"].astype(jnp.float32),
+        vocab_real=model.cfg.vocab, vocab_padded=model.vocab_padded, ctx=ctx,
+    )
+    loss = ce + model.cfg.router_aux_weight * aux
+    return loss, {"loss": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(
+    model: ModelDef,
+    flat: dict[str, jax.Array],
+    gather_fn,
+    ctx: L.Ctx,
+    batch: dict[str, jax.Array],
+):
+    """Forward over the prompt, returning per-pool caches + last logits."""
+    ctx = dataclasses.replace(ctx, mode="prefill")
+    caches = init_caches(model, batch["tokens"].shape[0], ctx.cache_len, prefill=True)
+    hidden, _, new_caches, t_head = forward(
+        model, flat, gather_fn, ctx, batch, caches)
+    logits = lm_logits(model, t_head, hidden[:, -1:], ctx)
+    return logits, new_caches
+
+
+def decode_step(
+    model: ModelDef,
+    flat: dict[str, jax.Array],
+    gather_fn,
+    ctx: L.Ctx,
+    tokens: jax.Array,          # [b, 1] current token ids
+    pos: jax.Array,             # scalar absolute position
+    caches: dict,
+):
+    ctx = dataclasses.replace(ctx, mode="decode", pos=pos)
+    batch = {"tokens": tokens}
+    hidden, _, new_caches, t_head = forward(
+        model, flat, gather_fn, ctx, batch, caches)
+    logits = lm_logits(model, t_head, hidden, ctx)
+    return logits, new_caches
+
+
+def init_caches(model: ModelDef, batch: int, cache_len: int, *, prefill: bool = False):
+    """Zero caches for every pool (stacked along the pool's stack dim).
+
+    In prefill mode the scan still needs cache *inputs* with the right
+    structure; their values are ignored and replaced by the computed caches.
+    """
+    caches = {}
+    for pool in model.pools:
+        if pool.make_cache is None:
+            continue
+        one = pool.make_cache(batch, cache_len)
+        caches[pool.name] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (pool.stack, *a.shape)), one)
+    return caches
+
+
+def greedy_sample(logits_local: jax.Array, ctx: L.Ctx, vocab_real: int) -> jax.Array:
+    """Argmax over the vocab-parallel logits."""
+    vl = logits_local.shape[-1]
+    lg = logits_local.astype(jnp.float32)
+    start = ctx.tp_index() * vl
+    col = start + jnp.arange(vl)
+    lg = jnp.where(col[None, None, :] < vocab_real, lg, L.NEG_INF)
+    local_max = jnp.max(lg, axis=-1)
+    local_arg = jnp.argmax(lg, axis=-1) + start
+    if ctx.tp == 1:
+        return local_arg
+    gmax = lax.pmax(local_max, ctx.tp_axis)
+    cand = jnp.where(local_max >= gmax, local_arg, jnp.iinfo(jnp.int32).max)
+    return lax.pmin(cand, ctx.tp_axis)

@@ -1,0 +1,445 @@
+"""Recurrent blocks: Griffin RG-LRU (recurrentgemma) and xLSTM (m/sLSTM).
+
+TPU adaptation notes (DESIGN.md §2):
+* RG-LRU is a per-channel diagonal linear recurrence — it shards trivially
+  over the model axis and runs as a `lax.associative_scan` (parallel prefix)
+  over time; the Pallas kernel in kernels/rglru implements the same scan with
+  explicit VMEM tiling.  Gate projections use diagonal weights (documented
+  simplification of Griffin's block-diagonal maps; keeps TP exact).
+* xLSTM-125m is far too small to shard over a 16-wide model axis; its weights
+  are stored model-sharded (no replication) but gathered fully at use and the
+  cell computed replicated per rank.  sLSTM's dense recurrent coupling makes
+  per-step sharding a collective-per-timestep — a degenerate port we reject.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.flat_param import LayoutBuilder
+from repro.models import layers as L
+from repro.models.blocks import (
+    apply_norm, dense_layer_apply, dense_layer_layout, mlp_apply, mlp_layout,
+    norm_layout,
+)
+from repro.models.dims import shard_dim
+
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent residual block
+# ---------------------------------------------------------------------------
+
+def griffin_rec_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    d = cfg.d_model
+    r = cfg.lru_width or d
+    rl = shard_dim(r, tp, "lru_width")
+    std = 1.0 / math.sqrt(d)
+    norm_layout(cfg, tp, pb, "ln1")
+    pb.add("rec.wx", (d, rl), std=std)
+    pb.add("rec.wy", (d, rl), std=std)
+    pb.add("rec.conv_w", (cfg.conv_width, rl), std=0.5)
+    pb.add("rec.conv_b", (rl,), init="zeros", decay=False)
+    pb.add("rec.wi", (rl,), std=0.02, decay=False)
+    pb.add("rec.bi", (rl,), init="zeros", decay=False)
+    pb.add("rec.wr", (rl,), std=0.02, decay=False)
+    pb.add("rec.br", (rl,), init="zeros", decay=False)
+    pb.add("rec.lam", (rl,), init="lru", decay=False)
+    pb.add("rec.wo", (rl, d), std=1.0 / math.sqrt(r) / math.sqrt(2 * cfg.n_layers))
+    norm_layout(cfg, tp, pb, "ln2")
+    mlp_layout(cfg, tp, pb, "mlp.")
+    b.extend(pb)
+
+
+def _causal_conv1d(x, w, bias, state=None):
+    """Depthwise causal conv; x [b, t, c], w [cw, c].
+
+    state: [b, cw-1, c] previous inputs (decode); returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+        ext = jnp.concatenate([pad, x], axis=1)
+    else:
+        ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ext[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(cw))
+    y = y + bias.astype(x.dtype)
+    new_state = ext[:, -(cw - 1):] if cw > 1 else None
+    return y, new_state
+
+
+def _rglru_coeffs(t, x, prefix):
+    """Per-channel gates -> (a, b) of the recurrence h = a*h_prev + b."""
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf * t[prefix + "wr"].astype(jnp.float32)
+                            + t[prefix + "br"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf * t[prefix + "wi"].astype(jnp.float32)
+                            + t[prefix + "bi"].astype(jnp.float32))
+    # log a_base = -softplus(-lam)  (= log sigmoid(lam), stable)
+    log_a_base = -jax.nn.softplus(-t[prefix + "lam"].astype(jnp.float32))
+    log_a = LRU_C * r_gate * log_a_base
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6, 1.0)) * (i_gate * xf)
+    return a, b
+
+
+def rglru_scan(t, x, prefix: str = "rec."):
+    """RG-LRU over a sequence via associative scan.  x [b, T, rl] -> same."""
+    a, b = _rglru_coeffs(t, x, prefix)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(t, x1, h_prev, prefix: str = "rec."):
+    """One decode step; x1 [b, rl], h_prev [b, rl] fp32 state."""
+    a, b = _rglru_coeffs(t, x1[:, None, :], prefix)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x1.dtype), h
+
+
+def griffin_rec_apply(cfg: ArchConfig, t, x, ctx: L.Ctx, cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    h = apply_norm(cfg, tt, x, "ln1")
+    xa = h @ tt["rec.wx"]
+    xb = jax.nn.gelu(h @ tt["rec.wy"], approximate=True)
+    if ctx.mode == "decode":
+        conv_state = cache["conv"]
+        xa, conv_state = _causal_conv1d(xa, tt["rec.conv_w"], tt["rec.conv_b"], conv_state)
+        y1, h_state = rglru_step(tt, xa[:, 0], cache["h"])
+        rec = y1[:, None, :]
+        new_cache = {"conv": conv_state.astype(jnp.bfloat16), "h": h_state}
+    else:
+        xa, conv_state = _causal_conv1d(xa, tt["rec.conv_w"], tt["rec.conv_b"])
+        a, b_ = _rglru_coeffs(tt, xa, "rec.")
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = lax.associative_scan(combine, (a, b_), axis=1)
+        rec = hs.astype(x.dtype)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = {
+                "conv": conv_state.astype(jnp.bfloat16),
+                "h": hs[:, -1].astype(jnp.float32),
+            }
+    out = (rec * xb) @ tt["rec.wo"]
+    x = x + L.tp_psum(out, ctx)
+    h = apply_norm(cfg, tt, x, "ln2")
+    x = x + mlp_apply(cfg, tt, h, ctx, "mlp.")
+    return x, new_cache
+
+
+def make_rec_cache(cfg: ArchConfig, tp: int, batch: int):
+    rl = shard_dim(cfg.lru_width or cfg.d_model, tp)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, rl), jnp.bfloat16),
+        "h": jnp.zeros((batch, rl), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (model-replicated compute; weights stored sharded)
+# ---------------------------------------------------------------------------
+
+def _gathered(shape_full, tp):
+    """Stored shape for a fully-model-gathered tensor (dim -1 padded)."""
+    *lead, last = shape_full
+    pad = ((last + tp - 1) // tp) * tp
+    return tuple(lead) + (pad // tp,), pad
+
+
+def _add_gathered(pb: LayoutBuilder, name, shape_full, tp, **kw):
+    stored, pad = _gathered(shape_full, tp)
+    pb.add(name, stored, model_gather=tp, model_gather_dim=len(stored) - 1, **kw)
+    return pad
+
+
+def mlstm_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    d = cfg.d_model
+    inner = int(cfg.expand * d)
+    nh = cfg.n_heads
+    std = 1.0 / math.sqrt(d)
+    istd = 1.0 / math.sqrt(inner)
+    norm_layout(cfg, tp, pb, "ln1")
+    _add_gathered(pb, "m.wup", (d, 2 * inner), tp, std=std)
+    _add_gathered(pb, "m.conv_w", (cfg.conv_width, inner), tp, std=0.5)
+    _add_gathered(pb, "m.conv_b", (inner,), tp, init="zeros", decay=False)
+    _add_gathered(pb, "m.wq", (inner, inner), tp, std=istd)
+    _add_gathered(pb, "m.wk", (inner, inner), tp, std=istd)
+    _add_gathered(pb, "m.wv", (inner, inner), tp, std=istd)
+    _add_gathered(pb, "m.wif", (inner, 2 * nh), tp, std=istd, decay=False)
+    _add_gathered(pb, "m.bif", (2 * nh,), tp, init="zeros", decay=False)
+    _add_gathered(pb, "m.hnorm", (inner,), tp, init="zeros", decay=False)
+    _add_gathered(pb, "m.wo", (inner, d), tp,
+                  std=istd / math.sqrt(2 * cfg.n_layers))
+    b.extend(pb)
+
+
+def mlstm_chunkwise(q, k, v, ilog, flog, chunk: int):
+    """Chunkwise-parallel mLSTM (xLSTM appendix / GLA-style form).
+
+    The sequential cell streams a [dk, dv] matrix state through HBM every
+    timestep — hopeless on TPU.  This form walks chunks of length ``chunk``:
+    within a chunk everything is dense matmuls (MXU food), and the state is
+    read/written once per chunk, cutting state HBM traffic by ``chunk``x.
+    Matches the sequential cell up to the stabilizer-floor choice (see
+    tests/test_recurrent.py tolerances).
+
+    q/k/v: [b, T, nh, dh] (k pre-scaled); ilog/flog: [b, T, nh] fp32.
+    Returns h [b, T, nh, dh] fp32 and the final (C, n, m) state.
+    """
+    b, t, nh, dh = q.shape
+    nc = t // chunk
+    L = chunk
+
+    def per_chunk(carry, xs):
+        C, n, m = carry                       # [b,nh,dk,dv], [b,nh,dk], [b,nh]
+        qc, kc, vc, il, fl = xs               # [b,L,nh,*]
+        il = il.astype(jnp.float32)
+        fl = fl.astype(jnp.float32)
+        bcum = jnp.cumsum(fl, axis=1)         # [b,L,nh] inclusive decay sums
+        btot = bcum[:, -1]                    # [b,nh]
+
+        # D[j,i] = bcum_j - bcum_i + ilog_i  (contribution of step i at j)
+        D = (bcum[:, :, None, :] - bcum[:, None, :, :]
+             + il[:, None, :, :])             # [b, j=L, i=L, nh]
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        D = jnp.where(mask, D, -jnp.inf)
+        m_loc = jnp.max(D, axis=2)            # [b, L, nh]
+        m_new = jnp.maximum(bcum + m[:, None, :], m_loc)
+        W = jnp.exp(D - m_new[:, :, None, :])         # [b,L,L,nh]
+        a = jnp.exp(bcum + m[:, None, :] - m_new)     # [b,L,nh] inter scale
+
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        s = jnp.einsum("bjhd,bihd->bjih", qf, kf)     # [b,L,L,nh]
+        sw = s * W
+        h_intra = jnp.einsum("bjih,bihd->bjhd", sw, vf)
+        h_inter = jnp.einsum("bjhd,bhdv->bjhv", qf, C) * a[..., None]
+        n_intra = jnp.einsum("bjih,bihd->bjhd", W, kf)
+        n_all = n_intra + n[:, None] * a[..., None]   # [b,L,nh,dk]
+        num = h_intra + h_inter
+        qn = jnp.einsum("bjhd,bjhd->bjh", qf, n_all)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h = num / denom[..., None]
+
+        # carry to the next chunk
+        m_next = jnp.maximum(btot + m,
+                             jnp.max(btot[:, None] - bcum + il, axis=1))
+        dec = jnp.exp(btot + m - m_next)              # [b,nh]
+        wgt = jnp.exp(btot[:, None] - bcum + il - m_next[:, None])  # [b,L,nh]
+        C = C * dec[..., None, None] + jnp.einsum(
+            "bihd,bihv,bih->bhdv", kf, vf, wgt)
+        n = n * dec[..., None] + jnp.einsum("bihd,bih->bhd", kf, wgt)
+        return (C, n, m_next), h
+
+    resh = lambda x: jnp.moveaxis(
+        x.reshape(b, nc, L, *x.shape[2:]), 1, 0)
+    carry = (
+        jnp.zeros((b, nh, dh, dh), jnp.float32),
+        jnp.zeros((b, nh, dh), jnp.float32),
+        jnp.full((b, nh), -1e30, jnp.float32),
+    )
+    carry, hs = lax.scan(
+        per_chunk, carry,
+        (resh(q), resh(k), resh(v), resh(ilog), resh(flog)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, t, nh, dh)
+    return h, carry
+
+
+def _mlstm_cell(q, k, v, ilog, flog, carry):
+    """One timestep.  q/k/v [b, nh, dh]; ilog/flog [b, nh]."""
+    C, n, m = carry
+    m_new = jnp.maximum(flog + m, ilog)
+    fp = jnp.exp(flog + m - m_new)[..., None]
+    ip = jnp.exp(ilog - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * (v[..., None, :] * k[..., :, None])
+    n = fp * n + ip * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, axis=-1)), jnp.exp(-m_new))
+    h = jnp.einsum("bhkv,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(cfg: ArchConfig, t, x, ctx: L.Ctx, cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    d = cfg.d_model
+    inner = int(cfg.expand * d)
+    nh = cfg.n_heads
+    dh = inner // nh
+    bsz, tq, _ = x.shape
+
+    h0 = apply_norm(cfg, tt, x, "ln1")
+    up = h0 @ tt["m.wup"][:, : 2 * inner]
+    xin, z = up[..., :inner], up[..., inner:]
+    conv_state = cache["conv"] if ctx.mode == "decode" else None
+    xc, conv_state = _causal_conv1d(
+        xin, tt["m.conv_w"][:, :inner], tt["m.conv_b"][:inner], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ tt["m.wq"][:, :inner]).reshape(bsz, tq, nh, dh)
+    k = (xc @ tt["m.wk"][:, :inner]).reshape(bsz, tq, nh, dh) / math.sqrt(dh)
+    v = (xin @ tt["m.wv"][:, :inner]).reshape(bsz, tq, nh, dh)
+    iflog = (xc @ tt["m.wif"][:, : 2 * nh] + tt["m.bif"][: 2 * nh]).astype(jnp.float32)
+    ilog, flog = iflog[..., :nh], jax.nn.log_sigmoid(iflog[..., nh:])
+
+    if ctx.mode == "decode":
+        carry = (cache["C"], cache["n"], cache["m"])
+        carry, h = _mlstm_cell(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), ilog[:, 0], flog[:, 0], carry)
+        hseq = h[:, None]
+        new_cache = {"C": carry[0], "n": carry[1], "m": carry[2],
+                     "conv": conv_state.astype(jnp.bfloat16)}
+    else:
+        chunk = ctx.mlstm_chunk
+        if chunk and tq % chunk == 0 and tq > chunk:
+            hseq, carry = mlstm_chunkwise(q, k, v, ilog, flog, chunk)
+        else:
+            carry = (
+                jnp.zeros((bsz, nh, dh, dh), jnp.float32),
+                jnp.zeros((bsz, nh, dh), jnp.float32),
+                jnp.full((bsz, nh), -1e30, jnp.float32),
+            )
+
+            def step(c, inp):
+                qt, kt, vt, it_, ft = inp
+                c, h = _mlstm_cell(qt, kt, vt, it_, ft, c)
+                return c, h
+
+            xs = (
+                jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(ilog, 1, 0),
+                jnp.moveaxis(flog, 1, 0),
+            )
+            carry, hs = lax.scan(step, carry, xs)
+            hseq = jnp.moveaxis(hs, 0, 1)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = {"C": carry[0], "n": carry[1], "m": carry[2],
+                         "conv": conv_state.astype(jnp.bfloat16)
+                         if conv_state is not None else
+                         jnp.zeros((bsz, cfg.conv_width - 1, inner), jnp.bfloat16)}
+
+    hflat = hseq.reshape(bsz, tq, inner).astype(x.dtype)
+    hflat = L.rms_norm(hflat, tt["m.hnorm"][:inner])
+    out = (hflat * jax.nn.silu(z)) @ tt["m.wo"][:, :d]
+    return x + out, new_cache
+
+
+def slstm_layout(cfg: ArchConfig, tp: int, b: LayoutBuilder, prefix: str = ""):
+    pb = LayoutBuilder(prefix)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    std = 1.0 / math.sqrt(d)
+    norm_layout(cfg, tp, pb, "ln1")
+    for g in ("z", "i", "f", "o"):
+        _add_gathered(pb, f"s.w{g}", (d, d), tp, std=std)
+        _add_gathered(pb, f"s.r{g}", (nh, dh, dh), tp, std=1.0 / math.sqrt(dh),
+                      decay=False)
+        _add_gathered(pb, f"s.b{g}", (d,), tp, init="zeros", decay=False)
+    _add_gathered(pb, "s.hnorm", (d,), tp, init="zeros", decay=False)
+    _add_gathered(pb, "s.wo", (d, d), tp, std=std / math.sqrt(2 * cfg.n_layers))
+    norm_layout(cfg, tp, pb, "ln2")
+    mlp_layout(cfg, tp, pb, "mlp.", d_ff=4 * d)
+    b.extend(pb)
+
+
+def _slstm_step(tt, xt, carry, nh, dh):
+    """xt [b, d] fp32; carry (c, n, h, m) each [b, d]/[b, nh]-shaped."""
+    c, n, h, m = carry
+    b = xt.shape[0]
+    hh = h.reshape(b, nh, dh)
+
+    def gate(g):
+        wx = xt @ tt[f"s.w{g}"][:, : nh * dh]
+        rh = jnp.einsum("bhd,hde->bhe", hh, tt[f"s.r{g}"]).reshape(b, nh * dh)
+        return wx + rh + tt[f"s.b{g}"][: nh * dh]
+
+    z = jnp.tanh(gate("z"))
+    ilog = gate("i")
+    flog = jax.nn.log_sigmoid(gate("f"))
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(flog + m, ilog)
+    fp = jnp.exp(flog + m - m_new)
+    ip = jnp.exp(ilog - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply(cfg: ArchConfig, t, x, ctx: L.Ctx, cache=None, prefix: str = ""):
+    tt = {name[len(prefix):]: v for name, v in t.items()} if prefix else t
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    bsz, tq, _ = x.shape
+    h0 = apply_norm(cfg, tt, x, "ln1").astype(jnp.float32)
+
+    if ctx.mode == "decode":
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        carry, hs = _slstm_step(tt, h0[:, 0], carry, nh, dh)
+        hseq = hs[:, None]
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    else:
+        carry = tuple(
+            jnp.zeros((bsz, d), jnp.float32) for _ in range(3)
+        ) + (jnp.full((bsz, d), -1e30, jnp.float32),)
+
+        def step(c, xt):
+            return _slstm_step(tt, xt, c, nh, dh)
+
+        carry, hs = lax.scan(step, carry, jnp.moveaxis(h0, 1, 0))
+        hseq = jnp.moveaxis(hs, 0, 1)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+    hseq = L.rms_norm(hseq.astype(x.dtype), tt["s.hnorm"][:d])
+    x = x + hseq @ tt["s.wo"][:, :d]
+    h = apply_norm(cfg, tt, x, "ln2")
+    x = x + mlp_apply(cfg, tt, h, ctx, "mlp.")
+    return x, new_cache
+
+
+def make_mlstm_cache(cfg: ArchConfig, batch: int):
+    inner = int(cfg.expand * cfg.d_model)
+    nh = cfg.n_heads
+    dh = inner // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), jnp.bfloat16),
+    }
+
+
+def make_slstm_cache(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }

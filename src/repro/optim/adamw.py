@@ -1,0 +1,55 @@
+"""AdamW over flat parameter shards (ZeRO-sharded optimizer states).
+
+Because model states are flat vectors sharded across the partition group,
+the optimizer is purely elementwise on each device's shard — optimizer
+states (m, v) are partitioned exactly like parameters (ZeRO-1/2 fall out of
+the same layout).  Weight-decay and padding masks are rebuilt per shard from
+static segment ranges (see FlatLayout.decay_mask_for_shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr_max: float = 3e-4
+    lr_min_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(step, oc: OptConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    frac = (step - oc.warmup_steps) / jnp.maximum(
+        oc.total_steps - oc.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = oc.lr_min_ratio + (1 - oc.lr_min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return oc.lr_max * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def adamw_shard_update(
+    p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+    step, oc: OptConfig, *, decay_mask: jax.Array, pad_mask: jax.Array,
+    lr=None,
+):
+    """One AdamW step on a flat shard.  All arrays [*, S_local] fp32."""
+    lr = lr_schedule(step, oc) if lr is None else lr
+    t = step.astype(jnp.float32) + 1.0
+    m = oc.b1 * m + (1 - oc.b1) * g
+    v = oc.b2 * v + (1 - oc.b2) * g * g
+    mhat = m / (1 - oc.b1 ** t)
+    vhat = v / (1 - oc.b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * decay_mask * p
+    p = (p - lr * upd) * pad_mask
+    return p, m, v

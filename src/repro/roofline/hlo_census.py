@@ -1,0 +1,223 @@
+"""Collective census over compiled (optimized, SPMD-partitioned) HLO text.
+
+`compiled.cost_analysis()` has no collective-byte statistic, so we parse the
+optimized module: every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute instruction, its shapes, and its replica groups.
+
+Two subtleties make this a real parser rather than a grep:
+
+* collectives inside `lax.scan` loops appear once in the text but execute
+  trip-count times — XLA annotates `while` ops with
+  ``backend_config={"known_trip_count":{"n":...}}``, so the census walks the
+  computation graph (entry -> while bodies -> fusions) multiplying by trip
+  counts;
+* replica groups are device-id lists; ids are decoded back into
+  (pod, repl, shard, model) mesh coordinates so each collective is attributed
+  to the mesh axes it spans — in particular whether it crosses the pod
+  boundary (DCI) or stays on intra-pod ICI.
+
+Wire-bytes use the standard ring algorithm accounting per participant:
+  all-gather (g-1)/g * result;   reduce-scatter (g-1)/g * operand;
+  all-reduce 2(g-1)/g * operand; all-to-all (g-1)/g * operand;
+  collective-permute: operand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_KIND_RE = re.compile(r"=\s*(?:\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_groups(line: str) -> list[list[int]] | None:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([^}]*)\}", m.group(1))
+        ]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        ids = np.arange(math.prod(dims)).reshape(dims).transpose(perm).reshape(
+            ngroups, gsize)
+        return [list(map(int, row)) for row in ids]
+    return None
+
+
+def _axes_of_group(group: list[int], mesh_shape: dict[str, int]) -> tuple[str, ...]:
+    names = list(mesh_shape)
+    sizes = [mesh_shape[n] for n in names]
+    varying = set()
+    base = None
+    for dev in group:
+        c = []
+        rem = dev
+        for s in reversed(sizes):
+            c.append(rem % s)
+            rem //= s
+        c = tuple(reversed(c))
+        if base is None:
+            base = c
+        for i, (a, b) in enumerate(zip(c, base)):
+            if a != b:
+                varying.add(names[i])
+    return tuple(n for n in names if n in varying)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    collectives: list  # (kind, result_bytes, operand_bytes, gsize, axes)
+    whiles: list       # (body_name, trip)
+    calls: list        # sub-computation names (weight 1)
+
+
+def _split_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        head = _COMP_HEAD_RE.match(line)
+        if head and line.rstrip().endswith("{"):
+            cur = _Comp(head.group(1), [], [], [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mw = _WHILE_RE.search(line)
+        if mw:
+            trip_m = _TRIP_RE.search(line)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            cur.whiles.append((mw.group(2), trip))
+            continue
+        mc = _COLLECTIVE_RE.match(line)
+        if mc:
+            shape_str, kind = mc.group(1), mc.group(2)
+            result_bytes = _shape_bytes(shape_str)
+            paren = line[line.index("("):]
+            operand_bytes = _shape_bytes(paren.split("replica_groups")[0])
+            groups = _parse_groups(line)
+            if groups:
+                gsize = len(groups[0])
+                axes = groups[0]
+            else:
+                gsize, axes = 0, []
+            cur.collectives.append(
+                (kind, result_bytes, operand_bytes or result_bytes, gsize, axes))
+            continue
+        km = _KIND_RE.search(line)
+        if km and km.group(1) in ("fusion", "call", "conditional"):
+            for sub in _CALLS_RE.findall(line):
+                cur.calls.append(sub)
+    return comps
+
+
+def census(hlo_text: str, mesh_shape: dict[str, int]) -> dict:
+    """Trip-count-weighted collective census of an optimized HLO module."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(line[len("ENTRY "):].strip()) or \
+                _COMP_HEAD_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation with most collectives
+        entry = max(comps, key=lambda n: len(comps[n].collectives), default=None)
+
+    agg: dict = defaultdict(lambda: dict(
+        wire_bytes=0, result_bytes=0, operand_bytes=0, count=0,
+        group_size=0, crosses_pod=False))
+
+    def walk(name: str, weight: float, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        comp = comps[name]
+        for kind, rb, ob, gsize, group in comp.collectives:
+            if gsize <= 1:
+                continue
+            axes = _axes_of_group(group, mesh_shape)
+            frac = (gsize - 1) / gsize
+            if kind == "all-gather":
+                wire = rb * frac
+            elif kind == "reduce-scatter":
+                wire = ob * frac
+            elif kind == "all-reduce":
+                wire = 2 * ob * frac
+            elif kind == "all-to-all":
+                wire = ob * frac
+            else:
+                wire = ob
+            e = agg[(kind, axes)]
+            e["wire_bytes"] += int(wire * weight)
+            e["result_bytes"] += int(rb * weight)
+            e["operand_bytes"] += int(ob * weight)
+            e["count"] += weight
+            e["group_size"] = gsize
+            e["crosses_pod"] = "pod" in axes
+        for body, trip in comp.whiles:
+            walk(body, weight * trip, seen + (name,))
+        for sub in comp.calls:
+            walk(sub, weight, seen + (name,))
+
+    if entry:
+        walk(entry, 1.0, ())
+
+    total = sum(e["wire_bytes"] for e in agg.values())
+    dci = sum(e["wire_bytes"] for e in agg.values() if e["crosses_pod"])
+    return {
+        "total_wire_bytes": total,
+        "dci_wire_bytes": dci,
+        "ici_wire_bytes": total - dci,
+        "n_collectives": sum(e["count"] for e in agg.values()),
+        "by_collective": {
+            f"{kind}@{'x'.join(axes) or 'none'}": e
+            for (kind, axes), e in sorted(agg.items(), key=lambda kv: str(kv[0]))
+        },
+    }

@@ -1,0 +1,161 @@
+"""Serving runtime: prefill + KV-cache decode steps under MiCS sharding.
+
+Inference uses the same flat-pool parameter gathering as training (memory
+scales 1/p like ZeRO-3 inference) minus optimizer state.  The KV cache is
+sharded batch-over-data and heads-over-model; for GQA archs whose KV head
+count is below the model-axis width, each rank caches the one head its Q
+group attends to (global cache carries tp "head slots" — the vLLM-style
+replication documented in DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.mics import MiCSConfig, make_gather_fn, state_pspecs
+from repro.core.topology import MODEL_AXIS, MiCSTopology
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.lm import ModelDef
+
+
+def _cache_pspec_for(leaf_path: str, leaf) -> P:
+    """PartitionSpec for one cache leaf (stack, batch, ...) by convention.
+
+    kv/cross caches: [stack, b, len, heads, dh]   -> heads over model
+    rec conv:        [stack, b, cw-1, channels]   -> channels over model
+    rec h:           [stack, b, channels]         -> channels over model
+    xlstm leaves (replicated compute): batch only.
+    """
+    name = leaf_path.split("/")[-1]
+    nd = leaf.ndim
+    if name in ("k", "v") and nd == 5:
+        return P(None, "data_all", None, MODEL_AXIS, None)
+    if name == "conv" and nd == 4:
+        return P(None, "data_all", None, MODEL_AXIS)
+    if name == "h" and nd == 3:
+        return P(None, "data_all", MODEL_AXIS)
+    return P(None, "data_all", *([None] * (nd - 2)))
+
+
+def batch_axes_for(topo: MiCSTopology, global_batch: int):
+    """Data axes the batch can shard over; a single long-context stream
+    (global_batch < data-parallel size) runs replicated on the data axes."""
+    if global_batch % topo.data_parallel_size == 0:
+        return topo.data_axes
+    return ()
+
+
+def cache_pspecs(model: ModelDef, topo: MiCSTopology, batch_axes=None):
+    """Specs for the full cache pytree (built from a tiny local template)."""
+    template = lm.init_caches(model, batch=1, cache_len=max(model.cfg.window, 8))
+    xlstm = model.cfg.family == "xlstm"
+    baxes = topo.data_axes if batch_axes is None else batch_axes
+
+    def spec(path, leaf):
+        pathstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        ps = _cache_pspec_for(pathstr, leaf)
+        if xlstm:  # replicated-compute states: batch sharding only
+            ps = P(None, "data_all", *([None] * (leaf.ndim - 2)))
+        # replace the placeholder with the real batch axes tuple
+        parts = [baxes if p == "data_all" else p for p in ps]
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, template)
+
+
+def global_cache_shapes(model: ModelDef, topo: MiCSTopology,
+                        global_batch: int, cache_len: int, batch_axes=None):
+    """Global ShapeDtypeStructs for the cache pytree (no allocation)."""
+    baxes = topo.data_axes if batch_axes is None else batch_axes
+    dp = 1
+    for a in baxes:
+        dp *= topo.axis_size(a)
+    local_b = global_batch // dp
+    template = lm.init_caches(model, batch=local_b, cache_len=cache_len)
+    specs = cache_pspecs(model, topo, baxes)
+
+    def scale(leaf, ps):
+        shape = list(leaf.shape)
+        for i, ax in enumerate(ps):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                shape[i] *= topo.axis_size(a)
+        return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
+
+    return jax.tree.map(scale, template, specs,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray)), specs
+
+
+def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
+                      cache_len: int, batch_axes=None):
+    """Returns (prefill_fn, decode_fn) jitted for the topo's mesh."""
+    gather = make_gather_fn(topo, mcfg)
+    ctx = L.Ctx(mode="decode", tp=topo.model_size, tp_axis=MODEL_AXIS,
+                cache_len=cache_len, window=model.cfg.window,
+                scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
+    baxes = topo.data_axes if batch_axes is None else batch_axes
+    flat_specs = state_pspecs(model, topo)["params"]
+    if mcfg.quant_gather:  # int8 weights + per-block scales, same sharding
+        flat_specs = {name: {"q": spec, "s": spec}
+                      for name, spec in flat_specs.items()}
+    c_specs = cache_pspecs(model, topo, baxes)
+    tok_spec = P(baxes, None)
+    logit_spec = P(baxes, None, MODEL_AXIS)
+
+    def sharded_prefill(params, batch):
+        pctx = dataclasses.replace(ctx, mode="prefill")
+        logits, caches = lm.prefill(model, params, gather, pctx, batch)
+        return logits, caches
+
+    def sharded_decode(params, caches, tokens, pos):
+        logits, new_caches = lm.decode_step(
+            model, params, gather, ctx, tokens, pos, caches)
+        next_tok = lm.greedy_sample(logits, ctx, model.cfg.vocab)
+        return logits, next_tok, new_caches
+
+    ns = lambda spec: jax.tree.map(
+        lambda s_: NamedSharding(topo.mesh, s_), spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+    batch_specs = {"tokens": tok_spec}
+    if model.cfg.family == "vlm":
+        batch_specs["vision"] = P(baxes, None, None)
+    if model.cfg.family == "encdec":
+        batch_specs["audio"] = P(baxes, None, None)
+
+    prefill_sm = shard_map(
+        sharded_prefill, mesh=topo.mesh,
+        in_specs=(flat_specs, batch_specs),
+        out_specs=(logit_spec, c_specs),
+        check_vma=False,
+    )
+    prefill_fn = jax.jit(
+        prefill_sm,
+        in_shardings=(ns(flat_specs), ns(batch_specs)),
+        out_shardings=(ns(logit_spec), ns(c_specs)),
+    )
+
+    decode_sm = shard_map(
+        sharded_decode, mesh=topo.mesh,
+        in_specs=(flat_specs, c_specs, tok_spec, P()),
+        out_specs=(logit_spec, tok_spec, c_specs),
+        check_vma=False,
+    )
+    decode_fn = jax.jit(
+        decode_sm,
+        in_shardings=(ns(flat_specs), ns(c_specs), ns(tok_spec),
+                      NamedSharding(topo.mesh, P())),
+        out_shardings=(ns(logit_spec), ns(tok_spec), ns(c_specs)),
+        donate_argnums=(1,),
+    )
+    return prefill_fn, decode_fn

@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests must see the real single CPU device; multi-device checks run via the
+subprocess harness (tests/dist_harness.py)."""
+
+import jax
+import pytest
+
+from repro.core.topology import MiCSTopology, make_host_mesh
+
+
+@pytest.fixture(scope="session")
+def topo1():
+    """Single-device 4-axis MiCS topology (all axes size 1)."""
+    return MiCSTopology(make_host_mesh(1, 1, 1, 1))

@@ -1,0 +1,99 @@
+"""Checkpoint roundtrip, crash-safe atomicity, fault-tolerant train loop with
+injected failures, and data-pipeline determinism/seekability."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, smoke_variant
+from repro.core.mics import MiCSConfig, build_train_step, init_state
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.build import build_model
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import LoopConfig, train
+
+
+def test_checkpoint_roundtrip(tmp_path, topo1):
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg, tp=1)
+    state = init_state(model, topo1, seed=5)
+    ck = Checkpointer(tmp_path)
+    ck.save(state, step=7, topo=topo1, data_cursor=123)
+
+    restored, meta = ck.restore(model, topo1)
+    assert meta["step"] == 7 and meta["data_cursor"] == 123
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        state, restored)
+
+
+def test_checkpoint_latest_and_atomicity(tmp_path, topo1):
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg, tp=1)
+    state = init_state(model, topo1)
+    ck = Checkpointer(tmp_path)
+    ck.save(state, step=1, topo=topo1)
+    ck.save(state, step=2, topo=topo1)
+    # a stale .tmp dir (simulated crash) must be ignored
+    (tmp_path / "step_00000099.tmp").mkdir()
+    assert ck.latest_step() == 2
+
+
+def test_train_loop_recovers_from_injected_fault(tmp_path, topo1):
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg, tp=1)
+    mcfg = MiCSConfig(micro_steps=2)
+    oc = OptConfig(total_steps=8, warmup_steps=0, lr_max=1e-3)
+    dc = DataConfig(vocab=cfg.vocab, seq=32, global_batch=4, micro_steps=2)
+    lc = LoopConfig(total_steps=8, checkpoint_every=2, log_every=0,
+                    checkpoint_dir=str(tmp_path))
+
+    crashed = {"done": False}
+
+    def injector(step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    stats = train(model, topo1, mcfg, oc, dc, lc, fault_injector=injector)
+    assert stats.restarts == 1
+    assert len(stats.losses) >= 8
+    assert np.isfinite(stats.losses[-1])
+    ck = Checkpointer(tmp_path)
+    assert ck.latest_step() == 8
+
+
+def test_train_loop_resume_continues_data_cursor(tmp_path, topo1):
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg, tp=1)
+    mcfg = MiCSConfig(micro_steps=2)
+    dc = DataConfig(vocab=cfg.vocab, seq=32, global_batch=4, micro_steps=2)
+
+    lc1 = LoopConfig(total_steps=4, checkpoint_every=2, log_every=0,
+                     checkpoint_dir=str(tmp_path))
+    train(model, topo1, mcfg, OptConfig(total_steps=8, warmup_steps=0),
+          dc, lc1)
+    lc2 = dataclasses.replace(lc1, total_steps=6)
+    stats = train(model, topo1, mcfg,
+                  OptConfig(total_steps=8, warmup_steps=0), dc, lc2)
+    assert len(stats.losses) == 2  # resumed at 4, ran to 6
+
+
+def test_data_pipeline_deterministic_and_seekable():
+    dc = DataConfig(vocab=128, seq=16, global_batch=8, micro_steps=2)
+    src1, src2 = SyntheticLM(dc), SyntheticLM(dc)
+    b1 = src1.global_step_batch(3)
+    b2 = src2.global_step_batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # host sharding partitions the global batch exactly
+    h0 = src1.host_step_batch(3, 0, 2)
+    h1 = src1.host_step_batch(3, 1, 2)
+    merged = np.concatenate([h0["tokens"], h1["tokens"]], axis=1)
+    np.testing.assert_array_equal(merged, b1["tokens"])
+    # targets are inputs shifted by one
+    np.testing.assert_array_equal(b1["tokens"][:, :, 1:],
+                                  b1["targets"][:, :, :-1])

@@ -1,0 +1,60 @@
+"""Int8 block-quantized serving-weight gathers (§Perf B3): roundtrip error
+bound and end-to-end decode consistency against fp32 weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.mics import MiCSConfig, init_state
+from repro.core.quant import BLOCK, dequantize_flat, quantize_flat, quantize_state
+from repro.models.build import build_model
+from repro.runtime.serving import build_serve_steps
+
+RNG = np.random.default_rng(17)
+
+
+@pytest.mark.parametrize("shape", [(4096,), (3, 1, 4096), (2, 131072)])
+def test_quant_roundtrip_error_bound(shape):
+    x = jnp.asarray(RNG.normal(size=shape) * 0.05, jnp.float32)
+    q, s = quantize_flat(x)
+    back = dequantize_flat(q, s, dtype=jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # absmax int8: error <= scale/2 = absmax/254 per block
+    blocks = np.asarray(x).reshape(-1, BLOCK)
+    bound = np.abs(blocks).max(-1) / 254 + 1e-8
+    assert np.all(err.reshape(-1, BLOCK) <= bound[:, None] * 1.01)
+
+
+def test_quant_zeros_exact():
+    x = jnp.zeros((2, BLOCK * 4), jnp.float32)
+    q, s = quantize_flat(x)
+    np.testing.assert_array_equal(np.asarray(dequantize_flat(q, s)), 0)
+
+
+def test_quantized_decode_matches_fp32(topo1):
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    model = build_model(cfg, tp=1)
+    state = init_state(model, topo1, seed=8)
+    params = state["params"]
+    qparams = quantize_state(params)
+
+    pre_f, dec_f = build_serve_steps(model, topo1, MiCSConfig(), cache_len=24)
+    pre_q, dec_q = build_serve_steps(
+        model, topo1, MiCSConfig(quant_gather=True), cache_len=24)
+
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    logits_f, caches_f = pre_f(params, {"tokens": toks})
+    logits_q, caches_q = pre_q(qparams, {"tokens": toks})
+    lf = np.asarray(logits_f, np.float32)
+    lq = np.asarray(logits_q, np.float32)
+    # int8 weights perturb logits slightly; ranking must agree at the top
+    assert np.abs(lf - lq).max() < 0.6
+    assert (np.argmax(lf, -1) == np.argmax(lq, -1)).mean() > 0.9
+
+    tok = jnp.argmax(logits_f[:, -1:], axis=-1).astype(jnp.int32)
+    lgf, _, caches_f = dec_f(params, caches_f, tok, jnp.int32(16))
+    lgq, _, caches_q = dec_q(qparams, caches_q, tok, jnp.int32(16))
+    assert np.abs(np.asarray(lgf, np.float32)
+                  - np.asarray(lgq, np.float32)).max() < 0.6
