@@ -1,0 +1,104 @@
+"""Serial vs double-buffered-prefetch gather schedules on the host mesh.
+
+Run standalone (benchmarks/run.py invokes it as a subprocess so the main
+benchmark process keeps its single CPU device):
+
+  PYTHONPATH=src python benchmarks/comm_bench.py
+
+Prints one JSON object: per-schedule wall time per training step, the
+HLO-census gathered-bytes/collective counts, the carried-gather prefetch
+evidence, and the loss trajectories (which must be bitwise equal — the
+schedules differ only in *when* gathers are issued, never in values).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.mics import (
+    MiCSConfig, build_train_step, init_state, init_state_shapes,
+    make_batch_shapes,
+)
+from repro.core.topology import MiCSTopology, make_host_mesh
+from repro.models.build import build_model
+from repro.optim.adamw import OptConfig
+from repro.roofline.hlo_stats import analyze
+
+STEPS = 8
+MICRO = 2
+
+
+def run(steps: int = STEPS) -> dict:
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    mesh = make_host_mesh(1, 1, 4, 2)  # p=4 partition group, tp=2
+    topo = MiCSTopology(mesh)
+    model = build_model(cfg, tp=2)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    rng = np.random.default_rng(5)
+    b, t = 8, 32
+    batch = {
+        "tokens": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                            jnp.int32),
+        "targets": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                             jnp.int32),
+        "mask": jnp.ones((MICRO, b, t), jnp.float32),
+    }
+
+    out = {"mesh": mesh_shape, "partition_size": topo.partition_size,
+           "steps": steps, "micro_steps": MICRO}
+    for label, prefetch in (("serial", False), ("prefetch", True)):
+        mcfg = MiCSConfig(micro_steps=MICRO, prefetch=prefetch)
+        step = build_train_step(model, topo, mcfg,
+                                OptConfig(total_steps=100, warmup_steps=0,
+                                          lr_max=3e-3))
+        stats = analyze(
+            step.lower(init_state_shapes(model),
+                       make_batch_shapes(model, MICRO * b, t, MICRO))
+                .compile().as_text(),
+            mesh_shape,
+            partition_axes=topo.partition_axes,
+            replication_axes=topo.replication_axes)
+        gather_stages = {k: v for k, v in stats["by_stage"].items()
+                         if k.startswith("param_gather")}
+
+        state = init_state(model, topo, seed=11)
+        state, m = step(state, batch)  # compile + warm
+        jax.block_until_ready(m["loss"])
+        losses = []
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        dt = (time.perf_counter() - t0) / steps
+
+        out[label] = {
+            "us_per_step": round(dt * 1e6, 1),
+            "gathered_wire_bytes": sum(
+                v["wire_bytes"] for v in gather_stages.values()),
+            "param_gather_count": sum(
+                v["count"] for v in gather_stages.values()),
+            "carried_all_gathers": stats["prefetch"]["carried_all_gathers"],
+            "total_wire_bytes": stats["total_wire_bytes"],
+            "losses": losses,
+        }
+    out["loss_bitwise_equal"] = out["serial"]["losses"] \
+        == out["prefetch"]["losses"]
+    out["speedup"] = round(
+        out["serial"]["us_per_step"] / out["prefetch"]["us_per_step"], 3)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

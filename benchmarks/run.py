@@ -376,6 +376,44 @@ def bench_fig16_fidelity():
 
 
 # ---------------------------------------------------------------------------
+# CommEngine — serial vs double-buffered prefetch gather schedules
+# ---------------------------------------------------------------------------
+
+def bench_comm_schedules():
+    """Per-step wall time + gathered bytes for the serial vs prefetch layer
+    schedules on the 8-virtual-device host mesh (p=4, tp=2); seeds the perf
+    trajectory in artifacts/benchmarks/BENCH_comm.json.  Runs as a
+    subprocess so this process keeps its single CPU device."""
+    import pathlib as _pl
+    import subprocess
+    import sys
+
+    script = _pl.Path(__file__).parent / "comm_bench.py"
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True, text=True, timeout=1800,
+        cwd=str(script.parent.parent),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": str(_pl.Path.home()), "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    data = json.loads(proc.stdout[proc.stdout.index("{"):])
+    RESULTS["comm_schedules"] = data
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_comm.json").write_text(json.dumps(data, indent=1))
+    assert data["loss_bitwise_equal"], "prefetch changed the loss!"
+    ser, pre = data["serial"], data["prefetch"]
+    emit("comm_prefetch_schedule", pre["us_per_step"],
+         f"serial={ser['us_per_step']:.0f}us prefetch={pre['us_per_step']:.0f}"
+         f"us ({data['speedup']:.2f}x); gathers issued one layer ahead "
+         f"(carried={pre['carried_all_gathers']}, serial="
+         f"{ser['carried_all_gathers']}); gathered wire bytes/step "
+         f"{pre['gathered_wire_bytes']:.2e} vs {ser['gathered_wire_bytes']:.2e}"
+         f" (prefetch trades backward re-gathers for carry residuals); "
+         f"losses bitwise equal")
+
+
+# ---------------------------------------------------------------------------
 # Table 1 — model zoo parameter counts
 # ---------------------------------------------------------------------------
 
@@ -451,6 +489,7 @@ BENCHES = [
     bench_fig14_two_hop,
     bench_fig15_impl_opts,
     bench_fig16_fidelity,
+    bench_comm_schedules,
     bench_table1_model_zoo,
     bench_roofline_table,
     bench_kernel_walltime,

@@ -1,0 +1,143 @@
+"""JAX version compatibility shims.
+
+The framework targets the modern JAX API surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``, ``axis_types=`` on mesh
+constructors) but must also run on JAX 0.4.x, where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and its
+    replication-checking kwarg is spelled ``check_rep``;
+  * ``jax.sharding.AxisType`` does not exist (all mesh axes behave like
+    ``Auto``);
+  * neither ``jax.make_mesh`` nor ``Mesh`` accepts ``axis_types``.
+
+Everything version-sensitive is funneled through this module so the rest of
+the codebase imports one spelling.  topology.py, mics.py, serving.py and the
+test harnesses import from here, never from ``jax``/``jax.experimental``
+directly.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["AxisType", "HAS_AXIS_TYPES", "shard_map", "make_mesh",
+           "mesh_from_devices", "tpu_compiler_params"]
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:  # JAX >= 0.5: explicit-sharding axis types exist
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # JAX 0.4.x: every axis is implicitly "Auto"
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on JAX 0.4.x.
+
+        Only used as a label; meshes on 0.4.x are always fully automatic,
+        which is exactly the behaviour the framework asks for.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+try:  # modern spelling
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kwargs):
+    """``jax.shard_map`` with the ``check_vma`` kwarg on every JAX version.
+
+    On 0.4.x the same knob is called ``check_rep``; the shim translates.
+    Unknown extra kwargs are passed through (and will raise where
+    unsupported, which is the right failure mode).
+    """
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+    jax.make_mesh).parameters
+
+try:
+    _MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+        Mesh.__init__).parameters
+except (TypeError, ValueError):  # builtin/uninspectable __init__ on 0.4.x
+    _MESH_HAS_AXIS_TYPES = False
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types=None) -> Mesh:
+    """``jax.make_mesh`` accepting ``axis_types`` on every JAX version."""
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str],
+                      axis_types=None) -> Mesh:
+    """``Mesh(devices, names)`` accepting ``axis_types`` on every version."""
+    if axis_types is not None and _MESH_HAS_AXIS_TYPES:
+        try:
+            return Mesh(devices, axis_names, axis_types=axis_types)
+        except TypeError:
+            pass
+    return Mesh(devices, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU compiler params
+# ---------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# compiled-executable introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    JAX 0.4.x returns a list with one properties-dict per device; newer
+    versions return the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

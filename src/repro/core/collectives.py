@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.topology import MiCSTopology
+from repro.core.topology import MiCSTopology, default_hierarchy_inner
 
 
 # ---------------------------------------------------------------------------
@@ -97,9 +97,7 @@ def _hierarchical_single_axis(
 ) -> jax.Array:
     # factor p = outer * inner
     if inner is None:
-        inner = 1
-        while inner * inner <= p // 2 and p % (inner * 2) == 0:
-            inner *= 2
+        inner = default_hierarchy_inner(p)
     if p % inner != 0:
         raise ValueError(f"inner={inner} does not divide p={p}")
     outer = p // inner
@@ -177,7 +175,98 @@ def _reorder_chunks(buf: jax.Array, axis: int, inner: int, outer: int) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
-# partition-group gather front-end (what mics.py calls)
+# hierarchical reduce-scatter (the exact adjoint of the staged gather)
+# ---------------------------------------------------------------------------
+
+def hierarchical_reduce_scatter(
+    g: jax.Array,
+    topo: MiCSTopology,
+    *,
+    axis: int = 0,
+    order: str = "inner_first",
+    inner: int | None = None,
+) -> jax.Array:
+    """Reduce-scatter ``g`` over the partition group, staged over the
+    hierarchy — the linear transpose of ``hierarchical_all_gather`` with the
+    same ``order``/``inner`` (stages run in reverse, each all-gather becomes
+    a ``psum_scatter`` over the same ``axis_index_groups``, the paper's
+    reorder stage becomes its inverse permutation).
+
+    This is what makes every gather policy's adjoint *exact*: hop-1 gradient
+    synchronization (§3.4) is this function, whether reached implicitly via
+    autodiff or through the CommEngine's centralized ``custom_vjp``.
+    """
+    p = topo.partition_size
+    if p == 1:
+        return g
+    if len(topo.partition_axes) > 1:
+        return _hier_rs_multi_axis(g, topo, axis=axis, order=order)
+    return _hier_rs_single_axis(
+        g, topo.partition_axes[0], p, axis=axis, order=order, inner=inner
+    )
+
+
+def _hier_rs_single_axis(
+    g: jax.Array,
+    axis_name: str,
+    p: int,
+    *,
+    axis: int,
+    order: str,
+    inner: int | None,
+) -> jax.Array:
+    if inner is None:
+        inner = default_hierarchy_inner(p)
+    if p % inner != 0:
+        raise ValueError(f"inner={inner} does not divide p={p}")
+    outer = p // inner
+    if inner == 1 or outer == 1:
+        return lax.psum_scatter(g, axis_name, scatter_dimension=axis, tiled=True)
+
+    outer_groups, inner_groups = _stage_groups(p, inner)
+
+    if order == "outer_first":
+        # forward: AG(outer) -> AG(inner) -> reorder [r,o]->[o,r]
+        # adjoint: reorder [o,r]->[r,o] -> RS(inner) -> RS(outer)
+        g = _reorder_chunks(g, axis, outer, inner)
+        g = lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                             tiled=True, axis_index_groups=inner_groups)
+        return lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                                tiled=True, axis_index_groups=outer_groups)
+    elif order == "inner_first":
+        # forward: AG(inner) -> AG(outer);  adjoint: RS(outer) -> RS(inner)
+        g = lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                             tiled=True, axis_index_groups=outer_groups)
+        return lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                                tiled=True, axis_index_groups=inner_groups)
+    raise ValueError(f"unknown order {order!r}")
+
+
+def _hier_rs_multi_axis(
+    g: jax.Array, topo: MiCSTopology, *, axis: int, order: str
+) -> jax.Array:
+    axes = topo.partition_axes
+    if order == "inner_first":
+        # forward applied gathers fast->slow, so the last-applied gather is
+        # axes[0]; the adjoint scatters slow->fast.
+        out = g
+        for name in axes:
+            out = lax.psum_scatter(out, name, scatter_dimension=axis, tiled=True)
+        return out
+    elif order == "outer_first":
+        sizes = [topo.axis_size(a) for a in axes]
+        inner = 1
+        for s in sizes[1:]:
+            inner *= s
+        out = _reorder_chunks(g, axis, sizes[0], inner)  # inverse of forward
+        for name in reversed(axes):
+            out = lax.psum_scatter(out, name, scatter_dimension=axis, tiled=True)
+        return out
+    raise ValueError(f"unknown order {order!r}")
+
+
+# ---------------------------------------------------------------------------
+# partition-group gather front-end (what comm.py builds policies from)
 # ---------------------------------------------------------------------------
 
 def partition_all_gather(

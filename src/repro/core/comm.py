@@ -1,0 +1,274 @@
+"""CommEngine: the single construction point for every MiCS collective.
+
+The paper's win comes from *who* talks (partition groups of size p, §3.2) and
+*how* they talk (hierarchical staging §3.3, coalesced flat buffers §4,
+two-hop gradient sync §3.4).  Before this module those policy decisions were
+smeared across ``collectives.py``, ``mics.py``, ``quant.py`` and
+``serving.py`` as ad-hoc flags; here they are one object:
+
+* :class:`GatherPolicy` — per-pool choice of collective **topology**
+  (``flat`` single collective / ``inner_first`` 2-stage / ``outer_first``
+  paper-faithful 3-stage), **wire dtype** (``fp32`` / ``bf16`` / ``int8``
+  blockwise-quantized à la ZeRO++ qwZ — subsuming the old serving-only
+  ``quant.py`` path), and the **double-buffered prefetch schedule** (layer
+  i+1's all-gather issued during layer i's compute).
+* :class:`SyncPolicy` — hop-1 adjoint mode (exact staged reduce-scatter vs
+  the Fig-14 ``allreduce_slice`` ablation) and hop-2 wire compression.
+* :class:`CommEngine` — binds the policies to a :class:`MiCSTopology` and
+  owns the **centralized custom-VJP machinery**: each forward gather policy
+  is paired with its *exact* adjoint reduce-scatter
+  (``collectives.hierarchical_reduce_scatter`` mirrors the gather stages in
+  reverse), so hop-1 gradient synchronization materializes identically for
+  every topology/wire combination from plain ``jax.grad``.
+
+Consumers (``mics.build_train_step``, ``runtime/serving.py``,
+``launch/dryrun.py``, ``benchmarks``) construct a CommEngine from
+``MiCSConfig``/``MiCSTopology`` via :meth:`CommEngine.from_config` and never
+touch raw collectives again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as C
+from repro.core import quant as Q
+from repro.core.flat_param import model_gather_fn_for
+from repro.core.topology import MODEL_AXIS, MiCSTopology, hierarchy_factors
+
+GATHER_TOPOLOGIES = ("flat", "inner_first", "outer_first")
+WIRE_DTYPES = ("fp32", "bf16", "int8")
+SYNC_MODES = ("2hop", "allreduce_slice")
+
+_WIRE_JNP = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherPolicy:
+    """How a flat-param pool is all-gathered across its partition group."""
+
+    topology: str = "inner_first"  # 'flat' | 'inner_first' | 'outer_first'
+    wire_dtype: str = "bf16"       # 'fp32' | 'bf16' | 'int8' (ZeRO++ qwZ)
+    inner: int | None = None       # intra-"node" factor for staged gathers
+    prefetch: bool = True          # one-slot lookahead layer scan
+
+    def __post_init__(self):
+        if self.topology not in GATHER_TOPOLOGIES:
+            raise ValueError(f"unknown gather topology {self.topology!r}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(f"unknown wire dtype {self.wire_dtype!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPolicy:
+    """How gradients synchronize (paper §3.4)."""
+
+    mode: str = "2hop"             # '2hop' | 'allreduce_slice' (Fig 14)
+    hop2_wire_dtype: str = "fp32"  # 'fp32' | 'bf16' compressed hop 2
+
+    def __post_init__(self):
+        if self.mode not in SYNC_MODES:
+            raise ValueError(f"unknown sync mode {self.mode!r}")
+        if self.hop2_wire_dtype not in ("fp32", "bf16"):
+            raise ValueError(f"unknown hop-2 wire dtype {self.hop2_wire_dtype!r}")
+
+
+class CommEngine:
+    """Owns every parameter-gather and gradient-sync collective of one run.
+
+    One engine per (topology, policy) pair; construction is cheap and the
+    engine is closed over by jitted step functions (all members are static).
+    """
+
+    def __init__(
+        self,
+        topo: MiCSTopology,
+        gather_policy: GatherPolicy = GatherPolicy(),
+        sync_policy: SyncPolicy = SyncPolicy(),
+        *,
+        compute_dtype: Any = jnp.bfloat16,
+        model_axis: str = MODEL_AXIS,
+    ):
+        self.topo = topo
+        self.gather_policy = gather_policy
+        self.sync_policy = sync_policy
+        self.compute_dtype = compute_dtype
+        self.model_axis = model_axis
+        self._model_gather_fn = model_gather_fn_for(model_axis, topo.model_size)
+        self._gather_vjp = self._build_gather_vjp()
+        self._quant_gather_vjp = self._build_quant_gather_vjp()
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_config(cls, topo: MiCSTopology, mcfg) -> "CommEngine":
+        """Map a ``MiCSConfig`` onto gather/sync policies (the one place the
+        legacy flags are interpreted)."""
+        topology = mcfg.gather_order if mcfg.hierarchical else "flat"
+        compute = jnp.dtype(mcfg.gather_dtype)
+        if mcfg.quant_gather:
+            wire = "int8"
+        else:
+            wire = "bf16" if compute == jnp.dtype(jnp.bfloat16) else "fp32"
+        gp = GatherPolicy(
+            topology=topology,
+            wire_dtype=wire,
+            inner=mcfg.hierarchy_inner,
+            prefetch=getattr(mcfg, "prefetch", True),
+        )
+        sp = SyncPolicy(
+            mode=mcfg.sync_mode,
+            hop2_wire_dtype="bf16" if mcfg.compress_hop2 else "fp32",
+        )
+        return cls(topo, gp, sp, compute_dtype=mcfg.gather_dtype)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def prefetch(self) -> bool:
+        return self.gather_policy.prefetch
+
+    @property
+    def partition_size(self) -> int:
+        return self.topo.partition_size
+
+    def describe(self) -> dict:
+        """Static policy record (dry-run artifacts, BENCH json)."""
+        outer, inner = hierarchy_factors(self.topo, self.gather_policy.inner) \
+            if self.topo.partition_size > 1 else (1, 1)
+        return {
+            "gather": dataclasses.asdict(self.gather_policy),
+            "sync": dataclasses.asdict(self.sync_policy),
+            "compute_dtype": jnp.dtype(self.compute_dtype).name,
+            "partition_axes": list(self.topo.partition_axes),
+            "replication_axes": list(self.topo.replication_axes),
+            "partition_size": self.topo.partition_size,
+            "replication_degree": self.topo.replication_degree,
+            "hierarchy": {"outer": outer, "inner": inner},
+        }
+
+    # -- raw policy collectives (no VJP override) ---------------------------
+    def _policy_all_gather(self, x: jax.Array) -> jax.Array:
+        gp = self.gather_policy
+        if self.topo.partition_size == 1:
+            return x
+        if gp.topology == "flat":
+            return C.flat_all_gather(x, self.topo.partition_axes)
+        return C.hierarchical_all_gather(
+            x, self.topo, order=gp.topology, inner=gp.inner)
+
+    def _policy_reduce_scatter(self, g: jax.Array) -> jax.Array:
+        gp = self.gather_policy
+        if self.topo.partition_size == 1:
+            return g
+        if gp.topology == "flat":
+            return C.hop1_reduce_scatter(g, self.topo)
+        return C.hierarchical_reduce_scatter(
+            g, self.topo, order=gp.topology, inner=gp.inner)
+
+    # -- centralized custom-VJP gathers -------------------------------------
+    def _adjoint(self, ct: jax.Array) -> jax.Array:
+        """Hop-1 of §3.4 — or the Fig-14 alternative schedule's full
+        all-reduce + slice when the ablation is selected."""
+        if self.sync_policy.mode == "allreduce_slice":
+            return C.alternative_sync(ct, self.topo)
+        return self._policy_reduce_scatter(ct)
+
+    def _build_gather_vjp(self):
+        @jax.custom_vjp
+        def gather(row):
+            return self._policy_all_gather(row)
+
+        def fwd(row):
+            return self._policy_all_gather(row), None
+
+        def bwd(_, ct):
+            return (self._adjoint(ct),)
+
+        gather.defvjp(fwd, bwd)
+        return gather
+
+    def _build_quant_gather_vjp(self):
+        """int8 blockwise-quantized wire gather (ZeRO++ qwZ analogue).
+
+        Forward: quantize the local fp32 shard to (int8 q, f32 block scales),
+        all-gather both with the policy topology, dequantize to the compute
+        dtype.  Backward: straight-through — the exact adjoint reduce-scatter
+        of the *unquantized* gather, in fp32 (gradients are never quantized).
+        """
+
+        def q_gather(row):
+            q, s = Q.quantize_flat(row)
+            qg = self._policy_all_gather(q)
+            sg = self._policy_all_gather(s)
+            return Q.dequantize_flat(qg, sg, dtype=self.compute_dtype)
+
+        @jax.custom_vjp
+        def gather(row):
+            return q_gather(row)
+
+        def fwd(row):
+            return q_gather(row), None
+
+        def bwd(_, ct):
+            return (self._adjoint(ct.astype(jnp.float32)),)
+
+        gather.defvjp(fwd, bwd)
+        return gather
+
+    # -- public gather API --------------------------------------------------
+    def gather_flat(self, row) -> jax.Array:
+        """Gather one layer's flat shard into the full flat buffer.
+
+        ``row`` is either a float shard ``[S_local]`` or a pre-quantized
+        serving dict ``{'q': int8, 's': f32}`` (``quant.quantize_state``).
+        Float wires return the buffer in the wire dtype (which doubles as
+        the compute dtype — ``from_config`` keeps them identical); int8
+        and stored-int8 rows dequantize to ``compute_dtype``.  One call per
+        layer — the coalesced communication of paper §4 by construction.
+        """
+        gp = self.gather_policy
+        if isinstance(row, dict):  # stored-int8 serving weights
+            qg = self._policy_all_gather(row["q"])
+            sg = self._policy_all_gather(row["s"])
+            return Q.dequantize_flat(qg, sg, dtype=self.compute_dtype)
+        if gp.wire_dtype == "int8":
+            if self.topo.partition_size == 1:  # nothing on the wire
+                return row.astype(self.compute_dtype)
+            return self._quant_gather_vjp(row)
+        return self._gather_vjp(row.astype(_WIRE_JNP[gp.wire_dtype]))
+
+    def unflatten(self, pool, full: jax.Array) -> dict[str, jax.Array]:
+        """Rebuild layer tensors, reassembling model-axis-sharded segments."""
+        return pool.layout.unflatten(full, model_gather_fn=self._model_gather_fn)
+
+    def gather(self, pool, row) -> dict[str, jax.Array]:
+        return self.unflatten(pool, self.gather_flat(row))
+
+    # -- gradient synchronization ------------------------------------------
+    def hop1_reduce_scatter(self, g: jax.Array) -> jax.Array:
+        """Explicit hop-1 (tests / alternative schedules); normally this
+        arises as the VJP of :meth:`gather_flat`."""
+        return self._policy_reduce_scatter(g)
+
+    def hop2(self, g: jax.Array) -> jax.Array:
+        """Replication-group all-reduce at the gradient-accumulation
+        boundary (§3.4 hop 2), with optional bf16 wire compression.  A no-op
+        under the alternative schedule (its backward already all-reduced
+        globally)."""
+        if self.sync_policy.mode != "2hop":
+            return g
+        if self.sync_policy.hop2_wire_dtype == "bf16":
+            g = g.astype(jnp.bfloat16)
+        g = C.hop2_all_reduce(g, self.topo)
+        return g.astype(jnp.float32)
+
+    # -- misc reductions -----------------------------------------------------
+    def partition_coord(self):
+        """Linearized index of this device within its partition group."""
+        return C._partition_coord(self.topo)
+
+    def replica_mean(self, x: jax.Array) -> jax.Array:
+        return C.replica_mean(x, self.topo)

@@ -6,39 +6,41 @@ Schedule (one jitted step = one gradient-accumulation boundary, s micro-steps):
 
   for each micro-step (lax.scan):
       per layer (lax.scan inside the model):
-          all-gather the layer's bf16 flat shard across the partition group
-          (hierarchical, §3.3); compute under jax.checkpoint (backward
-          re-gathers — ZeRO-3 semantics + activation checkpointing)
-      backward: the gather's adjoint reduce-scatters gradients across the
-          partition group  -> hop 1 (§3.4), accumulated in fp32 shards
+          all-gather the layer's flat shard across the partition group
+          (policy topology + wire dtype, §3.3) — issued one layer AHEAD of
+          its compute under the default double-buffered prefetch schedule;
+          compute under jax.checkpoint (ZeRO-3 semantics + activation
+          checkpointing)
+      backward: the gather's custom-VJP adjoint reduce-scatters gradients
+          across the partition group -> hop 1 (§3.4), accumulated in fp32
   at the boundary:
       psum over replication axes                 -> hop 2 (§3.4)
       global-norm clip, AdamW on fp32 shards (optimizer states partitioned)
 
-ZeRO-3 baseline = partition_axes spanning every data axis (hop 2 vanishes).
-Alternative schedule (Fig 14) = all-reduce full gradient each micro-step then
-slice — implemented by overriding the gather's custom_vjp.
+Every collective above is owned by ONE ``CommEngine`` (core/comm.py, see
+DESIGN.md §4) built from (MiCSTopology, MiCSConfig).  ZeRO-3 baseline =
+partition_axes spanning every data axis (hop 2 vanishes).  Alternative
+schedule (Fig 14) = all-reduce full gradient each micro-step then slice —
+selected by SyncPolicy, realized in the gather's custom_vjp.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import collectives as C
-from repro.core.flat_param import model_gather_fn_for
+from repro.compat import shard_map
+from repro.core.comm import CommEngine
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.models import layers as L
 from repro.models import lm
-from repro.models.lm import ModelDef, Pool
+from repro.models.lm import ModelDef
 from repro.optim.adamw import OptConfig, adamw_shard_update
 
 
@@ -55,54 +57,8 @@ class MiCSConfig:
     compress_hop2: bool = False         # bf16-compressed cross-replica hop 2
     scores_bf16: bool = False           # bf16 attention scores (§Perf)
     mlstm_chunk: int = 0                # chunkwise-parallel mLSTM (§Perf)
-    quant_gather: bool = False          # int8 serving-weight gathers (§Perf)
-
-
-# ---------------------------------------------------------------------------
-# parameter gathering
-# ---------------------------------------------------------------------------
-
-def make_gather_fn(topo: MiCSTopology, mcfg: MiCSConfig) -> Callable:
-    """Returns gather(pool, flat_shard_row) -> dict of layer tensors."""
-    mg = model_gather_fn_for(MODEL_AXIS, topo.model_size)
-
-    def ag(row):
-        return C.partition_all_gather(
-            row, topo, hierarchical=mcfg.hierarchical,
-            order=mcfg.gather_order, inner=mcfg.hierarchy_inner,
-        )
-
-    if mcfg.sync_mode == "allreduce_slice":
-        # DeepSpeed's default schedule (paper §3.4 "alternative"): the gather
-        # adjoint all-reduces the *full* gradient over every data device each
-        # micro-step and keeps the local slice.  Numerically identical to
-        # 2-hop, strictly more communication — the Fig 14 ablation.
-        @jax.custom_vjp
-        def gather_full(row):
-            return ag(row)
-
-        def fwd(row):
-            return ag(row), None
-
-        def bwd(_, ct):
-            return (C.alternative_sync(ct, topo),)
-
-        gather_full.defvjp(fwd, bwd)
-    else:
-        gather_full = ag
-
-    def gather(pool: Pool, row) -> dict[str, jax.Array]:
-        if isinstance(row, dict):  # int8 serving weights: {'q':…, 's':…}
-            from repro.core.quant import dequantize_flat
-
-            q = gather_full(row["q"])
-            s = gather_full(row["s"])
-            full = dequantize_flat(q, s, dtype=mcfg.gather_dtype)
-        else:
-            full = gather_full(row.astype(mcfg.gather_dtype))
-        return pool.layout.unflatten(full, model_gather_fn=mg)
-
-    return gather
+    quant_gather: bool = False          # int8 wire / serving-weight gathers
+    prefetch: bool = True               # double-buffered lookahead gathers
 
 
 # ---------------------------------------------------------------------------
@@ -154,7 +110,16 @@ def batch_pspecs(model: ModelDef, topo: MiCSTopology, *, micro: bool = True):
 
 
 def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
-    """Materialize sharded fp32 state (for runnable-scale models)."""
+    """Materialize sharded fp32 state (for runnable-scale models).
+
+    The init is computed on a single device and distributed with
+    ``device_put``.  Jitting it with sharded+replicated ``out_shardings``
+    is NOT equivalent: XLA's SPMD partitioner may establish the replicated
+    axes by all-reducing identical per-replica contributions, which *sums*
+    them — observed doubling every parameter on CPU meshes with a
+    replication axis (pod/repl > 1).  device_put is exact and makes the
+    initial state a pure function of (model, seed), independent of topology.
+    """
     shapes = model.global_flat_shapes()
     shardings = state_shardings(model, topo)
 
@@ -177,8 +142,8 @@ def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
             "step": jnp.int32(0),
         }
 
-    with topo.mesh:
-        return jax.jit(_init, out_shardings=shardings)(jax.random.key(seed))
+    state = jax.jit(_init)(jax.random.key(seed))
+    return jax.device_put(state, shardings)
 
 
 # ---------------------------------------------------------------------------
@@ -191,16 +156,21 @@ def build_train_step(
     mcfg: MiCSConfig,
     oc: OptConfig,
 ):
-    """Returns a jitted (state, batch) -> (state, metrics) step function."""
-    gather = make_gather_fn(topo, mcfg)
+    """Returns a jitted (state, batch) -> (state, metrics) step function.
+
+    All collectives — the per-layer hop-1 gathers and their adjoint
+    reduce-scatters, and the boundary hop-2 all-reduce — are owned by one
+    ``CommEngine`` constructed from (topo, mcfg).
+    """
+    comm = CommEngine.from_config(topo, mcfg)
     ctx = L.Ctx(mode="train", tp=topo.model_size, tp_axis=MODEL_AXIS,
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
     s = mcfg.micro_steps
     denom = float(s * topo.data_parallel_size)
-    shard_coord = functools.partial(C._partition_coord, topo)
+    shard_coord = comm.partition_coord
 
     def loss_of(flat, micro_batch):
-        return lm.loss_fn(model, flat, gather, ctx, micro_batch)
+        return lm.loss_fn(model, flat, comm, ctx, micro_batch)
 
     def sharded_step(state, batch):
         params = state["params"]
@@ -219,13 +189,7 @@ def build_train_step(
             micro, (zeros, jnp.float32(0.0), jnp.float32(0.0)), batch)
 
         # ---- hop 2: replication-group all-reduce at the boundary ----------
-        if mcfg.sync_mode == "2hop":
-            def hop2(g):
-                if mcfg.compress_hop2:
-                    g = g.astype(jnp.bfloat16)
-                g = C.hop2_all_reduce(g, topo)
-                return g.astype(jnp.float32)
-            grads = jax.tree.map(hop2, grads)
+        grads = jax.tree.map(comm.hop2, grads)
         grads = jax.tree.map(lambda g: g / denom, grads)
 
         # ---- global-norm clip ---------------------------------------------

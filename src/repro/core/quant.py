@@ -1,4 +1,10 @@
-"""Int8 block-quantized parameter gathering for serving (§Perf cell B3).
+"""Int8 blockwise quantization primitives (ZeRO++ qwZ-style).
+
+These are the dtype-level building blocks; the *collective* policy that
+uses them — int8 wire gathers for training and serving, with the
+straight-through exact adjoint — lives in ``core/comm.py`` (CommEngine,
+``GatherPolicy.wire_dtype='int8'``).  ``quantize_state`` remains the
+deployment-time conversion producing stored ``{'q','s'}`` serving weights.
 
 Decode steps re-gather every layer's weights across the partition group each
 step; at batch sizes that fit real serving traffic this is the binding
@@ -12,8 +18,9 @@ the *collective* rather than the matmul:
              s  f32  [*, flat_len/BLOCK] (absmax scale per 128-elem block)
     use:     all-gather(q) + all-gather(s)  ->  dequant  ->  unflatten
 
-Training is untouched (fp32 master states); quantization happens once at
-deployment (`quantize_state`).
+Master states stay fp32 either way: stored-int8 weights are a one-time
+deployment conversion (`quantize_state`), while training's int8 *wire*
+gathers quantize transiently per collective and keep gradients fp32.
 """
 
 from __future__ import annotations

@@ -23,7 +23,9 @@ from typing import Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import AxisType, make_mesh, mesh_from_devices
 
 # Mesh axis names, fixed across the framework.
 POD_AXIS = "pod"
@@ -55,7 +57,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """The assignment's production mesh: 16x16 per pod, 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (POD_AXIS, "data", MODEL_AXIS) if multi_pod else ("data", MODEL_AXIS)
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
 def make_mics_mesh(base: Mesh, partition_size: int, tp: int | None = None) -> Mesh:
@@ -86,7 +88,7 @@ def make_mics_mesh(base: Mesh, partition_size: int, tp: int | None = None) -> Me
         raise ValueError(f"tp {tp} does not divide model axis {model}")
     repl = data // partition_size
     devs = devices.reshape(pods, repl, partition_size, model // tp, tp)
-    return Mesh(devs, MICS_AXES, axis_types=_auto(5))
+    return mesh_from_devices(devs, MICS_AXES, axis_types=_auto(5))
 
 
 def make_host_mesh(
@@ -95,7 +97,7 @@ def make_host_mesh(
     """Small mesh over however many (virtual) devices exist — for tests."""
     n = pods * repl * shard * dp2 * model
     devs = np.array(jax.devices()[:n]).reshape(pods, repl, shard, dp2, model)
-    return Mesh(devs, MICS_AXES, axis_types=_auto(5))
+    return mesh_from_devices(devs, MICS_AXES, axis_types=_auto(5))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +226,17 @@ def choose_partition_size(
     )
 
 
+def default_hierarchy_inner(p: int) -> int:
+    """Default intra-"node" factor: the largest power-of-two ≤ sqrt(p) that
+    divides p — the 2-D analogue of the paper's (p/k nodes) × (k per node).
+    The single source of truth for the staged gather, its adjoint
+    reduce-scatter, and ``hierarchy_factors``."""
+    inner = 1
+    while inner * inner <= p // 2 and p % (inner * 2) == 0:
+        inner *= 2
+    return inner
+
+
 def hierarchy_factors(topo: MiCSTopology, inner: int | None = None) -> tuple[int, int]:
     """Factor the partition group as (outer, inner) for hierarchical comm.
 
@@ -237,9 +250,7 @@ def hierarchy_factors(topo: MiCSTopology, inner: int | None = None) -> tuple[int
         outer = topo.axis_size(topo.partition_axes[0])
         return outer, p // outer
     if inner is None:
-        inner = 1
-        while inner * inner <= p // 2 and p % (inner * 2) == 0:
-            inner *= 2
+        inner = default_hierarchy_inner(p)
     if p % inner != 0:
         raise ValueError(f"inner factor {inner} does not divide p={p}")
     return p // inner, inner

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, block_t: int):
     ti = pl.program_id(2)
@@ -66,7 +68,7 @@ def rglru(
         out_specs=pl.BlockSpec((1, block_t, block_c), lambda i, j, k: (i, k, j)),
         out_shape=jax.ShapeDtypeStruct((bsz, t, c), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_c,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, get_config
+from repro.core.comm import CommEngine
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state_shapes, make_batch_shapes,
 )
@@ -104,6 +105,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         "active_params": active_param_count(cfg),
         "micro_steps": TRAIN_MICRO_STEPS if spec["kind"] == "train" else 1,
         "mics": dataclasses.asdict(mcfg) | {"gather_dtype": "bf16"},
+        "comm": CommEngine.from_config(topo, mcfg).describe(),
         "tag": tag,
     }
 
@@ -162,7 +164,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
                       "generated_code_size_in_bytes")
             if hasattr(ma, k)
         }
-    ca = compiled.cost_analysis()
+    from repro.compat import cost_analysis
+
+    ca = cost_analysis(compiled)
     # NB: XLA's cost analysis visits while bodies ONCE (no trip weighting);
     # kept raw for reference.  The roofline uses the trip-weighted stats.
     record["cost_analysis_raw"] = {
@@ -172,7 +176,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
 
     mesh_shape = dict(zip(topo.mesh.axis_names,
                           topo.mesh.devices.shape))
-    record["stats"] = analyze(compiled.as_text(), mesh_shape)
+    record["stats"] = analyze(
+        compiled.as_text(), mesh_shape,
+        partition_axes=topo.partition_axes,
+        replication_axes=topo.replication_axes)
     record["total_s"] = round(time.time() - t0, 1)
 
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -196,7 +203,9 @@ def main():
     ap.add_argument("--zero3", action="store_true")
     ap.add_argument("--bf16-scores", action="store_true")
     ap.add_argument("--quant-gather", action="store_true",
-                    help="int8 block-quantized serving-weight gathers")
+                    help="int8 block-quantized wire/serving-weight gathers")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="double-buffered lookahead gathers (0 = serial)")
     ap.add_argument("--mlstm-chunk", type=int, default=0)
     ap.add_argument("--tp", type=int, default=0)
     ap.add_argument("--serve-footprint", action="store_true",
@@ -213,6 +222,7 @@ def main():
         scores_bf16=args.bf16_scores,
         mlstm_chunk=args.mlstm_chunk,
         quant_gather=args.quant_gather,
+        prefetch=bool(args.prefetch),
     )
 
     todo = []
@@ -232,9 +242,11 @@ def main():
                                partition_size=args.partition_size or None,
                                zero3=args.zero3, tp=args.tp or None,
                                serve_footprint=args.serve_footprint)
+                pf = rec["stats"]["prefetch"]
                 print(f"OK   {label}: compile={rec['compile_s']}s "
                       f"flops={rec['stats']['dot_flops']:.3e} "
-                      f"wire={rec['stats']['total_wire_bytes']:.3e}B",
+                      f"wire={rec['stats']['total_wire_bytes']:.3e}B "
+                      f"carried_gathers={pf['carried_all_gathers']}",
                       flush=True)
             except Exception as e:  # noqa: BLE001
                 failures += 1

@@ -1,12 +1,26 @@
-"""Model assembly: pools of stacked layers + embedding/head, with the
-parameter-gathering hook injected by the MiCS runtime.
+"""Model assembly: pools of stacked layers + embedding/head, with all
+parameter-gather collectives routed through the MiCS ``CommEngine``.
 
 A ``Pool`` is a stack of identical superblocks whose parameters live in one
 flat buffer per layer (``[stack, tp, flat_len]`` globally).  The forward pass
-scans over the stack; the scan body gathers the layer's flat shard across the
+scans over the stack; each layer's flat shard is gathered across the
 partition group (one collective per layer — the paper's coalesced gather),
-unflattens, and applies the block under ``jax.checkpoint`` so the backward
-pass re-gathers (ZeRO-3 semantics + activation checkpointing).
+unflattened, and applied under ``jax.checkpoint`` so the backward pass
+re-gathers (ZeRO-3 semantics + activation checkpointing).
+
+Two schedules exist (``CommEngine.prefetch`` selects):
+
+* **serial** — gather layer i, compute layer i (the seed behaviour; every
+  gather blocks compute).
+* **double-buffered prefetch** — the scan carries layer i's gathered flat
+  buffer while its body *issues layer i+1's all-gather before running layer
+  i's compute*.  The gather has no data dependency on the current layer's
+  math, so XLA's scheduler can overlap it with the matmuls — the ZeRO-3
+  style prefetch MiCS assumes.  Loss is bitwise identical to the serial
+  schedule (same gathers, same compute, same order of adds); the trade-off
+  is that the carried buffer becomes a per-layer scan residual for the
+  backward pass (DESIGN.md §4 quantifies this against the serial schedule's
+  re-gather).
 """
 
 from __future__ import annotations
@@ -70,12 +84,23 @@ def _row(x, idx=(0,)):
 
 def _apply_pool(
     pool: Pool, flat_rows, x: jax.Array, ctx: L.Ctx,
-    gather_fn, caches=None,
+    comm, caches=None,
 ):
-    """Scan a pool over its stack.  flat_rows: [stack, 1, S_local] leaves."""
+    """Scan a pool over its stack.  flat_rows: [stack, 1, S_local] leaves.
+
+    ``comm`` is the CommEngine owning every gather collective; its
+    ``prefetch`` policy selects the serial or double-buffered schedule.
+    """
+    if getattr(comm, "prefetch", False) and pool.stack > 1:
+        return _apply_pool_prefetch(pool, flat_rows, x, ctx, comm, caches)
+    return _apply_pool_serial(pool, flat_rows, x, ctx, comm, caches)
+
+
+def _apply_pool_serial(pool, flat_rows, x, ctx, comm, caches):
+    """Reference schedule: gather layer i, then compute layer i."""
 
     def inner(x, row, cache):
-        tensors = gather_fn(pool, _row(row))
+        tensors = comm.gather(pool, _row(row))
         (x, aux), new_cache = pool.apply(tensors, x, ctx, cache)
         return x, aux, new_cache
 
@@ -98,6 +123,52 @@ def _apply_pool(
         return (x, aux_tot + aux), new_cache
 
     (x, aux), new_caches = lax.scan(body, (x, jnp.float32(0.0)), (flat_rows, caches))
+    return x, aux, new_caches
+
+
+def _apply_pool_prefetch(pool, flat_rows, x, ctx, comm, caches):
+    """Double-buffered schedule: the carry holds layer i's gathered flat
+    buffer; the body issues layer i+1's all-gather *before* layer i's
+    compute, so the collective overlaps the matmuls.  The scanned inputs are
+    the rows rotated one slot left (iteration i sees row i+1); the prologue
+    gathers row 0.  The final iteration's wrap-around gather of row 0 is the
+    one redundant collective of the schedule (its result is discarded).
+
+    Bitwise equivalence to the serial schedule: the same gather policy runs
+    on the same shards, unflatten/compute run in the same order, and the
+    aux accumulation order is unchanged.  ``jax.checkpoint`` wraps the body,
+    so the backward pass recomputes unflatten+compute from the carried
+    buffer (and the lookahead gather) instead of storing activations.
+    """
+    nxt_rows = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), flat_rows)
+    cur0 = comm.gather_flat(_row(flat_rows, (0, 0)))
+
+    def inner(x, cur_full, nxt_row, cache):
+        nxt_full = comm.gather_flat(_row(nxt_row))  # layer i+1, issued first
+        tensors = comm.unflatten(pool, cur_full)     # layer i, from the carry
+        (x, aux), new_cache = pool.apply(tensors, x, ctx, cache)
+        return x, aux, nxt_full, new_cache
+
+    inner = jax.checkpoint(inner)
+
+    if caches is None:
+
+        def body(carry, nxt_row):
+            x, aux_tot, cur = carry
+            x, aux, nxt, _ = inner(x, cur, nxt_row, None)
+            return (x, aux_tot + aux, nxt), None
+
+        (x, aux, _), _ = lax.scan(body, (x, jnp.float32(0.0), cur0), nxt_rows)
+        return x, aux, None
+
+    def body(carry, xs):
+        x, aux_tot, cur = carry
+        nxt_row, cache = xs
+        x, aux, nxt, new_cache = inner(x, cur, nxt_row, cache)
+        return (x, aux_tot + aux, nxt), new_cache
+
+    (x, aux, _), new_caches = lax.scan(
+        body, (x, jnp.float32(0.0), cur0), (nxt_rows, caches))
     return x, aux, new_caches
 
 
@@ -134,17 +205,18 @@ def lm_logits(model: ModelDef, t_head, x, ctx: L.Ctx):
 def forward(
     model: ModelDef,
     flat: dict[str, jax.Array],
-    gather_fn,
+    comm,
     ctx: L.Ctx,
     batch: dict[str, jax.Array],
     caches: dict | None = None,
 ):
     """Run embedding -> pools -> final hidden states.
 
+    ``comm`` is the CommEngine (core/comm.py) that owns every gather.
     Returns (hidden, aux_loss, new_caches, t_head).
     """
     cfg = model.cfg
-    t_embed = gather_fn(model.embed, _row(flat["embed"], (0, 0)))
+    t_embed = comm.gather(model.embed, _row(flat["embed"], (0, 0)))
     aux_total = jnp.float32(0.0)
     new_caches: dict[str, Any] = {}
 
@@ -155,7 +227,7 @@ def forward(
             if not pool.name.startswith("enc"):
                 continue
             enc_x, aux, _ = _apply_pool(
-                pool, flat[pool.name], enc_x, enc_ctx, gather_fn, None)
+                pool, flat[pool.name], enc_x, enc_ctx, comm, None)
             aux_total = aux_total + aux
         ctx = dataclasses.replace(ctx, enc_out=enc_x)
     if cfg.family == "vlm" and ctx.mode != "decode":
@@ -168,24 +240,24 @@ def forward(
             continue
         pool_cache = caches.get(pool.name) if caches is not None else None
         x, aux, nc = _apply_pool(
-            pool, flat[pool.name], x, ctx, gather_fn, pool_cache)
+            pool, flat[pool.name], x, ctx, comm, pool_cache)
         aux_total = aux_total + aux
         if nc is not None:
             new_caches[pool.name] = nc
 
-    t_head = gather_fn(model.head, _row(flat["head"], (0, 0)))
+    t_head = comm.gather(model.head, _row(flat["head"], (0, 0)))
     return x, aux_total, new_caches, t_head
 
 
 def loss_fn(
     model: ModelDef,
     flat: dict[str, jax.Array],
-    gather_fn,
+    comm,
     ctx: L.Ctx,
     batch: dict[str, jax.Array],
 ):
     """Token cross-entropy + MoE aux.  batch: tokens/targets/mask [b, T]."""
-    hidden, aux, _, t_head = forward(model, flat, gather_fn, ctx, batch)
+    hidden, aux, _, t_head = forward(model, flat, comm, ctx, batch)
     logits = lm_logits(model, t_head, hidden, ctx)
     ce = L.tp_cross_entropy(
         logits, batch["targets"], batch["mask"].astype(jnp.float32),
@@ -202,7 +274,7 @@ def loss_fn(
 def prefill(
     model: ModelDef,
     flat: dict[str, jax.Array],
-    gather_fn,
+    comm,
     ctx: L.Ctx,
     batch: dict[str, jax.Array],
 ):
@@ -210,7 +282,7 @@ def prefill(
     ctx = dataclasses.replace(ctx, mode="prefill")
     caches = init_caches(model, batch["tokens"].shape[0], ctx.cache_len, prefill=True)
     hidden, _, new_caches, t_head = forward(
-        model, flat, gather_fn, ctx, batch, caches)
+        model, flat, comm, ctx, batch, caches)
     logits = lm_logits(model, t_head, hidden[:, -1:], ctx)
     return logits, new_caches
 
@@ -218,7 +290,7 @@ def prefill(
 def decode_step(
     model: ModelDef,
     flat: dict[str, jax.Array],
-    gather_fn,
+    comm,
     ctx: L.Ctx,
     tokens: jax.Array,          # [b, 1] current token ids
     pos: jax.Array,             # scalar absolute position
@@ -227,7 +299,7 @@ def decode_step(
     ctx = dataclasses.replace(ctx, mode="decode", pos=pos)
     batch = {"tokens": tokens}
     hidden, _, new_caches, t_head = forward(
-        model, flat, gather_fn, ctx, batch, caches)
+        model, flat, comm, ctx, batch, caches)
     logits = lm_logits(model, t_head, hidden, ctx)
     return logits, new_caches
 

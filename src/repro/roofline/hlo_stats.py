@@ -21,6 +21,19 @@ inputs from the HLO text itself, walking the computation graph and weighting
   * collective wire — ring-algorithm bytes per participant, attributed to
                       the mesh axes spanned by the replica group (decoded
                       from device ids), split ICI vs pod-crossing DCI.
+
+When the caller supplies the MiCS axis roles (``partition_axes`` /
+``replication_axes``), every collective is additionally attributed to a
+**policy stage** of the CommEngine (core/comm.py): ``param_gather.flat`` /
+``.inner`` / ``.outer`` for hop-1 gathers (the inner/outer split decoded
+from the replica-group coordinates: contiguous runs along a partition axis
+are the fast "intra-node" stage, strided groups the slow inter-node stage),
+``grad_rs.*`` for the adjoint reduce-scatters, ``hop2`` for the
+replication-group all-reduce, ``model_gather`` for tensor-parallel segment
+reassembly.  The census also reports **prefetch evidence**: all-gathers
+inside ``while`` bodies whose results flow into the loop carry without
+passing through any compute (dot) are gathers issued one layer *ahead* of
+their consumer — the double-buffered schedule's signature in optimized HLO.
 """
 
 from __future__ import annotations
@@ -88,6 +101,7 @@ class Instr:
     shape_str: str
     operands: list[str]
     line: str
+    root: bool = False
 
 
 @dataclasses.dataclass
@@ -119,7 +133,8 @@ def parse_module(text: str) -> tuple[dict, str | None]:
             continue
         name, shape_str, op, args = m.groups()
         operands = _OPERAND.findall(args)
-        ins = Instr(name, op, shape_str, operands, line)
+        ins = Instr(name, op, shape_str, operands, line,
+                    root=line.lstrip().startswith("ROOT"))
         cur.instrs.append(ins)
         cur.table[name] = shape_str
     return comps, entry
@@ -141,23 +156,82 @@ def _dot_flops(ins: Instr, table: dict) -> float:
     return 2.0 * out * k
 
 
-def _group_axes(group: list[int], mesh_shape: dict[str, int]) -> tuple[str, ...]:
+def _group_coords(group: list[int], mesh_shape: dict[str, int]) -> dict[str, list[int]]:
+    """Per-axis sorted coordinate sets spanned by one replica group."""
     names = list(mesh_shape)
     sizes = [mesh_shape[n] for n in names]
-    varying = set()
-    base = None
+    coords: dict[str, set] = {n: set() for n in names}
     for dev in group:
-        c = []
         rem = dev
+        c = []
         for s in reversed(sizes):
             c.append(rem % s)
             rem //= s
-        c = tuple(reversed(c))
-        base = base or c
-        for i, (a, b) in enumerate(zip(c, base)):
-            if a != b:
-                varying.add(names[i])
-    return tuple(n for n in names if n in varying)
+        for name, v in zip(names, reversed(c)):
+            coords[name].add(v)
+    return {n: sorted(v) for n, v in coords.items()}
+
+
+def _group_axes(group: list[int], mesh_shape: dict[str, int]) -> tuple[str, ...]:
+    coords = _group_coords(group, mesh_shape)
+    return tuple(n for n in mesh_shape if len(coords[n]) > 1)
+
+
+def _stage_label(
+    kind: str,
+    axes: tuple[str, ...],
+    group: list[int],
+    mesh_shape: dict[str, int],
+    partition_axes: tuple[str, ...],
+    replication_axes: tuple[str, ...],
+    model_axis: str,
+    nbytes: float = 0.0,
+) -> str:
+    """Attribute one collective to a CommEngine policy stage."""
+    # size-1 axes never vary inside a replica group; compare against the
+    # *effective* partition/replication axes only.
+    pset = {a for a in partition_axes if mesh_shape.get(a, 1) > 1}
+    rset = {a for a in replication_axes if mesh_shape.get(a, 1) > 1}
+    aset = set(axes)
+    if not aset:
+        return "other"
+    if kind in ("all-gather", "reduce-scatter"):
+        prefix = "param_gather" if kind == "all-gather" else "grad_rs"
+        if aset == {model_axis}:
+            return "model_gather" if kind == "all-gather" else "model_rs"
+        if not aset <= pset:
+            return "other"
+        coords = _group_coords(group, mesh_shape)
+        partial_axes = [a for a in axes if len(coords[a]) < mesh_shape[a]]
+        if not partial_axes and aset == pset:
+            return f"{prefix}.flat"  # whole partition group, one collective
+        # A staged hop: either a sub-group within one partition axis, or a
+        # subset of a multi-axis partition group.  Contiguous coordinate
+        # runs are the fast ("inner"/intra-node) stage; strided runs the
+        # slow ("outer"/inter-node) stage (paper Fig 5).
+        if len(axes) == 1 and partial_axes:
+            c = coords[axes[0]]
+            contiguous = c == list(range(c[0], c[0] + len(c)))
+            return f"{prefix}.inner" if contiguous else f"{prefix}.outer"
+        if aset < pset:
+            # multi-axis partition group staged one mesh axis at a time:
+            # the slowest partition axis is the outer stage.
+            slowest = next(a for a in partition_axes if a in pset)
+            return f"{prefix}.outer" if slowest in aset else f"{prefix}.inner"
+        return f"{prefix}.flat"
+    if kind == "all-reduce":
+        if aset == {model_axis}:
+            return "tp_allreduce"  # tensor-parallel activation reductions
+        if aset <= rset:
+            return "hop2"
+        # The Fig-14 alternative schedule all-reduces the *full gradient*
+        # over every data axis; scalar metric/clip reductions over the same
+        # axes are told apart by payload size.
+        if (pset and pset <= aset and model_axis not in aset
+                and rset <= aset and nbytes > 4096):
+            return "allreduce_slice"
+        return "allreduce.other"
+    return "other"
 
 
 def _parse_groups(line: str):
@@ -180,7 +254,99 @@ def _parse_groups(line: str):
     return None
 
 
-def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
+# Ops that merely move/reinterpret data: a value flowing through these into
+# the loop-carry tuple has not been consumed by compute.
+_CARRY_PASSTHROUGH = {
+    "tuple", "get-tuple-element", "bitcast", "reshape", "transpose",
+    "convert", "copy", "slice", "concatenate", "optimization-barrier",
+    "all-gather-done",
+}
+
+
+_DATA_MOVEMENT_OPS = _CARRY_PASSTHROUGH | _FREE_OPS | {
+    "broadcast", "dynamic-slice", "pad", "reverse", "all-gather",
+    "all-gather-start",
+}
+
+
+def _is_data_movement(comps: dict, name: str, depth: int = 0) -> bool:
+    """True iff the computation only moves/reinterprets values (no math) —
+    a value flowing through such a call/fusion has not been consumed."""
+    comp = comps.get(name)
+    if comp is None or depth > 16:
+        return False  # unknown callee: assume compute (conservative)
+    for ins in comp.instrs:
+        if ins.op in ("call", "fusion"):
+            if not all(_is_data_movement(comps, sub, depth + 1)
+                       for sub in _CALLS.findall(ins.line)):
+                return False
+            continue
+        if ins.op not in _DATA_MOVEMENT_OPS:
+            return False
+    return True
+
+
+def prefetch_census(comps: dict) -> dict:
+    """Evidence that parameter gathers are issued one layer ahead.
+
+    In the double-buffered schedule (models/lm.py), a layer scan body
+    all-gathers layer i+1's shard and passes the result straight into the
+    loop carry; the compute of iteration i never touches it.  In optimized
+    HLO that reads as: an ``all-gather`` inside a ``while`` body whose value
+    reaches the ROOT tuple through data-movement ops only (no dot, no
+    compute fusion).  The serial schedule has zero such gathers — every
+    gather's value is consumed by the same iteration's matmuls.
+    """
+    bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "while":
+                wm = _WHILE.search(ins.line)
+                if wm:
+                    bodies.add(wm.group(2))
+
+    total, carried = 0, 0
+    for bname in sorted(bodies):
+        comp = comps.get(bname)
+        if comp is None:
+            continue
+        by_name = {i.name: i for i in comp.instrs}
+        gathers = {i.name for i in comp.instrs
+                   if i.op in ("all-gather", "all-gather-start")}
+        total += len(gathers)
+        root = next((i for i in comp.instrs if i.root), None)
+        if root is None or not gathers:
+            continue
+        seen: set[str] = set()
+        frontier = list(root.operands)
+        while frontier:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            ins = by_name.get(nm)
+            if ins is None:
+                continue
+            if ins.op in ("all-gather", "all-gather-start"):
+                continue  # terminal: counted via ``seen`` below
+            if ins.op in _CARRY_PASSTHROUGH:
+                frontier.extend(ins.operands)
+            elif ins.op in ("fusion", "call") and all(
+                    _is_data_movement(comps, sub)
+                    for sub in _CALLS.findall(ins.line)):
+                frontier.extend(ins.operands)
+        carried += len(gathers & seen)
+    return {"body_all_gathers": total, "carried_all_gathers": carried}
+
+
+def analyze(
+    text: str,
+    mesh_shape: dict[str, int],
+    *,
+    partition_axes: tuple[str, ...] = (),
+    replication_axes: tuple[str, ...] = (),
+    model_axis: str = "model",
+) -> dict:
     comps, entry = parse_module(text)
     if entry is None:
         entry = max(comps, key=lambda n: len(comps[n].instrs), default=None)
@@ -189,7 +355,7 @@ def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
     bytes_hbm = 0.0
     coll = defaultdict(lambda: dict(
         wire_bytes=0.0, result_bytes=0.0, operand_bytes=0.0, count=0.0,
-        group_size=0, crosses_pod=False))
+        group_size=0, crosses_pod=False, stage="other"))
 
     def operand_bytes(ins: Instr, table: dict) -> int:
         total = 0
@@ -245,9 +411,15 @@ def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
                 if groups:
                     gsize = len(groups[0])
                     axes = _group_axes(groups[0], mesh_shape)
+                    group0 = groups[0]
                 else:
                     gsize = math.prod(mesh_shape.values())
                     axes = tuple(mesh_shape)
+                    group0 = list(range(gsize))
+                stage = _stage_label(
+                    kind, axes, group0, mesh_shape,
+                    tuple(partition_axes), tuple(replication_axes), model_axis,
+                    nbytes=ob)
                 if gsize > 1:
                     frac = (gsize - 1) / gsize
                     if kind == "all-gather":
@@ -260,13 +432,14 @@ def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
                         wire = ob * frac
                     else:
                         wire = ob
-                    e = coll[(kind, axes)]
+                    e = coll[(kind, axes, stage)]
                     e["wire_bytes"] += wire * weight
                     e["result_bytes"] += rb * weight
                     e["operand_bytes"] += ob * weight
                     e["count"] += weight
                     e["group_size"] = gsize
                     e["crosses_pod"] = "pod" in axes
+                    e["stage"] = stage
                 bytes_hbm += weight * (rb + ob)
 
     def walk_flops_only(name: str, weight: float, depth: int):
@@ -285,6 +458,11 @@ def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
 
     total = sum(e["wire_bytes"] for e in coll.values())
     dci = sum(e["wire_bytes"] for e in coll.values() if e["crosses_pod"])
+    by_stage: dict[str, dict] = defaultdict(
+        lambda: dict(wire_bytes=0.0, count=0.0))
+    for (_, _, stage), e in coll.items():
+        by_stage[stage]["wire_bytes"] += e["wire_bytes"]
+        by_stage[stage]["count"] += e["count"]
     return {
         "dot_flops": flops,
         "hbm_bytes": bytes_hbm,
@@ -293,7 +471,10 @@ def analyze(text: str, mesh_shape: dict[str, int]) -> dict:
         "ici_wire_bytes": total - dci,
         "n_collectives": sum(e["count"] for e in coll.values()),
         "by_collective": {
-            f"{kind}@{'x'.join(axes) or 'world'}": e
-            for (kind, axes), e in sorted(coll.items(), key=lambda kv: str(kv[0]))
+            f"{kind}@{'x'.join(axes) or 'world'}@{stage}": e
+            for (kind, axes, stage), e in sorted(
+                coll.items(), key=lambda kv: str(kv[0]))
         },
+        "by_stage": dict(sorted(by_stage.items())),
+        "prefetch": prefetch_census(comps),
     }

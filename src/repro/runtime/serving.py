@@ -16,10 +16,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.mics import MiCSConfig, make_gather_fn, state_pspecs
+from repro.compat import shard_map
+from repro.core.comm import CommEngine
+from repro.core.mics import MiCSConfig, state_pspecs
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.models import layers as L
 from repro.models import lm
@@ -98,8 +99,13 @@ def global_cache_shapes(model: ModelDef, topo: MiCSTopology,
 
 def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
                       cache_len: int, batch_axes=None):
-    """Returns (prefill_fn, decode_fn) jitted for the topo's mesh."""
-    gather = make_gather_fn(topo, mcfg)
+    """Returns (prefill_fn, decode_fn) jitted for the topo's mesh.
+
+    Weight gathers (bf16 or int8-quantized, serial or prefetched) run
+    through the same CommEngine as training — decode re-gathers every
+    layer each step, so the prefetch schedule matters most here.
+    """
+    comm = CommEngine.from_config(topo, mcfg)
     ctx = L.Ctx(mode="decode", tp=topo.model_size, tp_axis=MODEL_AXIS,
                 cache_len=cache_len, window=model.cfg.window,
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
@@ -114,12 +120,12 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
 
     def sharded_prefill(params, batch):
         pctx = dataclasses.replace(ctx, mode="prefill")
-        logits, caches = lm.prefill(model, params, gather, pctx, batch)
+        logits, caches = lm.prefill(model, params, comm, pctx, batch)
         return logits, caches
 
     def sharded_decode(params, caches, tokens, pos):
         logits, new_caches = lm.decode_step(
-            model, params, gather, ctx, tokens, pos, caches)
+            model, params, comm, ctx, tokens, pos, caches)
         next_tok = lm.greedy_sample(logits, ctx, model.cfg.vocab)
         return logits, next_tok, new_caches
 

@@ -1,6 +1,9 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
-tests must see the real single CPU device; multi-device checks run via the
-subprocess harness (tests/dist_harness.py)."""
+tests run against the ambient device set; multi-device checks run via the
+subprocess harnesses (tests/dist_harness.py, tests/comm_harness.py), which
+set their own device count.  Locally the ambient set is one CPU device; CI
+exports --xla_force_host_platform_device_count=8, and the suite is verified
+to pass under both (no test may assume an exact ambient device count)."""
 
 import jax
 import pytest

@@ -29,8 +29,9 @@ import traceback
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs import get_config, smoke_variant
 from repro.core import collectives as C
@@ -222,7 +223,7 @@ def _mlstm_chunk():
 # ---------------------------------------------------------------------------
 @check("decode_consistency")
 def _decode():
-    from repro.core.mics import make_gather_fn
+    from repro.core.comm import CommEngine
     from repro.core.topology import MODEL_AXIS
     from repro.models import layers as L
     from repro.models import lm as lmmod
@@ -244,12 +245,12 @@ def _decode():
     toks = jnp.array(rng.integers(0, cfg.vocab, (b, t0 + 4)), jnp.int32)
     logits0, caches = prefill_fn(params, {"tokens": toks[:, :t0]})
 
-    gather = make_gather_fn(topo, MiCSConfig())
+    comm = CommEngine.from_config(topo, MiCSConfig())
     ctx = L.Ctx(mode="train", tp=2, tp_axis=MODEL_AXIS)
 
     def fwd(p, tokens):
         hidden, _, _, t_head = lmmod.forward(
-            model, p, gather, ctx, {"tokens": tokens})
+            model, p, comm, ctx, {"tokens": tokens})
         return lmmod.lm_logits(model, t_head, hidden, ctx)
 
     sm = shard_map(

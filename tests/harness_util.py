@@ -1,0 +1,27 @@
+"""Shared runner for the subprocess correctness harnesses.
+
+The multi-device checks (dist_harness.py, comm_harness.py) run in child
+processes so the main pytest process keeps its own device configuration;
+this is the one place the child environment and JSON-output parsing live.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+
+def run_harness(script: pathlib.Path, timeout: int = 1500) -> dict:
+    """Execute a harness script and return its parsed JSON result dict."""
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True, text=True, timeout=timeout,
+        cwd=str(script.parent.parent),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": str(pathlib.Path.home()), "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = proc.stdout
+    return json.loads(out[out.index("{"):])

@@ -1,0 +1,116 @@
+"""CommEngine tests: policy construction / config mapping units on one
+device, plus the 8-virtual-device correctness harness (tests/comm_harness.py)
+covering gather-policy equivalence, exact VJP adjoints, int8 wire gathers,
+and the double-buffered prefetch schedule (bitwise loss equality + HLO
+census evidence of one-layer-ahead gathers)."""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness_util import run_harness
+from repro.core.comm import (
+    CommEngine, GatherPolicy, SyncPolicy, GATHER_TOPOLOGIES,
+)
+from repro.core.mics import MiCSConfig
+
+HARNESS = pathlib.Path(__file__).parent / "comm_harness.py"
+
+
+# ---------------------------------------------------------------------------
+# policy construction units (single device)
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        GatherPolicy(topology="ring")
+    with pytest.raises(ValueError):
+        GatherPolicy(wire_dtype="fp8")
+    with pytest.raises(ValueError):
+        SyncPolicy(mode="3hop")
+    with pytest.raises(ValueError):
+        SyncPolicy(hop2_wire_dtype="int8")
+
+
+@pytest.mark.parametrize("mcfg,topology,wire,mode,hop2_wire", [
+    (MiCSConfig(), "inner_first", "bf16", "2hop", "fp32"),
+    (MiCSConfig(hierarchical=False), "flat", "bf16", "2hop", "fp32"),
+    (MiCSConfig(gather_order="outer_first"), "outer_first", "bf16",
+     "2hop", "fp32"),
+    (MiCSConfig(gather_dtype=jnp.float32), "inner_first", "fp32",
+     "2hop", "fp32"),
+    (MiCSConfig(quant_gather=True), "inner_first", "int8", "2hop", "fp32"),
+    (MiCSConfig(sync_mode="allreduce_slice", compress_hop2=True),
+     "inner_first", "bf16", "allreduce_slice", "bf16"),
+])
+def test_from_config_mapping(topo1, mcfg, topology, wire, mode, hop2_wire):
+    eng = CommEngine.from_config(topo1, mcfg)
+    assert eng.gather_policy.topology == topology
+    assert eng.gather_policy.wire_dtype == wire
+    assert eng.sync_policy.mode == mode
+    assert eng.sync_policy.hop2_wire_dtype == hop2_wire
+    assert eng.prefetch == mcfg.prefetch
+
+
+def test_describe_is_json_serializable(topo1):
+    for pol in GATHER_TOPOLOGIES:
+        eng = CommEngine(topo1, GatherPolicy(topology=pol))
+        json.dumps(eng.describe())
+
+
+def test_gather_identity_at_p1(topo1):
+    """partition_size == 1: the gather is a pure dtype cast, hop-1 a no-op."""
+    eng = CommEngine.from_config(topo1, MiCSConfig())
+    row = jnp.arange(8.0, dtype=jnp.float32)
+    full = eng.gather_flat(row)
+    assert full.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(full, np.float32),
+                                  np.asarray(row))
+    np.testing.assert_array_equal(np.asarray(eng.hop1_reduce_scatter(row)),
+                                  np.asarray(row))
+    np.testing.assert_array_equal(np.asarray(eng.hop2(row)), np.asarray(row))
+
+
+def test_stored_int8_dict_gather(topo1):
+    from repro.core.quant import quantize_flat
+
+    eng = CommEngine.from_config(topo1, MiCSConfig())
+    row = jnp.asarray(np.random.default_rng(0).normal(size=(512,)) * 0.05,
+                      jnp.float32)
+    q, s = quantize_flat(row)
+    full = eng.gather_flat({"q": q, "s": s})
+    assert full.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(row), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# multi-device harness
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def harness_results():
+    return run_harness(HARNESS)
+
+
+CHECKS = [
+    "policy_equiv", "vjp_matches_rs", "int8_wire_gather",
+    "prefetch_bitwise", "prefetch_decode", "prefetch_census",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_comm_check(harness_results, name):
+    res = harness_results.get(name)
+    assert res is not None, f"harness did not run {name}"
+    assert res["ok"], f"{name}: {res.get('err')}\n{res.get('tb', '')}"
+
+
+def test_prefetch_census_counts(harness_results):
+    detail = harness_results.get("prefetch_census_detail")
+    assert detail is not None
+    assert detail["serial"]["carried_all_gathers"] == 0
+    assert detail["prefetch"]["carried_all_gathers"] >= 1

@@ -4,29 +4,18 @@ hierarchical gather correctness+gradients, MiCS==single-device fidelity
 (paper Fig 16), ZeRO-3 equivalence, the Fig-14 alternative schedule,
 hierarchical-training equivalence, compressed hop-2, decode consistency."""
 
-import json
 import pathlib
-import subprocess
-import sys
 
 import pytest
+
+from harness_util import run_harness
 
 HARNESS = pathlib.Path(__file__).parent / "dist_harness.py"
 
 
 @pytest.fixture(scope="module")
 def harness_results():
-    proc = subprocess.run(
-        [sys.executable, str(HARNESS)],
-        capture_output=True, text=True, timeout=1500,
-        cwd=str(HARNESS.parent.parent),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    out = proc.stdout
-    start = out.index("{")
-    return json.loads(out[start:])
+    return run_harness(HARNESS)
 
 
 CHECKS = [

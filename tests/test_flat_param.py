@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.flat_param import PAD_MULTIPLE, FlatLayout, LayoutBuilder
 
