@@ -1,14 +1,23 @@
-"""Serial vs double-buffered-prefetch gather schedules on the host mesh.
+"""Serial vs double-buffered-prefetch gather schedules on the host mesh,
+plus the autotuner's predicted-vs-measured ledger per gather policy.
 
 Run standalone (benchmarks/run.py invokes it as a subprocess so the main
 benchmark process keeps its single CPU device):
 
   PYTHONPATH=src python benchmarks/comm_bench.py
 
-Prints one JSON object: per-schedule wall time per training step, the
-HLO-census gathered-bytes/collective counts, the carried-gather prefetch
-evidence, and the loss trajectories (which must be bitwise equal — the
-schedules differ only in *when* gathers are issued, never in values).
+Prints one JSON object (saved as BENCH_comm.json by run.py):
+
+* per-schedule wall time per training step, the HLO-census
+  gathered-bytes/collective counts, the carried-gather prefetch evidence,
+  and the loss trajectories (which must be bitwise equal — the schedules
+  differ only in *when* gathers are issued, never in values);
+* a ``policies`` section: for each gather policy (flat / inner_first /
+  outer_first bf16 wire, inner_first int8), the analytical per-stage wire
+  bytes (core/autotune.predict_traffic) against the measured census of the
+  compiled step, and the α-β modeled comm time under two link profiles
+  (v5e + efa-100g, core/linkmodel.py);
+* the autotuner's full ranked table per profile (``autotune_rankings``).
 """
 
 import os
@@ -26,6 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
+from repro.core.autotune import (
+    compare_census, cost_candidate, predict_traffic, rank_policies,
+)
+from repro.core.comm import GatherPolicy, SyncPolicy
+from repro.core.linkmodel import get_profile
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state, init_state_shapes,
     make_batch_shapes,
@@ -37,6 +51,17 @@ from repro.roofline.hlo_stats import analyze
 
 STEPS = 8
 MICRO = 2
+
+PROFILES = ("v5e", "efa-100g")
+# (label, GatherPolicy fields, MiCSConfig fields) — >= 3 policies for the
+# predicted-vs-measured ledger (acceptance criterion of ISSUE 2).
+POLICIES = (
+    ("flat@bf16", ("flat", "bf16"), dict(hierarchical=False)),
+    ("inner_first@bf16", ("inner_first", "bf16"), dict()),
+    ("outer_first@bf16", ("outer_first", "bf16"),
+     dict(gather_order="outer_first")),
+    ("inner_first@int8", ("inner_first", "int8"), dict(quant_gather=True)),
+)
 
 
 def run(steps: int = STEPS) -> dict:
@@ -97,7 +122,55 @@ def run(steps: int = STEPS) -> dict:
         == out["prefetch"]["losses"]
     out["speedup"] = round(
         out["serial"]["us_per_step"] / out["prefetch"]["us_per_step"], 3)
+    out["policies"] = policy_ledger(model, topo, mesh_shape)
+    out["autotune_rankings"] = {
+        name: rank_policies(model, topo, name, micro_steps=MICRO,
+                            prefetch=True).describe()
+        for name in PROFILES
+    }
     return out
+
+
+def policy_ledger(model, topo, mesh_shape) -> dict:
+    """Predicted-vs-measured per gather policy, on two link profiles.
+
+    Measured: per-stage census wire bytes of the compiled (serial) train
+    step.  Predicted: core/autotune.predict_traffic with
+    ``upcast_float_collectives=True`` (the census is compiled for host
+    CPUs, where XLA widens bf16 collectives to f32).  Modeled times use
+    the un-upcast traffic — the real wire cost on each profile.
+    """
+    ledger = {}
+    for label, (topology, wire), mcfg_kw in POLICIES:
+        mcfg = MiCSConfig(micro_steps=MICRO, prefetch=False, **mcfg_kw)
+        step = build_train_step(model, topo, mcfg,
+                                OptConfig(total_steps=100, warmup_steps=0,
+                                          lr_max=3e-3))
+        stats = analyze(
+            step.lower(init_state_shapes(model),
+                       make_batch_shapes(model, MICRO * 8, 32, MICRO))
+                .compile().as_text(),
+            mesh_shape,
+            partition_axes=topo.partition_axes,
+            replication_axes=topo.replication_axes)
+        gp = GatherPolicy(topology, wire, None, False)
+        sp = SyncPolicy()
+        predicted = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
+                                    upcast_float_collectives=True)
+        cmp = compare_census(predicted["by_stage"], stats["by_stage"])
+        entry = {
+            "predicted_vs_measured": cmp,
+            "byte_match": all(
+                abs(row["ratio"] - 1.0) <= 0.02 for row in cmp.values()),
+            "measured_total_wire_bytes": stats["total_wire_bytes"],
+            "modeled_t_comm_us": {},
+        }
+        for name in PROFILES:
+            cand = cost_candidate(model, topo, get_profile(name), gp, sp,
+                                  micro_steps=MICRO)
+            entry["modeled_t_comm_us"][name] = round(cand.t_comm_s * 1e6, 2)
+        ledger[label] = entry
+    return ledger
 
 
 if __name__ == "__main__":

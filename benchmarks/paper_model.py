@@ -18,15 +18,19 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.core.linkmodel import EFA_100G, EFA_400G, LinkProfile, get_profile
+
 GB = 1e9
 
-# paper-reported anchors (AWS p3dn.24xlarge)
-B_INTRA = 128 * GB          # NVLink effective within a node (8 GPUs)
-B_INTER_NODE = 12.5 * GB    # 100 Gbps EFA per node
-ALPHA_INTRA = 8e-6          # NVLink collective startup
-ALPHA_INTER = 30e-6         # EFA collective startup
-GPUS_PER_NODE = 8
-V100_PEAK = 125e12          # fp16 tensor-core peak
+# paper-reported anchors (AWS p3dn.24xlarge) — stored in the shared link
+# table (core/linkmodel.py, profile "efa-100g") so the autotuner, the
+# roofline and this model read one source of truth.
+B_INTRA = EFA_100G.intra.bandwidth * EFA_100G.node_size  # 128 GB/s NVLink/node
+B_INTER_NODE = EFA_100G.inter.bandwidth                  # 100 Gbps EFA
+ALPHA_INTRA = EFA_100G.intra.alpha
+ALPHA_INTER = EFA_100G.inter.alpha
+GPUS_PER_NODE = EFA_100G.node_size
+V100_PEAK = EFA_100G.peak_flops  # fp16 tensor-core peak
 V100_EFF = 0.55             # achievable matmul efficiency w/ checkpointing
 
 
@@ -37,6 +41,17 @@ class Net:
     a_intra: float = ALPHA_INTRA
     a_inter: float = ALPHA_INTER
     k: int = GPUS_PER_NODE
+
+    @staticmethod
+    def from_profile(profile: str | LinkProfile) -> "Net":
+        """Build the calibrated paper net from a shared link profile
+        (``b_intra`` is the node-aggregate NVLink figure — per-GPU rail
+        bandwidth times node size)."""
+        p = get_profile(profile)
+        return Net(b_intra=p.intra.bandwidth * p.node_size,
+                   b_inter=p.inter.bandwidth,
+                   a_intra=p.intra.alpha, a_inter=p.inter.alpha,
+                   k=p.node_size)
 
     def link_bw(self, g: int) -> float:
         """Per-participant ring bandwidth for a g-GPU group.
@@ -53,8 +68,8 @@ class Net:
         return self.a_intra if g <= self.k else self.a_inter
 
 
-NET_100G = Net()
-NET_400G = Net(b_inter=50 * GB)          # p4d 400 Gbps
+NET_100G = Net.from_profile(EFA_100G)
+NET_400G = Net.from_profile(EFA_400G)    # p4d 400 Gbps
 NET_DGX = Net(b_inter=200 * GB)          # DGX-A100 1.6 Tb/s IB
 
 

@@ -3,7 +3,12 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Everything below is the public API surface: pick a config, build the model,
-build the MiCS train step for a topology, feed batches.
+build the MiCS train step for a topology, feed batches.  Every collective
+in the step (staged parameter gathers with double-buffered prefetch, 2-hop
+gradient sync) is owned by the CommEngine built from ``MiCSConfig`` —
+see docs/comm-engine.md; ``MiCSConfig(policy="auto",
+link_profile="efa-100g")`` would let the link-model autotuner pick the
+gather topology/wire dtype instead (docs/autotuning.md).
 """
 
 import jax.numpy as jnp
@@ -19,7 +24,7 @@ cfg = smoke_variant(get_config("llama3.2-1b"))
 topo = MiCSTopology(make_host_mesh())          # 1 device; axes generalize
 model = build_model(cfg, tp=topo.model_size)
 
-mcfg = MiCSConfig(micro_steps=2)               # 2-hop sync, hierarchical AG
+mcfg = MiCSConfig(micro_steps=2)   # 2-hop sync, staged prefetched gathers
 state = init_state(model, topo, seed=0)
 step = build_train_step(model, topo, mcfg,
                         OptConfig(lr_max=3e-3, total_steps=20, warmup_steps=2))

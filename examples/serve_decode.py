@@ -1,8 +1,14 @@
 """Serving example: prefill a batch of prompts and greedy-decode
-continuations with the MiCS-sharded serving runtime (ZeRO-3-style parameter
-gathering, per-rank KV cache).
+continuations with the MiCS-sharded serving runtime (per-layer weight
+gathers through the same CommEngine as training, per-rank KV cache).
 
     PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+
+Decode re-gathers every layer's weights each step, so the gather policy is
+the binding knob here: ``--prefetch 0`` falls back to the serial schedule,
+``--quant-gather`` stores int8 weights and halves the wire bytes, and
+``--policy auto --link-profile efa-100g`` lets the autotuner choose
+(docs/autotuning.md).
 """
 
 import argparse

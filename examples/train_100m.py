@@ -1,12 +1,14 @@
 """End-to-end driver: train a ~100M-parameter llama-family model for a few
-hundred steps with the full production loop (checkpointing, fault tolerance,
-prefetching pipeline).
+hundred steps with the full production loop (checkpointing, fault
+tolerance, CommEngine-owned collectives with double-buffered gather
+prefetch).
 
     PYTHONPATH=src python examples/train_100m.py --steps 300
 
 On this CPU host a step takes seconds; on a real pod the identical script
 scales by swapping `make_host_mesh()` for `make_mics_topology(...)` (see
-repro/launch/train.py).
+repro/launch/train.py) — and `MiCSConfig(policy="auto", link_profile=...)`
+re-tunes the gather policies for that pod's link table.
 """
 
 import argparse

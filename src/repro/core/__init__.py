@@ -1,3 +1,9 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""MiCS core: the paper's system layer.
+
+``topology`` (partition/replication groups as mesh axes), ``flat_param``
+(flat parameter pools), ``collectives`` (staged gathers + exact adjoints),
+``comm`` (the CommEngine — single construction point for every
+collective), ``linkmodel`` (the one link-bandwidth table of the tree),
+``autotune`` (bandwidth-aware GatherPolicy/SyncPolicy tuner), ``quant``
+(int8 blockwise wire), ``mics`` (the 2-hop training step).
+"""

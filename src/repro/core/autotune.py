@@ -1,0 +1,516 @@
+"""Bandwidth-aware GatherPolicy/SyncPolicy autotuner (the paper's §3-§4
+decision procedure, run analytically over a :mod:`repro.core.linkmodel`
+profile).
+
+PR 1 centralized every collective behind the CommEngine and taught the HLO
+census (``roofline/hlo_stats.analyze``) to attribute wire bytes to policy
+stages (``param_gather.{flat,inner,outer}``, ``grad_rs.*``, ``hop2``).  This
+module closes the loop: given a model, a MiCS topology and a link profile it
+
+1. **predicts** the same per-stage census analytically
+   (:func:`predict_traffic` — per-pool flat-buffer sizes x the schedule's
+   collective event counts x ring-algorithm byte fractions, in the census's
+   exact units so model and measurement are directly comparable), and
+2. **costs** every candidate policy with the α-β model over the profile's
+   two link tiers (:func:`rank_policies` — topology x inner factor x wire
+   dtype x hop-2 compression), returning a ranked :class:`Plan`, and
+3. **resolves** ``MiCSConfig(policy="auto")`` into the concrete winning
+   config (:func:`resolve_config`), which is what ``build_train_step``,
+   ``build_serve_steps`` and ``launch/dryrun.py`` call.
+
+The per-stage byte identity worth knowing: a staged gather moves exactly the
+same per-participant total as the flat gather —
+
+    M(i-1)/p + M(o-1)/o  ==  M(p-1)/p        (p = i*o)
+
+— hierarchical staging never saves bytes, it *moves them between tiers*
+(only M(o-1)/p of an outer-first gather crosses the slow tier, vs the whole
+M(p-1)/p of a flat ring that bottlenecks on it).  That is the entire MiCS
+§3.3 argument, and why the ranking depends on the link table.
+
+Numerics policy: the tuner ranks lossy candidates (int8 wire, bf16 hop-2)
+alongside lossless ones, but only *selects* them when the config opted in
+(``quant_gather=True`` / ``compress_hop2=True``) — ``policy="auto"`` never
+silently changes training numerics, it only re-schedules the same bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.linkmodel import LinkProfile, get_profile
+from repro.core.comm import GatherPolicy, SyncPolicy, WIRE_DTYPES
+from repro.core.quant import BLOCK
+from repro.core.topology import MiCSTopology, default_hierarchy_inner
+
+# census bytes-per-element on the wire, by wire dtype.  int8 gathers are two
+# collectives per stage (q int8 + per-BLOCK f32 absmax scales).
+_WIRE_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0 + 4.0 / BLOCK}
+# gradient reduce-scatter element bytes: the adjoint runs in the wire dtype
+# for float wires and in fp32 for int8 (straight-through, grads never
+# quantized — core/comm.py).
+_GRAD_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 4.0}
+
+
+# ---------------------------------------------------------------------------
+# stage structure: (label, group size, positions, wire fraction) per stage
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One ring stage of a gather policy over the partition group.
+
+    ``wire_frac``: per-participant wire bytes of this stage as a fraction of
+    the full gathered buffer M (census convention).  ``positions`` is one
+    representative replica group in partition-group linear coordinates
+    (slowest axis major) — what the link tier is decided from.
+    """
+
+    label: str                 # 'flat' | 'inner' | 'outer'
+    group_size: int
+    positions: tuple[int, ...]
+    wire_frac: float
+
+
+def _partition_axis_sizes(topo: MiCSTopology) -> list[int]:
+    return [topo.axis_size(a) for a in topo.partition_axes]
+
+
+def resolve_inner(topo: MiCSTopology, inner: int | None) -> tuple[int, int]:
+    """(outer, inner) factorization a candidate actually runs with."""
+    p = topo.partition_size
+    sizes = _partition_axis_sizes(topo)
+    if len(sizes) > 1:
+        return sizes[0], p // sizes[0]
+    if inner is None:
+        inner = default_hierarchy_inner(p)
+    if p % inner:
+        raise ValueError(f"inner {inner} does not divide p={p}")
+    return p // inner, inner
+
+
+def island_size(topo: MiCSTopology, profile: LinkProfile) -> int:
+    """Fast-tier island extent in partition-group linear coordinates.
+
+    Single-axis groups are contiguous ranks sharing the profile's node;
+    multi-axis groups additionally cross the slowest mesh axis (pod) at
+    every ``p / size(slowest)`` positions, whichever boundary comes first.
+    """
+    p = topo.partition_size
+    sizes = _partition_axis_sizes(topo)
+    if len(sizes) > 1:
+        return min(profile.node_size, p // sizes[0])
+    return min(profile.node_size, p)
+
+
+def _hop2_tier(topo: MiCSTopology, profile: LinkProfile) -> str:
+    """Link tier of the replication-group all-reduce.
+
+    Replication peers are same-local-rank devices of *different* partition
+    groups: stride ``p`` apart along the data axis (and across pods when a
+    pod axis replicates).  Unlike partition stages, their coordinates live
+    in the data-axis space, where the fast island is the profile's full
+    node_size.
+    """
+    from repro.core.topology import POD_AXIS
+
+    if POD_AXIS in topo.replication_axes \
+            and topo.axis_size(POD_AXIS) > 1:
+        return "inter"
+    p = topo.partition_size
+    positions = range(0, topo.replication_degree * p, p)
+    return profile.group_tier(positions)
+
+
+def gather_stages(topology: str, topo: MiCSTopology,
+                  inner: int | None = None) -> list[StageSpec]:
+    """Ring stages of one full-buffer gather under ``topology``.
+
+    The same (label -> wire_frac) set describes the adjoint reduce-scatter:
+    the stages run in reverse with identical per-stage wire bytes.
+    """
+    p = topo.partition_size
+    if p == 1:
+        return []
+    if topology == "flat":
+        return [StageSpec("flat", p, tuple(range(p)), (p - 1) / p)]
+    outer, inner_f = resolve_inner(topo, inner)
+    if outer == 1 or inner_f == 1:  # staging degenerates to one collective
+        return [StageSpec("flat", p, tuple(range(p)), (p - 1) / p)]
+    inner_grp = tuple(range(inner_f))                 # contiguous fast run
+    outer_grp = tuple(range(0, p, inner_f))           # strided slow group
+    if topology == "inner_first":
+        return [
+            StageSpec("inner", inner_f, inner_grp, (inner_f - 1) / p),
+            StageSpec("outer", outer, outer_grp, (outer - 1) / outer),
+        ]
+    if topology == "outer_first":
+        return [
+            StageSpec("outer", outer, outer_grp, (outer - 1) / p),
+            StageSpec("inner", inner_f, inner_grp, (inner_f - 1) / inner_f),
+        ]
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+# ---------------------------------------------------------------------------
+# collective event counts per schedule
+# ---------------------------------------------------------------------------
+
+def _event_counts(stack: int, s: int, *, scanned: bool, prefetch: bool,
+                  mode: str) -> dict[str, float]:
+    """How many gather / reduce-scatter events one pool contributes per step.
+
+    Derived from the schedules in models/lm.py + core/mics.py and verified
+    instruction-exactly against the measured census by
+    tests/autotune_harness.py:
+
+    * scanned pools run under ``jax.checkpoint``: the serial schedule
+      re-gathers every layer in the backward pass (``2·s·stack`` gathers);
+      the double-buffered prefetch schedule instead *carries* the gathered
+      buffer as a backward residual — no backward re-gather — at the price
+      of one wrap-around lookahead per micro-step, and its loop-invariant
+      prologue gather (layer 0) is hoisted out of the micro loop by XLA
+      (``s·stack + 1`` gathers total, DESIGN.md §4).
+    * embed/head pools are gathered outside the layer scans; the gather is
+      loop-invariant across micro-steps, so XLA hoists it out of the micro
+      loop entirely: ONE gather per step, however many micro-steps.
+    * every gather whose cotangent is needed contributes one adjoint
+      reduce-scatter per micro-step — per layer plus, under prefetch, the
+      prologue gather's adjoint (``s·(stack+1)``).
+    """
+    if mode == "serve":
+        ag = stack + 1 if (prefetch and scanned and stack > 1) else stack
+        return {"ag": float(ag), "rs": 0.0}
+    if scanned and prefetch and stack > 1:
+        ag = s * stack + 1
+        rs = s * (stack + 1)
+    elif scanned:
+        ag = 2 * s * stack        # forward + checkpoint re-gather
+        rs = s * stack
+    else:
+        ag = 1 * stack            # hoisted out of the micro loop
+        rs = s * stack
+    return {"ag": float(ag), "rs": float(rs)}
+
+
+# ---------------------------------------------------------------------------
+# the analytical census
+# ---------------------------------------------------------------------------
+
+def predict_traffic(
+    model,
+    topo: MiCSTopology,
+    gather: GatherPolicy,
+    sync: SyncPolicy,
+    *,
+    micro_steps: int = 1,
+    mode: str = "train",
+    profile: LinkProfile | None = None,
+    upcast_float_collectives: bool = False,
+) -> dict:
+    """Analytical per-stage wire-byte census of one training/serving step.
+
+    Returns ``{"by_stage": {label: {wire_bytes, count, group_size, tier,
+    events}}, "local_copy_bytes": float}`` in exactly the units of
+    ``hlo_stats.analyze(...)["by_stage"]`` so the two can be compared
+    stage-by-stage (tests/autotune_harness.py does, within padding
+    tolerance).  ``tier`` is resolved against ``profile`` when given
+    (cost-model input), else marked ``"?"``.
+
+    ``upcast_float_collectives=True`` models the XLA *CPU* backend, which
+    widens sub-f32 float collectives to f32 on the wire (bf16 gathers,
+    bf16 hop-2; int8 payloads stay int8) — set it when comparing against a
+    census measured on host devices; leave False for the real link cost.
+    """
+    p = topo.partition_size
+    s = int(micro_steps)
+    by_stage: dict[str, dict] = {}
+    local_copy = 0.0
+
+    def acc(label: str, spec: StageSpec, nbytes: float, events: float,
+            ncoll: float, tier: str = "?"):
+        e = by_stage.setdefault(label, {
+            "wire_bytes": 0.0, "count": 0.0, "events": 0.0,
+            "group_size": spec.group_size, "tier": tier,
+        })
+        e["wire_bytes"] += nbytes
+        e["count"] += ncoll
+        e["events"] += events
+
+    def stage_tier(spec: StageSpec) -> str:
+        if profile is None:
+            return "?"
+        isl = island_size(topo, profile)
+        return "intra" if len({q // isl for q in spec.positions}) <= 1 \
+            else "inter"
+
+    stages = gather_stages(gather.topology, topo, gather.inner)
+    wire_b = _WIRE_BYTES[gather.wire_dtype]
+    grad_b = _GRAD_BYTES[gather.wire_dtype]
+    hop2_b = 2.0 if sync.hop2_wire_dtype == "bf16" else 4.0
+    if upcast_float_collectives:
+        if gather.wire_dtype == "bf16":
+            wire_b = 4.0
+        grad_b = 4.0
+        hop2_b = 4.0
+    colls_per_event = 2 if gather.wire_dtype == "int8" else 1
+    reorder = (gather.topology == "outer_first"
+               and any(st.label == "outer" for st in stages))
+
+    scanned = {pl.name for pl in model.pools}
+    for pool in model.all_pools():
+        stack, _tp, flat_len = model.global_flat_shapes()[pool.name]
+        n = _event_counts(stack, s, scanned=pool.name in scanned,
+                          prefetch=gather.prefetch, mode=mode)
+        m_gather = flat_len * wire_b
+        m_grad = flat_len * grad_b
+        for st in stages:
+            acc(f"param_gather.{st.label}", st,
+                n["ag"] * st.wire_frac * m_gather, n["ag"],
+                n["ag"] * colls_per_event, stage_tier(st))
+            if mode == "train" and n["rs"] and sync.mode == "2hop":
+                acc(f"grad_rs.{st.label}", st,
+                    n["rs"] * st.wire_frac * m_grad, n["rs"], n["rs"],
+                    stage_tier(st))
+        if reorder:
+            local_copy += (n["ag"] + (n["rs"] if mode == "train" else 0.0)) \
+                * flat_len * wire_b
+
+        # hop 2: replication-group all-reduce once per step per pool
+        if (mode == "train" and sync.mode == "2hop"
+                and topo.replication_degree > 1):
+            r = topo.replication_degree
+            ob = stack * (flat_len / p) * hop2_b
+            spec = StageSpec("hop2", r, tuple(range(0, r * p, p)), 0.0)
+            acc("hop2", spec, 2.0 * ob * (r - 1) / r, 1.0, 1.0,
+                _hop2_tier(topo, profile) if profile else "?")
+
+    return {"by_stage": by_stage, "local_copy_bytes": local_copy}
+
+
+def compare_census(predicted: dict, measured: dict,
+                   prefixes: tuple[str, ...] = ("param_gather", "grad_rs",
+                                                "hop2")) -> dict:
+    """Stage-by-stage predicted-vs-measured wire bytes (census units).
+
+    Only CommEngine-owned stages are compared (tensor-parallel
+    ``model_gather``/``tp_allreduce`` traffic is out of the tuner's scope).
+    """
+    keys = {k for k in (*predicted, *measured)
+            if k.split(".")[0] in {p.split(".")[0] for p in prefixes}}
+    out = {}
+    for k in sorted(keys):
+        pred = predicted.get(k, {}).get("wire_bytes", 0.0)
+        meas = measured.get(k, {}).get("wire_bytes", 0.0)
+        out[k] = {
+            "predicted_wire_bytes": pred,
+            "measured_wire_bytes": meas,
+            "ratio": (meas / pred) if pred else (1.0 if not meas else float("inf")),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta costing + ranking
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One costed (GatherPolicy, SyncPolicy) combination."""
+
+    gather: GatherPolicy
+    sync: SyncPolicy
+    t_comm_s: float                      # modeled collective seconds / step
+    t_by_stage: dict
+    bytes_by_stage: dict
+    inter_wire_bytes: float              # slow-tier bytes / step
+    lossy_wire: bool
+    lossy_hop2: bool
+
+    def describe(self) -> dict:
+        return {
+            "gather": dataclasses.asdict(self.gather),
+            "sync": dataclasses.asdict(self.sync),
+            "t_comm_s": self.t_comm_s,
+            "t_by_stage": dict(self.t_by_stage),
+            "bytes_by_stage": {
+                k: v["wire_bytes"] for k, v in self.bytes_by_stage.items()},
+            "inter_wire_bytes": self.inter_wire_bytes,
+            "lossy": self.lossy_wire or self.lossy_hop2,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Ranked autotuning outcome for one (model, topo, profile)."""
+
+    profile: LinkProfile
+    mode: str
+    micro_steps: int
+    candidates: tuple[Candidate, ...]    # best first
+    chosen: Candidate
+
+    def describe(self) -> dict:
+        return {
+            "profile": self.profile.name,
+            "mode": self.mode,
+            "micro_steps": self.micro_steps,
+            "chosen": self.chosen.describe(),
+            "ranking": [c.describe() for c in self.candidates],
+        }
+
+    def table(self, top: int | None = 8) -> str:
+        """Human-readable ranked table (what ``dryrun --policy auto``
+        prints)."""
+        rows = [f"autotune[{self.profile.name}] mode={self.mode} "
+                f"(chosen marked *):",
+                f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
+                f"{'hop2':>5} {'t_comm_ms':>10} {'inter_MB':>9}"]
+        cands = self.candidates[:top] if top else self.candidates
+        for i, c in enumerate(cands):
+            mark = "*" if c is self.chosen else " "
+            rows.append(
+                f" {mark}{i:>4} {c.gather.topology:<12} "
+                f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
+                f"{c.sync.hop2_wire_dtype:>5} {c.t_comm_s * 1e3:>10.3f} "
+                f"{c.inter_wire_bytes / 1e6:>9.2f}")
+        if self.chosen not in cands:
+            rows.append(f"  ... chosen: {self.chosen.describe()['gather']}")
+        return "\n".join(rows)
+
+
+def cost_candidate(
+    model,
+    topo: MiCSTopology,
+    profile: LinkProfile,
+    gather: GatherPolicy,
+    sync: SyncPolicy,
+    *,
+    micro_steps: int = 1,
+    mode: str = "train",
+) -> Candidate:
+    """α-β time of one candidate: per-stage ring times over the profile's
+    tiers + the outer-first reorder copy."""
+    pred = predict_traffic(model, topo, gather, sync,
+                           micro_steps=micro_steps, mode=mode,
+                           profile=profile)
+    t_by_stage: dict[str, float] = {}
+    total = 0.0
+    inter_bytes = 0.0
+    for label, e in pred["by_stage"].items():
+        g = e["group_size"]
+        hops = 2 * (g - 1) if label == "hop2" else (g - 1)
+        link = profile.link(e["tier"])
+        t = e["events"] * hops * link.alpha + e["wire_bytes"] / link.bandwidth
+        t_by_stage[label] = t
+        total += t
+        if e["tier"] == "inter":
+            inter_bytes += e["wire_bytes"]
+    if pred["local_copy_bytes"]:
+        t_by_stage["reorder.copy"] = profile.copy_time(
+            pred["local_copy_bytes"])
+        total += t_by_stage["reorder.copy"]
+    return Candidate(
+        gather=gather, sync=sync, t_comm_s=total, t_by_stage=t_by_stage,
+        bytes_by_stage=pred["by_stage"], inter_wire_bytes=inter_bytes,
+        lossy_wire=gather.wire_dtype == "int8",
+        lossy_hop2=sync.hop2_wire_dtype == "bf16",
+    )
+
+
+def enumerate_candidates(
+    topo: MiCSTopology,
+    *,
+    prefetch: bool = True,
+    wires: tuple[str, ...] = WIRE_DTYPES,
+) -> list[tuple[GatherPolicy, SyncPolicy]]:
+    """Candidate grid: topology x inner factor x wire dtype x hop-2 wire."""
+    p = topo.partition_size
+    gathers: list[GatherPolicy] = []
+    for wire in wires:
+        gathers.append(GatherPolicy("flat", wire, None, prefetch))
+        if p < 4:
+            continue  # staging degenerates below 2x2
+        if len(topo.partition_axes) > 1:
+            inners: list[int | None] = [None]  # factorization = axis split
+        else:
+            inners = [d for d in range(2, p) if p % d == 0]
+        for inner in inners:
+            for topology in ("inner_first", "outer_first"):
+                gathers.append(GatherPolicy(topology, wire, inner, prefetch))
+    hop2_wires = ("fp32", "bf16") if topo.replication_degree > 1 else ("fp32",)
+    return [(g, SyncPolicy("2hop", h)) for g in gathers for h in hop2_wires]
+
+
+def rank_policies(
+    model,
+    topo: MiCSTopology,
+    profile: str | LinkProfile,
+    *,
+    micro_steps: int = 1,
+    prefetch: bool = True,
+    mode: str = "train",
+    allow_int8: bool = False,
+    allow_bf16_hop2: bool = False,
+) -> Plan:
+    """Cost every candidate and rank by modeled collective time.
+
+    The chosen plan is the fastest candidate whose numerics the caller
+    opted into; the full ranking (including lossy rows) is kept for the
+    dry-run table and BENCH artifacts.
+    """
+    profile = get_profile(profile)
+    cands = [
+        cost_candidate(model, topo, profile, g, s,
+                       micro_steps=micro_steps, mode=mode)
+        for g, s in enumerate_candidates(topo, prefetch=prefetch)
+    ]
+    cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
+                              c.gather.wire_dtype))
+    eligible = [c for c in cands
+                if (allow_int8 or not c.lossy_wire)
+                and (allow_bf16_hop2 or not c.lossy_hop2)]
+    chosen = eligible[0] if eligible else cands[0]
+    return Plan(profile=profile, mode=mode, micro_steps=micro_steps,
+                candidates=tuple(cands), chosen=chosen)
+
+
+# ---------------------------------------------------------------------------
+# MiCSConfig resolution (policy="auto")
+# ---------------------------------------------------------------------------
+
+def resolve_config(mcfg, model, topo: MiCSTopology, *,
+                   mode: str = "train"):
+    """Resolve ``MiCSConfig(policy="auto")`` into concrete policy fields.
+
+    Returns ``(resolved_config, plan)``; manual configs pass through with
+    ``plan=None``.  The winning GatherPolicy/SyncPolicy is mapped back onto
+    the legacy config fields so ``CommEngine.from_config`` (the one place
+    those fields are interpreted) reconstructs exactly the chosen policies.
+    """
+    if getattr(mcfg, "policy", "manual") != "auto":
+        return mcfg, None
+    plan = rank_policies(
+        model, topo, mcfg.link_profile,
+        micro_steps=mcfg.micro_steps, prefetch=mcfg.prefetch, mode=mode,
+        allow_int8=mcfg.quant_gather, allow_bf16_hop2=mcfg.compress_hop2,
+    )
+    g, s = plan.chosen.gather, plan.chosen.sync
+    if g.wire_dtype == "fp32":
+        gather_dtype = jnp.float32
+    else:  # bf16 wire, and int8's dequantized compute dtype
+        gather_dtype = jnp.bfloat16
+    resolved = dataclasses.replace(
+        mcfg,
+        policy="manual",
+        hierarchical=g.topology != "flat",
+        gather_order=g.topology if g.topology != "flat" else "inner_first",
+        hierarchy_inner=g.inner,
+        gather_dtype=gather_dtype,
+        quant_gather=g.wire_dtype == "int8",
+        sync_mode="2hop",
+        compress_hop2=s.hop2_wire_dtype == "bf16",
+    )
+    return resolved, plan

@@ -36,6 +36,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.autotune import resolve_config
 from repro.core.comm import CommEngine
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.models import layers as L
@@ -46,7 +47,17 @@ from repro.optim.adamw import OptConfig, adamw_shard_update
 
 @dataclasses.dataclass(frozen=True)
 class MiCSConfig:
-    """Knobs of the paper's three mechanisms + beyond-paper options."""
+    """Knobs of the paper's three mechanisms + beyond-paper options.
+
+    ``policy="auto"`` hands the communication knobs (``hierarchical``,
+    ``gather_order``, ``hierarchy_inner``, the wire dtype, hop-2
+    compression) to the bandwidth-aware autotuner (core/autotune.py), which
+    ranks every candidate over the named ``link_profile``
+    (core/linkmodel.py) and rewrites this config with the winner before the
+    CommEngine is built.  Auto never changes numerics you did not opt into:
+    int8 wire needs ``quant_gather=True``, bf16 hop-2 needs
+    ``compress_hop2=True``; those flags turn from orders into permissions.
+    """
 
     micro_steps: int = 1
     hierarchical: bool = True
@@ -59,6 +70,13 @@ class MiCSConfig:
     mlstm_chunk: int = 0                # chunkwise-parallel mLSTM (§Perf)
     quant_gather: bool = False          # int8 wire / serving-weight gathers
     prefetch: bool = True               # double-buffered lookahead gathers
+    policy: str = "manual"              # 'manual' | 'auto' (link-model tuner)
+    link_profile: Any = "v5e"           # profile name or LinkProfile instance
+
+    def __post_init__(self):
+        if self.policy not in ("manual", "auto"):
+            raise ValueError(f"unknown policy {self.policy!r} "
+                             "(expected 'manual' or 'auto')")
 
 
 # ---------------------------------------------------------------------------
@@ -160,10 +178,15 @@ def build_train_step(
 
     All collectives — the per-layer hop-1 gathers and their adjoint
     reduce-scatters, and the boundary hop-2 all-reduce — are owned by one
-    ``CommEngine`` constructed from (topo, mcfg).
+    ``CommEngine`` constructed from (topo, mcfg).  ``policy="auto"``
+    configs are first resolved by the link-model autotuner
+    (core/autotune.py); pass the resolved config around if you also need
+    the ranked plan.
     """
+    mcfg, _ = resolve_config(mcfg, model, topo, mode="train")
     comm = CommEngine.from_config(topo, mcfg)
     ctx = L.Ctx(mode="train", tp=topo.model_size, tp_axis=MODEL_AXIS,
+                compute_dtype=jnp.dtype(mcfg.gather_dtype),
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
     s = mcfg.micro_steps
     denom = float(s * topo.data_parallel_size)

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import AxisType, make_mesh, mesh_from_devices
+from repro.core.linkmodel import V5E
 
 # Mesh axis names, fixed across the framework.
 POD_AXIS = "pod"
@@ -37,12 +38,15 @@ MODEL_AXIS = "model"
 MICS_AXES = (POD_AXIS, REPL_AXIS, SHARD_AXIS, DP2_AXIS, MODEL_AXIS)
 
 # v5e-class hardware constants (roofline + partition-size heuristic).
-HBM_BYTES_PER_CHIP = 16 * 1024**3
-PEAK_BF16_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW_PER_LINK = 50e9
+# The single source of truth is the link-profile table
+# (core/linkmodel.py); these aliases keep the historical names alive for
+# the heuristics below and tests.
+HBM_BYTES_PER_CHIP = V5E.hbm_bytes
+PEAK_BF16_FLOPS = V5E.peak_flops
+HBM_BW = V5E.hbm_bw
+ICI_BW_PER_LINK = V5E.intra.bandwidth
 # DCI (inter-pod) modeled as a scarce slow link per pod boundary.
-DCI_BW_PER_LINK = 6.25e9
+DCI_BW_PER_LINK = V5E.inter.bandwidth
 
 # Adam mixed precision footprint: fp32 master + fp32 m + fp32 v + fp32 grad
 # accumulator (the transient bf16 gathered copy is per-layer, not persistent).

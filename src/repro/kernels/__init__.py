@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the compute hot-spots, each shipped as a package of
+``kernel.py`` (the Pallas implementation), ``ops.py`` (shape/sharding-aware
+wrappers used by the model code) and ``ref.py`` (pure-jnp reference the
+tests compare against): ``flash_attention``, ``rmsnorm``, ``rglru``."""

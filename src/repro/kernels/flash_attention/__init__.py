@@ -1,3 +1,5 @@
+"""Pallas flash attention (GQA-aware) + pure-jnp reference."""
+
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ops import flash_attention_gqa
 from repro.kernels.flash_attention.ref import attention_ref

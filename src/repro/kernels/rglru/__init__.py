@@ -1,3 +1,5 @@
+"""Pallas RG-LRU (Griffin) scan kernel + pure-jnp reference."""
+
 from repro.kernels.rglru.kernel import rglru
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_ref

@@ -1,3 +1,5 @@
+"""Pallas RMSNorm kernel + pure-jnp reference."""
+
 from repro.kernels.rmsnorm.kernel import rmsnorm
 from repro.kernels.rmsnorm.ops import rmsnorm_nd
 from repro.kernels.rmsnorm.ref import rmsnorm_ref

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this proves the distribution config is coherent on the
@@ -8,10 +5,25 @@ production mesh — (16,16) single pod and (2,16,16) two pods — and records
 ``memory_analysis()``, ``cost_analysis()`` and the trip-count-weighted
 collective census (roofline inputs) to artifacts/dryrun/<cell>.json.
 
+Communication policy: all collectives run through the CommEngine
+(core/comm.py).  The manual flags (--gather-order, --quant-gather,
+--prefetch, ...) map 1:1 onto its GatherPolicy/SyncPolicy; ``--policy
+auto`` instead hands the choice to the link-model autotuner
+(core/autotune.py), which prints the ranked candidate table for the
+``--link-profile`` and records the chosen plan — plus a
+predicted-vs-measured cross-check of the plan's per-stage wire bytes
+against the compiled HLO census — into the cell artifact.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k --mesh multi
-  python -m repro.launch.dryrun --all [--mesh both] [--jobs N]
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k \
+      --mesh multi --policy auto --link-profile efa-100g
+  python -m repro.launch.dryrun --all [--mesh both]
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
@@ -25,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, get_config
+from repro.core.autotune import compare_census, predict_traffic, resolve_config
 from repro.core.comm import CommEngine
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state_shapes, make_batch_shapes,
@@ -91,6 +104,13 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         state_bytes_per_param=2 if serve_footprint else None)
     model = build_model(cfg, tp=topo.model_size)
 
+    mcfg, plan = resolve_config(
+        mcfg, model, topo,
+        mode="train" if spec["kind"] == "train" else "serve")
+    if plan is not None:
+        print(plan.table(), flush=True)
+    engine = CommEngine.from_config(topo, mcfg)
+
     record = {
         "arch": cfg.name, "shape": shape,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -104,8 +124,13 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         "params": n_params,
         "active_params": active_param_count(cfg),
         "micro_steps": TRAIN_MICRO_STEPS if spec["kind"] == "train" else 1,
-        "mics": dataclasses.asdict(mcfg) | {"gather_dtype": "bf16"},
-        "comm": CommEngine.from_config(topo, mcfg).describe(),
+        "mics": dataclasses.asdict(mcfg) | {
+            "gather_dtype": jnp.dtype(mcfg.gather_dtype).name,
+            "link_profile": str(getattr(mcfg.link_profile, "name",
+                                        mcfg.link_profile)),
+        },
+        "comm": engine.describe(),
+        "autotune": plan.describe() if plan is not None else None,
         "tag": tag,
     }
 
@@ -180,6 +205,17 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         compiled.as_text(), mesh_shape,
         partition_axes=topo.partition_axes,
         replication_axes=topo.replication_axes)
+    # model-vs-census cross-check: the analytical per-stage wire bytes of
+    # the ACTIVE policy against the measured census (upcast=True because
+    # the dry-run compiles for host devices, where XLA widens bf16
+    # collectives to f32 on the wire).
+    predicted = predict_traffic(
+        model, topo, engine.gather_policy, engine.sync_policy,
+        micro_steps=record["micro_steps"],
+        mode="train" if spec["kind"] == "train" else "serve",
+        upcast_float_collectives=True)
+    record["autotune_cross_check"] = compare_census(
+        predicted["by_stage"], record["stats"]["by_stage"])
     record["total_s"] = round(time.time() - t0, 1)
 
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -196,16 +232,38 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--tag", default="")
-    ap.add_argument("--hierarchical", type=int, default=1)
-    ap.add_argument("--gather-order", default="inner_first")
-    ap.add_argument("--sync-mode", default="2hop")
+    ap.add_argument("--policy", choices=["manual", "auto"], default="manual",
+                    help="'auto' = rank GatherPolicy/SyncPolicy candidates "
+                         "over --link-profile (core/autotune.py), print the "
+                         "ranked table and run the winner; 'manual' = use "
+                         "the flags below verbatim")
+    ap.add_argument("--link-profile", default="v5e",
+                    help="link-bandwidth table for --policy auto: v5e, "
+                         "efa-100g, efa-400g, or a registered custom "
+                         "profile (core/linkmodel.py)")
+    ap.add_argument("--hierarchical", type=int, default=1,
+                    help="1 = staged hierarchical gathers (GatherPolicy "
+                         "topology from --gather-order), 0 = one flat "
+                         "collective over the partition group")
+    ap.add_argument("--gather-order", default="inner_first",
+                    choices=["inner_first", "outer_first"],
+                    help="staged-gather order: inner_first = reorder-free "
+                         "2-stage, outer_first = paper-faithful 3-stage")
+    ap.add_argument("--sync-mode", default="2hop",
+                    choices=["2hop", "allreduce_slice"],
+                    help="SyncPolicy: 2-hop gradient sync vs the Fig-14 "
+                         "all-reduce+slice ablation")
     ap.add_argument("--partition-size", type=int, default=0)
     ap.add_argument("--zero3", action="store_true")
     ap.add_argument("--bf16-scores", action="store_true")
     ap.add_argument("--quant-gather", action="store_true",
-                    help="int8 block-quantized wire/serving-weight gathers")
+                    help="int8 block-quantized wire/serving-weight gathers "
+                         "(GatherPolicy wire_dtype='int8'; under --policy "
+                         "auto this *permits* rather than forces int8)")
     ap.add_argument("--prefetch", type=int, default=1,
-                    help="double-buffered lookahead gathers (0 = serial)")
+                    help="1 = double-buffered lookahead gathers (layer i+1 "
+                         "gathered during layer i's compute; the default), "
+                         "0 = serial reference schedule")
     ap.add_argument("--mlstm-chunk", type=int, default=0)
     ap.add_argument("--tp", type=int, default=0)
     ap.add_argument("--serve-footprint", action="store_true",
@@ -223,6 +281,8 @@ def main():
         mlstm_chunk=args.mlstm_chunk,
         quant_gather=args.quant_gather,
         prefetch=bool(args.prefetch),
+        policy=args.policy,
+        link_profile=args.link_profile,
     )
 
     todo = []

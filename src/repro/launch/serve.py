@@ -1,5 +1,11 @@
 """Serving launcher: prefill a batch of prompts, then greedy-decode.
 
+Weight gathers run through the same CommEngine as training (decode
+re-gathers every layer each step); ``--policy auto`` lets the link-model
+autotuner pick the gather topology/wire dtype for ``--link-profile``
+(serving mode: forward gathers only, so int8 wire wins once
+``--quant-gather`` permits it).
+
 Runnable on this host with reduced configs:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --prompt-len 16 --decode-tokens 8
@@ -14,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
+from repro.core.autotune import resolve_config
 from repro.core.mics import MiCSConfig, init_state
+from repro.core.quant import quantize_state
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.models.build import build_model
 from repro.runtime.serving import build_serve_steps
@@ -27,6 +35,14 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-tokens", type=int, default=8)
+    ap.add_argument("--policy", choices=["manual", "auto"], default="manual",
+                    help="'auto' picks the gather policy from --link-profile")
+    ap.add_argument("--link-profile", default="v5e")
+    ap.add_argument("--quant-gather", action="store_true",
+                    help="int8 wire gathers (a permission under --policy "
+                         "auto)")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="1 = double-buffered lookahead gathers, 0 = serial")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,8 +54,16 @@ def main():
     params = state["params"]
 
     cache_len = args.prompt_len + args.decode_tokens
+    mcfg = MiCSConfig(policy=args.policy, link_profile=args.link_profile,
+                      quant_gather=args.quant_gather,
+                      prefetch=bool(args.prefetch))
+    mcfg, plan = resolve_config(mcfg, model, topo, mode="serve")
+    if plan is not None:
+        print(plan.table())
+    if mcfg.quant_gather:  # deployment-time int8 conversion (quant.py)
+        params = quantize_state(params)
     prefill_fn, decode_fn = build_serve_steps(
-        model, topo, MiCSConfig(), cache_len)
+        model, topo, mcfg, cache_len)
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(

@@ -1,13 +1,23 @@
 """Training launcher.
 
+All parameter-gather and gradient-sync collectives run through the
+CommEngine (core/comm.py): the flags below select its GatherPolicy
+(topology / wire dtype / double-buffered prefetch) and SyncPolicy, or
+``--policy auto`` delegates the choice to the link-model autotuner
+(core/autotune.py) over ``--link-profile``.
+
 Examples:
   # runnable on this host (reduced config, 1 device):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
       --steps 50
 
+  # autotuned policies for an EFA-style network:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --policy auto --link-profile efa-100g
+
   # production lowering check for the full config (no execution):
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
-      --shape train_4k --mesh multi
+      --shape train_4k --mesh multi --policy auto
 """
 
 from __future__ import annotations
@@ -16,6 +26,7 @@ import argparse
 import logging
 
 from repro.configs import get_config, smoke_variant
+from repro.core.autotune import resolve_config
 from repro.core.mics import MiCSConfig
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.data.pipeline import DataConfig
@@ -36,7 +47,26 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default="checkpoints")
     ap.add_argument("--checkpoint-every", type=int, default=25)
-    ap.add_argument("--no-hierarchical", action="store_true")
+    ap.add_argument("--policy", choices=["manual", "auto"], default="manual",
+                    help="'auto' picks gather topology / staging / wire "
+                         "dtype from --link-profile via core/autotune.py")
+    ap.add_argument("--link-profile", default="v5e",
+                    help="link table for --policy auto (v5e, efa-100g, "
+                         "efa-400g, or a registered custom profile)")
+    ap.add_argument("--gather-order", default="inner_first",
+                    choices=["inner_first", "outer_first"],
+                    help="staged-gather order (CommEngine GatherPolicy): "
+                         "reorder-free 2-stage vs paper-faithful 3-stage")
+    ap.add_argument("--no-hierarchical", action="store_true",
+                    help="one flat collective over the partition group "
+                         "instead of staged gathers")
+    ap.add_argument("--quant-gather", action="store_true",
+                    help="int8 blockwise wire gathers (GatherPolicy "
+                         "wire_dtype='int8'; under --policy auto this "
+                         "*permits* rather than forces int8)")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="1 = double-buffered lookahead gathers (default), "
+                         "0 = serial reference schedule")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -48,7 +78,15 @@ def main():
     topo = MiCSTopology(make_host_mesh(1, 1, 1, 1))
     model = build_model(cfg, tp=topo.model_size)
     mcfg = MiCSConfig(micro_steps=args.micro_steps,
-                      hierarchical=not args.no_hierarchical)
+                      hierarchical=not args.no_hierarchical,
+                      gather_order=args.gather_order,
+                      quant_gather=args.quant_gather,
+                      prefetch=bool(args.prefetch),
+                      policy=args.policy,
+                      link_profile=args.link_profile)
+    mcfg, plan = resolve_config(mcfg, model, topo, mode="train")
+    if plan is not None:
+        print(plan.table())
     oc = OptConfig(lr_max=args.lr, total_steps=args.steps,
                    warmup_steps=max(args.steps // 20, 1))
     dc = DataConfig(vocab=cfg.vocab, seq=args.seq,

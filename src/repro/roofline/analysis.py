@@ -1,11 +1,13 @@
 """Roofline synthesis: dry-run artifacts -> three-term roofline table.
 
-Terms (per device, per step; TPU v5e constants from the assignment):
-  compute    = dot_flops / 197e12            (bf16 peak)
-  memory     = hbm_bytes / 819e9             (HBM bandwidth)
-  collective = ici_wire / 50e9 + dci_wire / 6.25e9
-               (per-link ICI; DCI modeled at 1/8 ICI per pod-boundary link —
-                assumption recorded here and in EXPERIMENTS.md)
+Terms (per device, per step; constants read from the v5e link profile —
+core/linkmodel.py is the single link model of the tree):
+  compute    = dot_flops / peak_flops        (bf16 peak, 197e12 on v5e)
+  memory     = hbm_bytes / hbm_bw            (819e9 on v5e)
+  collective = ici_wire / intra_bw + dci_wire / inter_bw
+               (per-link ICI 50e9; DCI modeled at 1/8 ICI per pod-boundary
+                link — assumption recorded in the profile and
+                EXPERIMENTS.md)
 
 MODEL_FLOPS uses 6·N·D for training (N = active params for MoE) and 2·N·D
 for inference shapes, divided across all chips; the ratio MODEL/HLO exposes
@@ -18,10 +20,12 @@ import json
 import pathlib
 from collections import defaultdict
 
-PEAK_BF16 = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-DCI_BW = 6.25e9
+from repro.core.linkmodel import V5E
+
+PEAK_BF16 = V5E.peak_flops
+HBM_BW = V5E.hbm_bw
+ICI_BW = V5E.intra.bandwidth
+DCI_BW = V5E.inter.bandwidth
 
 ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
 

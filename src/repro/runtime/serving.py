@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.autotune import resolve_config
 from repro.core.comm import CommEngine
 from repro.core.mics import MiCSConfig, state_pspecs
 from repro.core.topology import MODEL_AXIS, MiCSTopology
@@ -104,10 +105,14 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
     Weight gathers (bf16 or int8-quantized, serial or prefetched) run
     through the same CommEngine as training — decode re-gathers every
     layer each step, so the prefetch schedule matters most here.
+    ``policy="auto"`` configs are resolved by the link-model autotuner
+    first (serving mode: forward gathers only, no gradient sync).
     """
+    mcfg, _ = resolve_config(mcfg, model, topo, mode="serve")
     comm = CommEngine.from_config(topo, mcfg)
     ctx = L.Ctx(mode="decode", tp=topo.model_size, tp_axis=MODEL_AXIS,
                 cache_len=cache_len, window=model.cfg.window,
+                compute_dtype=jnp.dtype(mcfg.gather_dtype),
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
     baxes = topo.data_axes if batch_axes is None else batch_axes
     flat_specs = state_pspecs(model, topo)["params"]

@@ -1,0 +1,106 @@
+"""Docs checker: execute every ```python snippet and validate intra-doc
+links (the CI docs job — .github/workflows/ci.yml).
+
+Usage:
+  PYTHONPATH=src python tools/check_docs.py [files...]
+
+Defaults to README.md + docs/*.md.  Rules:
+
+* every fenced ```python block must run to completion in a fresh
+  subprocess with PYTHONPATH=src (snippets are self-contained by
+  convention; put `<!-- notest -->` on the line directly above a fence to
+  skip one, e.g. for deliberately-failing or accelerator-only examples);
+* every relative markdown link target must exist on disk (external
+  http(s)/mailto links are not fetched).
+
+Exit code 0 iff everything passes; failures print the file, the snippet
+index or link, and the captured stderr.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)(#[^)]*)?\)")
+SKIP_MARK = "<!-- notest -->"
+
+
+def extract_snippets(text: str) -> list[tuple[int, str, bool]]:
+    """(start_line, code, skip) for each fenced ```python block."""
+    out = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1) == "python":
+            skip = i > 0 and SKIP_MARK in lines[i - 1]
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            out.append((start, "\n".join(body), skip))
+        i += 1
+    return out
+
+
+def run_snippet(code: str, cwd: pathlib.Path) -> tuple[bool, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=900, cwd=str(cwd), env=env,
+    )
+    return proc.returncode == 0, proc.stderr[-3000:]
+
+
+def check_links(path: pathlib.Path, text: str) -> list[str]:
+    errors = []
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [pathlib.Path(a).resolve() for a in argv] or [
+        ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    failures: list[str] = []
+    n_snips = 0
+    for path in files:
+        text = path.read_text()
+        failures += check_links(path, text)
+        for line, code, skip in extract_snippets(text):
+            rel = path.relative_to(ROOT) if path.is_relative_to(ROOT) \
+                else path
+            if skip:
+                print(f"SKIP {rel}:{line} (notest)")
+                continue
+            n_snips += 1
+            ok, err = run_snippet(code, ROOT)
+            status = "ok" if ok else "FAIL"
+            print(f"{status:4} {rel}:{line}")
+            if not ok:
+                failures.append(f"{rel}:{line} snippet failed:\n{err}")
+    for f in failures:
+        print(f, file=sys.stderr)
+    print(f"{n_snips} snippets run, {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
