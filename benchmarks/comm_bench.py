@@ -1,12 +1,15 @@
 """Serial vs double-buffered-prefetch gather schedules on the host mesh,
-plus the autotuner's predicted-vs-measured ledger per gather policy.
+plus the autotuner's predicted-vs-measured ledger per gather policy and the
+boundary scheduler's serial-vs-bucketed hop-2 ledger.
 
 Run standalone (benchmarks/run.py invokes it as a subprocess so the main
 benchmark process keeps its single CPU device):
 
-  PYTHONPATH=src python benchmarks/comm_bench.py
+  PYTHONPATH=src python benchmarks/comm_bench.py [--smoke] [--steps N]
 
-Prints one JSON object (saved as BENCH_comm.json by run.py):
+``--smoke`` runs the CI-sized variant (fewer timing steps, same coverage)
+— the ci.yml ``bench`` step regression-checks the exposed-hop-2 ledger on
+every PR.  Prints one JSON object (saved as BENCH_comm.json by run.py):
 
 * per-schedule wall time per training step, the HLO-census
   gathered-bytes/collective counts, the carried-gather prefetch evidence,
@@ -15,9 +18,17 @@ Prints one JSON object (saved as BENCH_comm.json by run.py):
 * a ``policies`` section: for each gather policy (flat / inner_first /
   outer_first bf16 wire, inner_first int8), the analytical per-stage wire
   bytes (core/autotune.predict_traffic) against the measured census of the
-  compiled step, and the α-β modeled comm time under two link profiles
-  (v5e + efa-100g, core/linkmodel.py);
-* the autotuner's full ranked table per profile (``autotune_rankings``).
+  compiled step, the α-β modeled comm time under two link profiles (v5e +
+  efa-100g, core/linkmodel.py), a measured wall time, and the
+  ``fit_inputs`` stage ledger that ``tools/fit_profile.py`` fits per-tier
+  (α, β) from;
+* a ``boundary`` section on a replicated mesh (hop 2 live): serial vs
+  bucketed boundary schedule (core/schedule.py) — bitwise-equal
+  loss/grad-norm trajectories, wall times, the census evidence that hop-2
+  runs at bucket granularity interleaved with boundary compute, and the
+  link model's predicted exposed-vs-hidden hop-2 time per profile;
+* the autotuner's full ranked table per profile (``autotune_rankings``) —
+  which now ranks ``hop2_bucket_mb`` as a candidate axis.
 """
 
 import os
@@ -27,6 +38,7 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
+import argparse
 import json
 import time
 
@@ -36,14 +48,16 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core.autotune import (
-    compare_census, cost_candidate, predict_traffic, rank_policies,
+    compare_census, cost_candidate, cost_hop2_schedule, predict_traffic,
+    rank_policies,
 )
-from repro.core.comm import GatherPolicy, SyncPolicy
+from repro.core.comm import CommEngine, GatherPolicy, SyncPolicy
 from repro.core.linkmodel import get_profile
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state, init_state_shapes,
     make_batch_shapes,
 )
+from repro.core.schedule import plan_boundary
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.models.build import build_model
 from repro.optim.adamw import OptConfig
@@ -51,6 +65,7 @@ from repro.roofline.hlo_stats import analyze
 
 STEPS = 8
 MICRO = 2
+BOUNDARY_BUCKET_MB = 0.05  # small enough to split the smoke model's pools
 
 PROFILES = ("v5e", "efa-100g")
 # (label, GatherPolicy fields, MiCSConfig fields) — >= 3 policies for the
@@ -122,7 +137,8 @@ def run(steps: int = STEPS) -> dict:
         == out["prefetch"]["losses"]
     out["speedup"] = round(
         out["serial"]["us_per_step"] / out["prefetch"]["us_per_step"], 3)
-    out["policies"] = policy_ledger(model, topo, mesh_shape)
+    out["policies"] = policy_ledger(model, topo, mesh_shape, batch, steps)
+    out["boundary"] = boundary_bench(cfg, steps)
     out["autotune_rankings"] = {
         name: rank_policies(model, topo, name, micro_steps=MICRO,
                             prefetch=True).describe()
@@ -131,14 +147,18 @@ def run(steps: int = STEPS) -> dict:
     return out
 
 
-def policy_ledger(model, topo, mesh_shape) -> dict:
+def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
     """Predicted-vs-measured per gather policy, on two link profiles.
 
     Measured: per-stage census wire bytes of the compiled (serial) train
-    step.  Predicted: core/autotune.predict_traffic with
-    ``upcast_float_collectives=True`` (the census is compiled for host
-    CPUs, where XLA widens bf16 collectives to f32).  Modeled times use
-    the un-upcast traffic — the real wire cost on each profile.
+    step, plus its wall time per step.  Predicted:
+    core/autotune.predict_traffic with ``upcast_float_collectives=True``
+    (the census is compiled for host CPUs, where XLA widens bf16
+    collectives to f32).  Modeled times use the un-upcast traffic — the
+    real wire cost on each profile.  ``fit_inputs`` is the per-stage
+    (tier, α-events, wire bytes) ledger plus the measured time —
+    exactly what ``tools/fit_profile.py`` least-squares a per-tier (α, β)
+    table from on real hardware.
     """
     ledger = {}
     for label, (topology, wire), mcfg_kw in POLICIES:
@@ -153,17 +173,41 @@ def policy_ledger(model, topo, mesh_shape) -> dict:
             mesh_shape,
             partition_axes=topo.partition_axes,
             replication_axes=topo.replication_axes)
+        state = init_state(model, topo, seed=11)
+        state, m = step(state, batch)  # compile cache warm + donation
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        t_measured = (time.perf_counter() - t0) / steps
         gp = GatherPolicy(topology, wire, None, False)
         sp = SyncPolicy()
         predicted = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
                                     upcast_float_collectives=True)
         cmp = compare_census(predicted["by_stage"], stats["by_stage"])
+        wire_pred = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
+                                    profile=get_profile("v5e"))
         entry = {
             "predicted_vs_measured": cmp,
             "byte_match": all(
                 abs(row["ratio"] - 1.0) <= 0.02 for row in cmp.values()),
             "measured_total_wire_bytes": stats["total_wire_bytes"],
+            "measured_us_per_step": round(t_measured * 1e6, 1),
             "modeled_t_comm_us": {},
+            "fit_inputs": {
+                "t_measured_s": t_measured,
+                "stages": {
+                    lbl: {
+                        "tier": e["tier"],
+                        "alpha_events": e["events"] * (
+                            2 * (e["group_size"] - 1) if lbl == "hop2"
+                            else e["group_size"] - 1),
+                        "wire_bytes": e["wire_bytes"],
+                    }
+                    for lbl, e in wire_pred["by_stage"].items()
+                },
+            },
         }
         for name in PROFILES:
             cand = cost_candidate(model, topo, get_profile(name), gp, sp,
@@ -173,5 +217,108 @@ def policy_ledger(model, topo, mesh_shape) -> dict:
     return ledger
 
 
+def boundary_bench(cfg, steps) -> dict:
+    """Serial vs bucketed boundary schedule on a replicated mesh (repl=2,
+    p=2, tp=2 — hop 2 is live).  The two schedules must produce bitwise
+    equal loss/grad-norm trajectories; the ledger records wall times, the
+    bucket-granular hop-2 census, and the link model's exposed-vs-hidden
+    prediction per profile (what a real cluster would regression-check)."""
+    mesh = make_host_mesh(1, 2, 2, 2)
+    topo = MiCSTopology(mesh)
+    model = build_model(cfg, tp=2)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rng = np.random.default_rng(17)
+    b, t = 8, 32
+    batch = {
+        "tokens": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                            jnp.int32),
+        "targets": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                             jnp.int32),
+        "mask": jnp.ones((MICRO, b, t), jnp.float32),
+    }
+    bplan = plan_boundary(model, topo, mode="bucketed",
+                          bucket_mb=BOUNDARY_BUCKET_MB)
+    out = {"mesh": mesh_shape, "bucket_mb": BOUNDARY_BUCKET_MB,
+           "n_buckets": bplan.n_buckets, "steps": steps}
+    for label in ("serial", "bucketed"):
+        mcfg = MiCSConfig(micro_steps=MICRO, boundary_schedule=label,
+                          hop2_bucket_mb=BOUNDARY_BUCKET_MB)
+        step = build_train_step(model, topo, mcfg,
+                                OptConfig(total_steps=100, warmup_steps=0,
+                                          lr_max=3e-3))
+        stats = analyze(
+            step.lower(init_state_shapes(model),
+                       make_batch_shapes(model, MICRO * b, t, MICRO))
+                .compile().as_text(),
+            mesh_shape,
+            partition_axes=topo.partition_axes,
+            replication_axes=topo.replication_axes)
+        state = init_state(model, topo, seed=13)
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        traj = []
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step(state, batch)
+            traj.append((float(m["loss"]), float(m["grad_norm"])))
+        dt = (time.perf_counter() - t0) / steps
+        out[label] = {
+            "us_per_step": round(dt * 1e6, 1),
+            "trajectory": traj,
+            "census_boundary": stats["boundary"],
+        }
+    out["trajectory_bitwise_equal"] = (
+        out["serial"]["trajectory"] == out["bucketed"]["trajectory"])
+    out["measured_exposed_delta_us"] = round(
+        out["serial"]["us_per_step"] - out["bucketed"]["us_per_step"], 1)
+    sync = CommEngine.from_config(
+        topo, MiCSConfig(boundary_schedule="bucketed")).sync_policy
+    out["predicted"] = {
+        name: {
+            "serial": cost_hop2_schedule(
+                model, topo, get_profile(name), sync, boundary="serial"),
+            "bucketed": cost_hop2_schedule(
+                model, topo, get_profile(name), sync, boundary="bucketed",
+                bucket_mb=BOUNDARY_BUCKET_MB),
+        }
+        for name in PROFILES
+    }
+    return out
+
+
+def check_ledger(out: dict) -> None:
+    """The CI regression gate (ci.yml ``bench`` job): schedules must not
+    change numerics, the census must match the analytical model, and the
+    exposed-hop-2 / fit ledgers must be present and well-formed."""
+    assert out["loss_bitwise_equal"], "prefetch changed the loss"
+    b = out["boundary"]
+    assert b["trajectory_bitwise_equal"], \
+        "bucketed boundary changed the numerics"
+    assert b["bucketed"]["census_boundary"]["interleaved"]
+    assert b["bucketed"]["census_boundary"]["hop2_ops"] == b["n_buckets"]
+    assert b["serial"]["census_boundary"]["hop2_ops"] < b["n_buckets"]
+    for name, pred in b["predicted"].items():
+        assert pred["serial"]["t_exposed_s"] == pred["serial"]["t_total_s"]
+        assert pred["bucketed"]["t_exposed_s"] \
+            <= pred["bucketed"]["t_total_s"], name
+    for label, entry in out["policies"].items():
+        assert entry["byte_match"], (label, "census mismatch")
+        assert entry["fit_inputs"]["t_measured_s"] > 0, label
+        assert entry["fit_inputs"]["stages"], label
+
+
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer timing steps, same coverage")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="timing steps per schedule (default 8, smoke 2)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the ledger invariants (the CI gate) after "
+                         "printing the JSON")
+    args = ap.parse_args()
+    steps = args.steps or (2 if args.smoke else STEPS)
+    out = run(steps)
+    print(json.dumps(out, indent=1))
+    if args.check:
+        check_ledger(out)

@@ -13,7 +13,10 @@ module closes the loop: given a model, a MiCS topology and a link profile it
    exact units so model and measurement are directly comparable), and
 2. **costs** every candidate policy with the α-β model over the profile's
    two link tiers (:func:`rank_policies` — topology x inner factor x wire
-   dtype x hop-2 compression), returning a ranked :class:`Plan`, and
+   dtype x hop-2 compression x boundary schedule: the hop-2 stage is costed
+   per bucket size as hidden-vs-exposed pipeline time,
+   :func:`cost_hop2_schedule`, so ``hop2_bucket_mb`` is a ranked candidate
+   axis), returning a ranked :class:`Plan`, and
 3. **resolves** ``MiCSConfig(policy="auto")`` into the concrete winning
    config (:func:`resolve_config`), which is what ``build_train_step``,
    ``build_serve_steps`` and ``launch/dryrun.py`` call.
@@ -43,6 +46,7 @@ import jax.numpy as jnp
 from repro.core.linkmodel import LinkProfile, get_profile
 from repro.core.comm import GatherPolicy, SyncPolicy, WIRE_DTYPES
 from repro.core.quant import BLOCK
+from repro.core.schedule import plan_boundary
 from repro.core.topology import MiCSTopology, default_hierarchy_inner
 
 # census bytes-per-element on the wire, by wire dtype.  int8 gathers are two
@@ -313,12 +317,82 @@ def compare_census(predicted: dict, measured: dict,
 
 
 # ---------------------------------------------------------------------------
+# hop-2 boundary-schedule costing (hidden vs exposed time per bucket size)
+# ---------------------------------------------------------------------------
+
+# Per-element HBM bytes of the compute a bucketed hop-2 can hide behind the
+# next bucket's collective: reading the fp32 reduction result, writing the
+# decompressed fp32 value (bf16 hop-2 wire), and the squared-norm partial's
+# read — NOT the AdamW pass, which the exact global-norm clip pins after the
+# last bucket's partial (core/schedule.py's ordering argument).
+HOP2_HIDE_BYTES_PER_ELEM = 12.0
+
+DEFAULT_HOP2_BUCKET_MB = 32.0
+HOP2_BUCKET_MB_CANDIDATES = (4.0, 32.0, 128.0)
+
+
+def cost_hop2_schedule(
+    model,
+    topo: MiCSTopology,
+    profile: str | LinkProfile,
+    sync: SyncPolicy,
+    *,
+    boundary: str = "serial",
+    bucket_mb: float = DEFAULT_HOP2_BUCKET_MB,
+) -> dict:
+    """α-β cost of the boundary hop-2 under a schedule.
+
+    ``serial``: one all-reduce per pool, fully exposed (the seed boundary —
+    the optimizer waits for the whole tree).  ``bucketed``: fixed-byte
+    buckets software-pipelined against the per-bucket norm/decompress
+    compute (core/schedule.py); bucket *k*'s collective hides behind bucket
+    *k−1*'s compute, so the exposed time is
+
+        t_c[0] + Σ_{k≥1} max(0, t_c[k] − t_x[k−1])
+
+    where ``t_c`` is each bucket's ring time and ``t_x`` the hideable
+    compute (:data:`HOP2_HIDE_BYTES_PER_ELEM` over the profile's HBM
+    bandwidth).  Smaller buckets expose less head time but pay one
+    ``2(r−1)·α`` startup per bucket — the trade the tuner ranks
+    ``hop2_bucket_mb`` over.  Returns ``{"t_total_s", "t_exposed_s",
+    "t_hidden_s", "n_buckets"}`` (zeros when hop 2 is absent).
+    """
+    profile = get_profile(profile)
+    r = topo.replication_degree
+    out = {"t_total_s": 0.0, "t_exposed_s": 0.0, "t_hidden_s": 0.0,
+           "n_buckets": 0}
+    if r <= 1 or sync.mode != "2hop":
+        return out
+    tier = _hop2_tier(topo, profile)
+    hop2_b = 2.0 if sync.hop2_wire_dtype == "bf16" else 4.0
+    plan = plan_boundary(model, topo, mode=boundary, bucket_mb=bucket_mb)
+
+    t_c: list[float] = []   # per-payload collective time, canonical order
+    t_x: list[float] = []   # per-payload hideable compute time
+    for n in plan.hop2_payload_elems():
+        wire = 2.0 * n * hop2_b * (r - 1) / r
+        t_c.append(profile.ring_time(tier, r, wire)
+                   + (r - 1) * profile.link(tier).alpha)  # 2(r-1) hops
+        t_x.append(n * HOP2_HIDE_BYTES_PER_ELEM / profile.hbm_bw)
+
+    total = sum(t_c)
+    if boundary == "serial" or not t_c:
+        exposed = total
+    else:
+        exposed = t_c[0] + sum(
+            max(0.0, t_c[k] - t_x[k - 1]) for k in range(1, len(t_c)))
+    out.update(t_total_s=total, t_exposed_s=exposed,
+               t_hidden_s=total - exposed, n_buckets=len(t_c))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # alpha-beta costing + ranking
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One costed (GatherPolicy, SyncPolicy) combination."""
+    """One costed (GatherPolicy, SyncPolicy, boundary schedule) combination."""
 
     gather: GatherPolicy
     sync: SyncPolicy
@@ -328,6 +402,11 @@ class Candidate:
     inter_wire_bytes: float              # slow-tier bytes / step
     lossy_wire: bool
     lossy_hop2: bool
+    boundary: str = "serial"             # hop-2 boundary schedule
+    hop2_bucket_mb: float = DEFAULT_HOP2_BUCKET_MB
+    n_hop2_buckets: int = 0
+    t_hop2_total_s: float = 0.0          # full hop-2 ring time
+    t_hop2_exposed_s: float = 0.0        # what actually serializes the step
 
     def describe(self) -> dict:
         return {
@@ -339,6 +418,12 @@ class Candidate:
                 k: v["wire_bytes"] for k, v in self.bytes_by_stage.items()},
             "inter_wire_bytes": self.inter_wire_bytes,
             "lossy": self.lossy_wire or self.lossy_hop2,
+            "boundary": self.boundary,
+            "hop2_bucket_mb": self.hop2_bucket_mb,
+            "n_hop2_buckets": self.n_hop2_buckets,
+            "t_hop2_total_s": self.t_hop2_total_s,
+            "t_hop2_exposed_s": self.t_hop2_exposed_s,
+            "t_hop2_hidden_s": self.t_hop2_total_s - self.t_hop2_exposed_s,
         }
 
 
@@ -367,14 +452,19 @@ class Plan:
         rows = [f"autotune[{self.profile.name}] mode={self.mode} "
                 f"(chosen marked *):",
                 f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
-                f"{'hop2':>5} {'t_comm_ms':>10} {'inter_MB':>9}"]
+                f"{'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
+                f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9}"]
         cands = self.candidates[:top] if top else self.candidates
         for i, c in enumerate(cands):
             mark = "*" if c is self.chosen else " "
+            sched = "bucket" if c.boundary == "bucketed" else "serial"
+            bkt = f"{c.hop2_bucket_mb:g}" if c.boundary == "bucketed" else "-"
             rows.append(
                 f" {mark}{i:>4} {c.gather.topology:<12} "
                 f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
-                f"{c.sync.hop2_wire_dtype:>5} {c.t_comm_s * 1e3:>10.3f} "
+                f"{c.sync.hop2_wire_dtype:>5} {sched:>6} {bkt:>6} "
+                f"{c.t_comm_s * 1e3:>10.3f} "
+                f"{c.t_hop2_exposed_s * 1e3:>9.3f} "
                 f"{c.inter_wire_bytes / 1e6:>9.2f}")
         if self.chosen not in cands:
             rows.append(f"  ... chosen: {self.chosen.describe()['gather']}")
@@ -390,9 +480,14 @@ def cost_candidate(
     *,
     micro_steps: int = 1,
     mode: str = "train",
+    boundary: str = "serial",
+    hop2_bucket_mb: float = DEFAULT_HOP2_BUCKET_MB,
 ) -> Candidate:
     """α-β time of one candidate: per-stage ring times over the profile's
-    tiers + the outer-first reorder copy."""
+    tiers + the outer-first reorder copy.  The hop-2 stage is costed by the
+    boundary schedule (:func:`cost_hop2_schedule`): only its *exposed* time
+    enters ``t_comm_s`` — under the bucketed pipeline the hidden fraction
+    overlaps boundary compute and no longer serializes the step."""
     pred = predict_traffic(model, topo, gather, sync,
                            micro_steps=micro_steps, mode=mode,
                            profile=profile)
@@ -400,14 +495,24 @@ def cost_candidate(
     total = 0.0
     inter_bytes = 0.0
     for label, e in pred["by_stage"].items():
+        if label == "hop2":
+            continue  # costed by the boundary schedule below
         g = e["group_size"]
-        hops = 2 * (g - 1) if label == "hop2" else (g - 1)
+        hops = g - 1
         link = profile.link(e["tier"])
         t = e["events"] * hops * link.alpha + e["wire_bytes"] / link.bandwidth
         t_by_stage[label] = t
         total += t
         if e["tier"] == "inter":
             inter_bytes += e["wire_bytes"]
+    hop2 = {"t_total_s": 0.0, "t_exposed_s": 0.0, "n_buckets": 0}
+    if mode == "train" and "hop2" in pred["by_stage"]:
+        hop2 = cost_hop2_schedule(model, topo, profile, sync,
+                                  boundary=boundary, bucket_mb=hop2_bucket_mb)
+        t_by_stage["hop2"] = hop2["t_exposed_s"]
+        total += hop2["t_exposed_s"]
+        if pred["by_stage"]["hop2"]["tier"] == "inter":
+            inter_bytes += pred["by_stage"]["hop2"]["wire_bytes"]
     if pred["local_copy_bytes"]:
         t_by_stage["reorder.copy"] = profile.copy_time(
             pred["local_copy_bytes"])
@@ -417,6 +522,10 @@ def cost_candidate(
         bytes_by_stage=pred["by_stage"], inter_wire_bytes=inter_bytes,
         lossy_wire=gather.wire_dtype == "int8",
         lossy_hop2=sync.hop2_wire_dtype == "bf16",
+        boundary=boundary, hop2_bucket_mb=hop2_bucket_mb,
+        n_hop2_buckets=hop2["n_buckets"],
+        t_hop2_total_s=hop2["t_total_s"],
+        t_hop2_exposed_s=hop2["t_exposed_s"],
     )
 
 
@@ -444,6 +553,18 @@ def enumerate_candidates(
     return [(g, SyncPolicy("2hop", h)) for g in gathers for h in hop2_wires]
 
 
+def enumerate_hop2_schedules(topo: MiCSTopology,
+                             mode: str = "train") -> list[tuple[str, float]]:
+    """Boundary-schedule axis of the candidate grid: the serial reference
+    plus the bucketed pipeline at each :data:`HOP2_BUCKET_MB_CANDIDATES`
+    size.  Collapses to one entry when hop 2 is absent (no replication, or
+    serving — the boundary never runs)."""
+    if mode != "train" or topo.replication_degree <= 1:
+        return [("bucketed", DEFAULT_HOP2_BUCKET_MB)]
+    return [("serial", DEFAULT_HOP2_BUCKET_MB)] + [
+        ("bucketed", mb) for mb in HOP2_BUCKET_MB_CANDIDATES]
+
+
 def rank_policies(
     model,
     topo: MiCSTopology,
@@ -464,11 +585,14 @@ def rank_policies(
     profile = get_profile(profile)
     cands = [
         cost_candidate(model, topo, profile, g, s,
-                       micro_steps=micro_steps, mode=mode)
+                       micro_steps=micro_steps, mode=mode,
+                       boundary=boundary, hop2_bucket_mb=bucket_mb)
         for g, s in enumerate_candidates(topo, prefetch=prefetch)
+        for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode)
     ]
     cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
-                              c.gather.wire_dtype))
+                              c.gather.wire_dtype, c.boundary,
+                              c.hop2_bucket_mb))
     eligible = [c for c in cands
                 if (allow_int8 or not c.lossy_wire)
                 and (allow_bf16_hop2 or not c.lossy_hop2)]
@@ -512,5 +636,7 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         quant_gather=g.wire_dtype == "int8",
         sync_mode="2hop",
         compress_hop2=s.hop2_wire_dtype == "bf16",
+        boundary_schedule=plan.chosen.boundary,
+        hop2_bucket_mb=plan.chosen.hop2_bucket_mb,
     )
     return resolved, plan

@@ -265,6 +265,22 @@ class CommEngine:
         g = C.hop2_all_reduce(g, self.topo)
         return g.astype(jnp.float32)
 
+    def hop2_bucketed(self, bucket: jax.Array) -> jax.Array:
+        """Hop 2 at bucket granularity: the identical replication-group
+        all-reduce (same axes, same optional bf16 wire compression) applied
+        to one fixed-byte slice of a pool's flat gradient shard.
+
+        The boundary scheduler (core/schedule.py) issues these one bucket
+        ahead of the dependent norm/optimizer compute so the collective
+        overlaps it.  Because ``psum`` (and the bf16 cast) is elementwise,
+        a bucket of the reduced buffer is bitwise equal to the reduction of
+        the bucket — which is what makes the bucketed boundary exactly
+        equivalent to the serial reference.  This stays the single
+        construction point for the collective: same code path as
+        :meth:`hop2`, just a different payload shape.
+        """
+        return self.hop2(bucket)
+
     # -- misc reductions -----------------------------------------------------
     def partition_coord(self):
         """Linearized index of this device within its partition group."""

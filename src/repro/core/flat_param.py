@@ -166,6 +166,36 @@ class FlatLayout:
         return (gidx < self.raw_len).astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# fixed-byte bucketization (the boundary scheduler's unit of pipelining)
+# ---------------------------------------------------------------------------
+
+def bucket_elems(bucket_mb: float, itemsize: int = 4) -> int:
+    """Elements per fixed-byte bucket (>= 1 even for degenerate sizes)."""
+    if bucket_mb <= 0:
+        raise ValueError(f"bucket_mb must be > 0, got {bucket_mb}")
+    return max(1, int(bucket_mb * 1e6) // itemsize)
+
+
+def partition_buckets(
+    n_elems: int, bucket_mb: float, itemsize: int = 4
+) -> tuple[tuple[int, int], ...]:
+    """Split ``[0, n_elems)`` into contiguous ``(lo, hi)`` buckets of at most
+    ``bucket_mb`` megabytes each (``itemsize`` bytes per element).
+
+    Static Python ints — the boundary scheduler (core/schedule.py) unrolls
+    over these, so bucket count is a compile-time property.  Degenerate
+    cases: ``bucket_mb`` larger than the whole buffer yields one bucket;
+    every element is covered exactly once in order.
+    """
+    if n_elems <= 0:
+        return ()
+    per = bucket_elems(bucket_mb, itemsize)
+    return tuple(
+        (lo, min(lo + per, n_elems)) for lo in range(0, n_elems, per)
+    )
+
+
 class LayoutBuilder:
     """Accumulates segments with automatic offsets."""
 

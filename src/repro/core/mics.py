@@ -13,9 +13,13 @@ Schedule (one jitted step = one gradient-accumulation boundary, s micro-steps):
           checkpointing)
       backward: the gather's custom-VJP adjoint reduce-scatters gradients
           across the partition group -> hop 1 (§3.4), accumulated in fp32
-  at the boundary:
+  at the boundary (core/schedule.py, the boundary scheduler):
       psum over replication axes                 -> hop 2 (§3.4)
       global-norm clip, AdamW on fp32 shards (optimizer states partitioned)
+      — run serially (reference) or as a bucketed software pipeline that
+      issues bucket k's hop-2 while bucket k-1's norm/decompress compute
+      runs, bitwise identical to the serial path
+      (MiCSConfig(boundary_schedule=..., hop2_bucket_mb=...))
 
 Every collective above is owned by ONE ``CommEngine`` (core/comm.py, see
 DESIGN.md §4) built from (MiCSTopology, MiCSConfig).  ZeRO-3 baseline =
@@ -38,11 +42,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.autotune import resolve_config
 from repro.core.comm import CommEngine
+from repro.core.schedule import BOUNDARY_SCHEDULES, apply_boundary, plan_boundary
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.models import layers as L
 from repro.models import lm
 from repro.models.lm import ModelDef
-from repro.optim.adamw import OptConfig, adamw_shard_update
+from repro.optim.adamw import OptConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,11 +77,20 @@ class MiCSConfig:
     prefetch: bool = True               # double-buffered lookahead gathers
     policy: str = "manual"              # 'manual' | 'auto' (link-model tuner)
     link_profile: Any = "v5e"           # profile name or LinkProfile instance
+    boundary_schedule: str = "bucketed"  # 'serial' (reference) | 'bucketed'
+    hop2_bucket_mb: float = 32.0        # fixed-byte hop-2 pipeline bucket
 
     def __post_init__(self):
         if self.policy not in ("manual", "auto"):
             raise ValueError(f"unknown policy {self.policy!r} "
                              "(expected 'manual' or 'auto')")
+        if self.boundary_schedule not in BOUNDARY_SCHEDULES:
+            raise ValueError(
+                f"unknown boundary_schedule {self.boundary_schedule!r} "
+                f"(expected one of {BOUNDARY_SCHEDULES})")
+        if self.hop2_bucket_mb <= 0:
+            raise ValueError(
+                f"hop2_bucket_mb must be > 0, got {self.hop2_bucket_mb}")
 
 
 # ---------------------------------------------------------------------------
@@ -185,12 +199,13 @@ def build_train_step(
     """
     mcfg, _ = resolve_config(mcfg, model, topo, mode="train")
     comm = CommEngine.from_config(topo, mcfg)
+    boundary = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
+                             bucket_mb=mcfg.hop2_bucket_mb)
     ctx = L.Ctx(mode="train", tp=topo.model_size, tp_axis=MODEL_AXIS,
                 compute_dtype=jnp.dtype(mcfg.gather_dtype),
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
     s = mcfg.micro_steps
     denom = float(s * topo.data_parallel_size)
-    shard_coord = comm.partition_coord
 
     def loss_of(flat, micro_batch):
         return lm.loss_fn(model, flat, comm, ctx, micro_batch)
@@ -211,32 +226,12 @@ def build_train_step(
         (grads, loss_sum, aux_sum), _ = lax.scan(
             micro, (zeros, jnp.float32(0.0), jnp.float32(0.0)), batch)
 
-        # ---- hop 2: replication-group all-reduce at the boundary ----------
-        grads = jax.tree.map(comm.hop2, grads)
-        grads = jax.tree.map(lambda g: g / denom, grads)
-
-        # ---- global-norm clip ---------------------------------------------
-        sq_local = sum(
-            jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
-        sq = lax.psum(sq_local, topo.partition_axes + (MODEL_AXIS,))
-        gnorm = jnp.sqrt(sq)
-        scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
-        grads = jax.tree.map(lambda g: g * scale, grads)
-
-        # ---- AdamW on fp32 shards ------------------------------------------
+        # ---- boundary: hop 2 + exact clip + AdamW (core/schedule.py) ------
+        # Serial reference or the bucketed software pipeline; bitwise
+        # identical either way (tests/schedule_harness.py).
+        new_params, new_m, new_v, gnorm = apply_boundary(
+            boundary, comm, model, topo, oc, state, grads, denom)
         step = state["step"]
-        new_params, new_m, new_v = {}, {}, {}
-        for pool in model.all_pools():
-            name = pool.name
-            g = grads[name]
-            shard_len = g.shape[-1]
-            start = shard_coord() * shard_len
-            dm = pool.layout.decay_mask_for_shard(start, shard_len)
-            pm = pool.layout.padding_mask_for_shard(start, shard_len)
-            p, m, v = adamw_shard_update(
-                state["params"][name], g, state["m"][name], state["v"][name],
-                step, oc, decay_mask=dm, pad_mask=pm)
-            new_params[name], new_m[name], new_v[name] = p, m, v
 
         metrics = {
             "loss": lax.pmean(loss_sum / s, topo.data_axes),

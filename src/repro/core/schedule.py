@@ -1,0 +1,241 @@
+"""Boundary scheduler: the gradient-accumulation boundary as a bucketed
+software pipeline (hop-2 overlap, ROADMAP "Async hop-2 overlap").
+
+The boundary of one training step is ``hop-2 all-reduce -> global-norm clip
+-> AdamW`` (paper §3.4: the expensive cross-replica sync runs once per
+accumulation boundary).  The seed implementation ran it as a monolithic
+barrier: every pool's hop-2 completed before a single optimizer FLOP
+issued.  This module refactors the boundary into a **plan + two schedules**:
+
+* :func:`plan_boundary` partitions each pool's local gradient shard
+  (``[stack, 1, shard_len]`` fp32) into fixed-byte buckets
+  (``core/flat_param.partition_buckets``) in one canonical order — pools in
+  ``model.all_pools()`` order, offsets ascending.  Bucket count is a
+  compile-time property of ``(model, topo, hop2_bucket_mb)``.
+* ``serial`` schedule (:func:`apply_boundary`, the reference path): hop-2
+  the whole gradient tree first, then compute, exactly like the seed.
+* ``bucketed`` schedule: a software pipeline over the plan's buckets —
+  bucket *k*'s hop-2 collective (``CommEngine.hop2_bucketed``) is issued
+  *before* bucket *k−1*'s dependent compute (squared-norm partial, bf16
+  wire decompress), so the collective has no data dependency on that
+  compute and XLA's scheduler can overlap the two.  Once the clip scale is
+  known the AdamW shard update runs per pool with the scale folded in.
+
+**The exact-clip ordering argument.**  Global-norm clipping needs the norm
+of *every* gradient element before *any* update applies, so the AdamW pass
+can never overlap the last bucket's hop-2 — but everything before it can.
+To keep the two schedules bitwise identical at every bucket size, both
+compute the squared norm the same way: a left-fold over per-bucket partials
+in the plan's canonical order (the serial path folds over slices of the
+pool-wise-reduced buffer; the bucketed path over the bucket-wise-reduced
+buffers — elementwise ``psum``/casts commute with slicing, so the inputs
+are bitwise equal, and the fold order is literally the same Python loop).
+The denominator (``micro_steps * data_parallel``) and the clip factor are
+folded into one ``grad_scale`` passed to ``adamw_shard_update`` — no
+standalone full-gradient-tree division pass on either schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.flat_param import partition_buckets
+from repro.core.topology import MODEL_AXIS, MiCSTopology
+from repro.optim.adamw import OptConfig, adamw_shard_update
+
+BOUNDARY_SCHEDULES = ("serial", "bucketed")
+
+# fp32 gradient accumulator bytes per element — what a bucket's byte budget
+# is measured in (the wire payload may be narrower under bf16 hop-2).
+GRAD_ITEMSIZE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketRef:
+    """One bucket: a static ``[lo, hi)`` slice of ``pool``'s flattened
+    local gradient shard."""
+
+    pool: str
+    lo: int
+    hi: int
+
+    @property
+    def elems(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryPlan:
+    """Static schedule of one gradient-accumulation boundary."""
+
+    mode: str                          # 'serial' | 'bucketed'
+    bucket_mb: float
+    shard_elems: dict                  # pool -> local grad elements
+    buckets: tuple                     # BucketRef, canonical order
+
+    def __post_init__(self):
+        if self.mode not in BOUNDARY_SCHEDULES:
+            raise ValueError(f"unknown boundary schedule {self.mode!r} "
+                             f"(expected one of {BOUNDARY_SCHEDULES})")
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def pool_buckets(self, pool: str) -> list:
+        return [b for b in self.buckets if b.pool == pool]
+
+    def hop2_payload_elems(self) -> list:
+        """Element counts of the hop-2 collectives this plan issues, in
+        order: one whole-pool payload per pool under ``serial``, one per
+        bucket under ``bucketed``.  The single source of truth shared by
+        the executor (:func:`apply_boundary`), the cost model
+        (``autotune.cost_hop2_schedule``) and the census cross-checks
+        (``dryrun``'s ``bucket_count_match``)."""
+        if self.mode == "serial":
+            return list(self.shard_elems.values())   # all_pools() order
+        return [b.elems for b in self.buckets]
+
+    @property
+    def n_hop2_collectives(self) -> int:
+        return len(self.hop2_payload_elems())
+
+    def describe(self) -> dict:
+        """Static record for dry-run artifacts / BENCH json."""
+        per_pool = {}
+        for b in self.buckets:
+            per_pool[b.pool] = per_pool.get(b.pool, 0) + 1
+        return {
+            "mode": self.mode,
+            "bucket_mb": self.bucket_mb,
+            "n_buckets": self.n_buckets,
+            "n_hop2_collectives": self.n_hop2_collectives,
+            "buckets_per_pool": per_pool,
+            "max_bucket_bytes": max(
+                (b.elems * GRAD_ITEMSIZE for b in self.buckets), default=0),
+        }
+
+
+def plan_boundary(model, topo: MiCSTopology, *, mode: str,
+                  bucket_mb: float) -> BoundaryPlan:
+    """Bucketize every pool's local gradient shard into fixed-byte buckets.
+
+    The same plan backs both schedules: the serial reference uses it only
+    to order the squared-norm partials (so it stays bitwise comparable to
+    the bucketed pipeline at any bucket size), the bucketed schedule
+    additionally issues one hop-2 collective per bucket.
+    """
+    p = topo.partition_size
+    shard_elems = {}
+    buckets = []
+    for pool in model.all_pools():
+        stack, _tp, flat_len = model.global_flat_shapes()[pool.name]
+        n = stack * (flat_len // p)
+        shard_elems[pool.name] = n
+        for lo, hi in partition_buckets(n, bucket_mb, GRAD_ITEMSIZE):
+            buckets.append(BucketRef(pool.name, lo, hi))
+    return BoundaryPlan(mode=mode, bucket_mb=float(bucket_mb),
+                        shard_elems=shard_elems, buckets=tuple(buckets))
+
+
+def _sq(bucket: jax.Array) -> jax.Array:
+    """One bucket's squared-norm partial (fp32)."""
+    return jnp.sum(jnp.square(bucket))
+
+
+def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict):
+    """Reference: whole-pool hop-2 first, then per-bucket norm partials."""
+    reduced = {name: comm.hop2(g) for name, g in flat_grads.items()}
+    sq_parts = [
+        _sq(lax.slice_in_dim(reduced[b.pool], b.lo, b.hi, axis=0))
+        for b in plan.buckets
+    ]
+    return reduced, sq_parts
+
+
+def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict):
+    """Software pipeline: issue bucket k's hop-2, then run bucket k−1's
+    dependent compute (squared-norm partial + wire decompress).  The
+    collective of bucket k has no data dependency on bucket k−1's compute,
+    which is what lets the backend overlap the two; the drain step handles
+    the last bucket."""
+    parts: dict[str, list] = {name: [] for name in flat_grads}
+    sq_parts: list[jax.Array] = []
+    pending = None  # (BucketRef, in-flight reduced bucket)
+
+    def retire(ref, reduced_bucket):
+        sq_parts.append(_sq(reduced_bucket))
+        parts[ref.pool].append(reduced_bucket)
+
+    for ref in plan.buckets:
+        raw = lax.slice_in_dim(flat_grads[ref.pool], ref.lo, ref.hi, axis=0)
+        in_flight = comm.hop2_bucketed(raw)   # issue bucket k
+        if pending is not None:
+            retire(*pending)                  # compute for bucket k−1
+        pending = (ref, in_flight)
+    if pending is not None:
+        retire(*pending)
+
+    reduced = {
+        name: (jnp.concatenate(bufs) if len(bufs) > 1 else bufs[0])
+        for name, bufs in parts.items() if bufs
+    }
+    return reduced, sq_parts
+
+
+def apply_boundary(
+    plan: BoundaryPlan,
+    comm,
+    model,
+    topo: MiCSTopology,
+    oc: OptConfig,
+    state: dict,
+    grads: dict,
+    denom: float,
+):
+    """Run one gradient-accumulation boundary under ``plan``.
+
+    ``grads`` holds per-pool fp32 accumulated gradient *sums* (local shards,
+    ``[stack, 1, shard_len]``); ``denom`` is the mean divisor
+    (``micro_steps * data_parallel``).  Returns
+    ``(new_params, new_m, new_v, grad_norm)`` with the global-norm clip
+    applied exactly — the norm is reduced from every bucket's partial
+    before any shard update issues.
+    """
+    flat_grads = {
+        name: grads[name].reshape(-1) for name in plan.shard_elems
+    }
+    if plan.mode == "bucketed":
+        reduced, sq_parts = _reduce_bucketed(plan, comm, flat_grads)
+    else:
+        reduced, sq_parts = _reduce_serial(plan, comm, flat_grads)
+
+    # ---- exact global-norm clip, denominator folded -----------------------
+    sq_local = jnp.float32(0.0)
+    for part in sq_parts:               # fixed left-fold, canonical order
+        sq_local = sq_local + part
+    sq = lax.psum(sq_local, topo.partition_axes + (MODEL_AXIS,))
+    gnorm = jnp.sqrt(sq) / denom
+    clip = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grad_scale = clip / denom           # mean + clip in one fused factor
+
+    # ---- AdamW on fp32 shards, clip scale folded in -----------------------
+    shard_coord = comm.partition_coord()
+    new_params, new_m, new_v = {}, {}, {}
+    for pool in model.all_pools():
+        name = pool.name
+        g = reduced[name].reshape(grads[name].shape)
+        shard_len = g.shape[-1]
+        start = shard_coord * shard_len
+        dm = pool.layout.decay_mask_for_shard(start, shard_len)
+        pm = pool.layout.padding_mask_for_shard(start, shard_len)
+        p, m, v = adamw_shard_update(
+            state["params"][name], g, state["m"][name], state["v"][name],
+            state["step"], oc, decay_mask=dm, pad_mask=pm,
+            grad_scale=grad_scale)
+        new_params[name], new_m[name], new_v[name] = p, m, v
+    return new_params, new_m, new_v, gnorm

@@ -12,7 +12,12 @@ auto`` instead hands the choice to the link-model autotuner
 (core/autotune.py), which prints the ranked candidate table for the
 ``--link-profile`` and records the chosen plan — plus a
 predicted-vs-measured cross-check of the plan's per-stage wire bytes
-against the compiled HLO census — into the cell artifact.
+against the compiled HLO census — into the cell artifact.  Training cells
+additionally record the boundary scheduler's bucket plan
+(``--boundary-schedule`` / ``--hop2-bucket-mb``, core/schedule.py) with
+the link model's predicted exposed-vs-hidden hop-2 time and the measured
+census evidence that hop-2 runs at bucket granularity interleaved with
+boundary compute.
 
 Usage:
   python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k --mesh multi
@@ -37,11 +42,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, get_config
-from repro.core.autotune import compare_census, predict_traffic, resolve_config
+from repro.core.autotune import (
+    compare_census, cost_hop2_schedule, predict_traffic, resolve_config,
+)
 from repro.core.comm import CommEngine
+from repro.core.linkmodel import get_profile
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state_shapes, make_batch_shapes,
 )
+from repro.core.schedule import plan_boundary
 from repro.launch.mesh import make_mics_topology
 from repro.models.build import active_param_count, build_model, exact_param_count
 from repro.optim.adamw import OptConfig
@@ -134,6 +143,20 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         "tag": tag,
     }
 
+    # boundary scheduler: the static bucket plan + the link model's
+    # hidden-vs-exposed hop-2 time for it (core/schedule.py, autotune).
+    if spec["kind"] == "train":
+        bplan = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
+                              bucket_mb=mcfg.hop2_bucket_mb)
+        profile = get_profile(mcfg.link_profile)  # name or instance
+        record["boundary"] = bplan.describe() | {
+            "predicted": cost_hop2_schedule(
+                model, topo, profile, engine.sync_policy,
+                boundary=mcfg.boundary_schedule,
+                bucket_mb=mcfg.hop2_bucket_mb),
+            "link_profile": profile.name,
+        }
+
     serve_dtype = jnp.bfloat16 if serve_footprint else jnp.float32
     if mcfg.quant_gather:
         from repro.core.quant import BLOCK
@@ -216,6 +239,15 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         upcast_float_collectives=True)
     record["autotune_cross_check"] = compare_census(
         predicted["by_stage"], record["stats"]["by_stage"])
+    # boundary cross-check: the compiled step must show hop-2 at the plan's
+    # bucket granularity (measured census vs the static plan).
+    if "boundary" in record:
+        measured_b = record["stats"]["boundary"]
+        record["boundary"]["measured"] = measured_b
+        record["boundary"]["bucket_count_match"] = (
+            topo.replication_degree == 1
+            or measured_b["hop2_ops"]
+            == record["boundary"]["n_hop2_collectives"])
     record["total_s"] = round(time.time() - t0, 1)
 
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -264,6 +296,16 @@ def main():
                     help="1 = double-buffered lookahead gathers (layer i+1 "
                          "gathered during layer i's compute; the default), "
                          "0 = serial reference schedule")
+    ap.add_argument("--boundary-schedule", default="bucketed",
+                    choices=["serial", "bucketed"],
+                    help="gradient-accumulation boundary: 'bucketed' "
+                         "software-pipelines hop-2 buckets against the "
+                         "norm/decompress compute (core/schedule.py), "
+                         "'serial' is the monolithic reference")
+    ap.add_argument("--hop2-bucket-mb", type=float, default=32.0,
+                    help="fixed-byte bucket size of the hop-2 pipeline "
+                         "(fp32 gradient megabytes; under --policy auto "
+                         "the tuner ranks this axis itself)")
     ap.add_argument("--mlstm-chunk", type=int, default=0)
     ap.add_argument("--tp", type=int, default=0)
     ap.add_argument("--serve-footprint", action="store_true",
@@ -283,6 +325,8 @@ def main():
         prefetch=bool(args.prefetch),
         policy=args.policy,
         link_profile=args.link_profile,
+        boundary_schedule=args.boundary_schedule,
+        hop2_bucket_mb=args.hop2_bucket_mb,
     )
 
     todo = []
@@ -303,11 +347,18 @@ def main():
                                zero3=args.zero3, tp=args.tp or None,
                                serve_footprint=args.serve_footprint)
                 pf = rec["stats"]["prefetch"]
-                print(f"OK   {label}: compile={rec['compile_s']}s "
-                      f"flops={rec['stats']['dot_flops']:.3e} "
-                      f"wire={rec['stats']['total_wire_bytes']:.3e}B "
-                      f"carried_gathers={pf['carried_all_gathers']}",
-                      flush=True)
+                msg = (f"OK   {label}: compile={rec['compile_s']}s "
+                       f"flops={rec['stats']['dot_flops']:.3e} "
+                       f"wire={rec['stats']['total_wire_bytes']:.3e}B "
+                       f"carried_gathers={pf['carried_all_gathers']}")
+                if "boundary" in rec:
+                    bd, pr = rec["boundary"], rec["boundary"]["predicted"]
+                    msg += (f" hop2[{bd['mode']}x{bd['n_hop2_collectives']}]="
+                            f"{pr['t_exposed_s']*1e6:.0f}us exposed"
+                            f"/{pr['t_total_s']*1e6:.0f}us total"
+                            f" interleaved="
+                            f"{bd['measured']['interleaved']}")
+                print(msg, flush=True)
             except Exception as e:  # noqa: BLE001
                 failures += 1
                 print(f"FAIL {label}: {type(e).__name__}: {str(e)[:400]}",

@@ -26,8 +26,11 @@ import argparse
 import logging
 
 from repro.configs import get_config, smoke_variant
-from repro.core.autotune import resolve_config
+from repro.core.autotune import cost_hop2_schedule, resolve_config
+from repro.core.comm import CommEngine
+from repro.core.linkmodel import get_profile
 from repro.core.mics import MiCSConfig
+from repro.core.schedule import plan_boundary
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.data.pipeline import DataConfig
 from repro.models.build import build_model
@@ -67,6 +70,14 @@ def main():
     ap.add_argument("--prefetch", type=int, default=1,
                     help="1 = double-buffered lookahead gathers (default), "
                          "0 = serial reference schedule")
+    ap.add_argument("--boundary-schedule", default="bucketed",
+                    choices=["serial", "bucketed"],
+                    help="gradient-accumulation boundary: bucketed hop-2 "
+                         "software pipeline (core/schedule.py) or the "
+                         "monolithic serial reference — bitwise identical")
+    ap.add_argument("--hop2-bucket-mb", type=float, default=32.0,
+                    help="hop-2 pipeline bucket size in fp32-gradient MB "
+                         "(--policy auto ranks this axis itself)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -83,10 +94,23 @@ def main():
                       quant_gather=args.quant_gather,
                       prefetch=bool(args.prefetch),
                       policy=args.policy,
-                      link_profile=args.link_profile)
+                      link_profile=args.link_profile,
+                      boundary_schedule=args.boundary_schedule,
+                      hop2_bucket_mb=args.hop2_bucket_mb)
     mcfg, plan = resolve_config(mcfg, model, topo, mode="train")
     if plan is not None:
         print(plan.table())
+    bplan = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
+                          bucket_mb=mcfg.hop2_bucket_mb)
+    profile = get_profile(mcfg.link_profile)  # name or instance
+    hop2 = cost_hop2_schedule(
+        model, topo, profile,
+        CommEngine.from_config(topo, mcfg).sync_policy,
+        boundary=mcfg.boundary_schedule, bucket_mb=mcfg.hop2_bucket_mb)
+    print(f"boundary: {mcfg.boundary_schedule} x {bplan.n_buckets} buckets "
+          f"({mcfg.hop2_bucket_mb:g} MB) — modeled hop-2 "
+          f"{hop2['t_exposed_s']*1e6:.0f}us exposed / "
+          f"{hop2['t_total_s']*1e6:.0f}us total on {profile.name}")
     oc = OptConfig(lr_max=args.lr, total_steps=args.steps,
                    warmup_steps=max(args.steps // 20, 1))
     dc = DataConfig(vocab=cfg.vocab, seq=args.seq,

@@ -41,9 +41,18 @@ def lr_schedule(step, oc: OptConfig):
 def adamw_shard_update(
     p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
     step, oc: OptConfig, *, decay_mask: jax.Array, pad_mask: jax.Array,
-    lr=None,
+    lr=None, grad_scale=None,
 ):
-    """One AdamW step on a flat shard.  All arrays [*, S_local] fp32."""
+    """One AdamW step on a flat shard.  All arrays [*, S_local] fp32.
+
+    ``grad_scale`` folds the gradient-accumulation denominator and the
+    global-norm clip factor into this update (``g * grad_scale`` fuses into
+    the m/v elementwise pass) — the boundary scheduler (core/schedule.py)
+    passes ``clip_scale / denom`` here so neither clipping nor the mean
+    costs a standalone full-gradient-tree traversal.
+    """
+    if grad_scale is not None:
+        g = g * grad_scale
     lr = lr_schedule(step, oc) if lr is None else lr
     t = step.astype(jnp.float32) + 1.0
     m = oc.b1 * m + (1 - oc.b1) * g

@@ -339,6 +339,91 @@ def prefetch_census(comps: dict) -> dict:
     return {"body_all_gathers": total, "carried_all_gathers": carried}
 
 
+# Arithmetic ops that count as boundary compute when they sit between two
+# hop-2 collectives in program order (converts/copies are wire decompress
+# plumbing, not compute).
+_ARITH_OPS = {
+    "multiply", "add", "subtract", "divide", "rsqrt", "sqrt", "power",
+    "maximum", "minimum", "exponential", "negate",
+}
+
+
+def boundary_census(
+    comps: dict,
+    mesh_shape: dict,
+    *,
+    partition_axes: tuple = (),
+    replication_axes: tuple = (),
+    model_axis: str = "model",
+) -> dict:
+    """Evidence that hop-2 collectives interleave with boundary compute.
+
+    The bucketed boundary scheduler (core/schedule.py) issues bucket *k*'s
+    hop-2 all-reduce before bucket *k−1*'s norm/decompress compute, so in
+    the optimized HLO the hop-2 collectives of one computation have real
+    compute instructions (fusions, reduces, arithmetic — not converts or
+    copies) *between* them in program order.  The serial reference issues
+    every hop-2 back to back before the first norm reduce touches any
+    result.  Reports, over all computations:
+
+      hop2_ops               total hop-2-stage all-reduce instructions
+      hop2_max_operand_bytes largest single hop-2 payload (bucket ceiling)
+      compute_between_hop2   compute instructions strictly between the
+                             first and last hop-2 of a computation
+      interleaved            compute_between_hop2 > 0
+    """
+    total_ops = 0
+    max_bytes = 0.0
+    between = 0
+    for comp in comps.values():
+        positions = []
+        for idx, ins in enumerate(comp.instrs):
+            if ins.op not in ("all-reduce", "all-reduce-start"):
+                continue
+            groups = _parse_groups(ins.line)
+            if groups:
+                axes = _group_axes(groups[0], mesh_shape)
+                group0 = groups[0]
+            else:
+                axes = tuple(mesh_shape)
+                group0 = list(range(math.prod(mesh_shape.values())))
+            ob = 0
+            for o in ins.operands:
+                if o in comp.table:
+                    ob += _parse_shape(comp.table[o])[0]
+            stage = _stage_label(
+                "all-reduce", axes, group0, mesh_shape,
+                tuple(partition_axes), tuple(replication_axes), model_axis,
+                nbytes=ob)
+            if stage != "hop2":
+                continue
+            # scalar metric reductions (loss/aux pmeans) share the hop-2
+            # axes on p=1 topologies; gradient buckets are rank-1 buffers,
+            # so rank-0 operands are excluded whatever their byte count
+            op_dims = [d for o in ins.operands if o in comp.table
+                       for d in _parse_shape(comp.table[o])[1]]
+            if op_dims and all(len(d) == 0 for d in op_dims):
+                continue
+            positions.append(idx)
+            max_bytes = max(max_bytes, float(ob))
+        total_ops += len(positions)
+        if len(positions) < 2:
+            continue
+        for ins in comp.instrs[positions[0] + 1: positions[-1]]:
+            if ins.op in _ARITH_OPS or ins.op == "reduce" or ins.op == "dot":
+                between += 1
+            elif ins.op in ("fusion", "call") and not all(
+                    _is_data_movement(comps, sub)
+                    for sub in _CALLS.findall(ins.line)):
+                between += 1
+    return {
+        "hop2_ops": total_ops,
+        "hop2_max_operand_bytes": max_bytes,
+        "compute_between_hop2": between,
+        "interleaved": between > 0,
+    }
+
+
 def analyze(
     text: str,
     mesh_shape: dict[str, int],
@@ -477,4 +562,9 @@ def analyze(
         },
         "by_stage": dict(sorted(by_stage.items())),
         "prefetch": prefetch_census(comps),
+        "boundary": boundary_census(
+            comps, mesh_shape,
+            partition_axes=partition_axes,
+            replication_axes=replication_axes,
+            model_axis=model_axis),
     }

@@ -1,0 +1,220 @@
+"""Boundary-scheduler correctness harness, run in a subprocess with 8
+virtual CPU devices (same pattern as comm_harness.py).  Prints one JSON
+object with named check results; tests/test_schedule.py asserts on them.
+Checks:
+
+  bucket_plan          partition_buckets/plan_boundary cover every element
+                       exactly once, respect the byte cap, and degenerate
+                       correctly (one bucket, bucket > total bytes)
+  bitwise_bucket_sizes bucketed boundary == serial boundary, bitwise on
+                       params/m/v and metrics, across bucket sizes
+                       including the one-bucket and bucket>total-bytes
+                       degenerate cases (hop 2 live: repl=2)
+  bitwise_topologies   the same equivalence under all three gather
+                       topologies and the bf16/int8 wire dtypes (the
+                       boundary must be schedule-invariant whatever the
+                       hop-1 policy feeding it)
+  bitwise_compress     ... and under bf16-compressed hop-2 wire
+  census_interleave    the compiled bucketed step's HLO shows hop-2 at
+                       bucket granularity (hop2_ops == plan buckets,
+                       max payload <= bucket bytes) interleaved with
+                       norm/optimizer compute; the serial reference keeps
+                       pool-granular hop-2 ops
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.flat_param import partition_buckets
+from repro.core.mics import (
+    MiCSConfig, build_train_step, init_state, init_state_shapes,
+    make_batch_shapes,
+)
+from repro.core.schedule import GRAD_ITEMSIZE, plan_boundary
+from repro.core.topology import MiCSTopology, make_host_mesh
+from repro.models.build import build_model
+from repro.optim.adamw import OptConfig
+from repro.roofline.hlo_stats import analyze
+
+RESULTS = {}
+
+STEPS = 2
+MICRO = 2
+TINY_MB = 0.02          # forces several buckets per pool on the smoke model
+HUGE_MB = 1e6           # bucket > total bytes: one bucket per pool
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:  # noqa: BLE001
+            RESULTS[name] = {
+                "ok": False,
+                "err": f"{type(e).__name__}: {e}",
+                "tb": traceback.format_exc()[-2000:],
+            }
+        return fn
+    return deco
+
+
+def _setup():
+    """repl=2 so hop 2 is a live collective; p=2, tp=2."""
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    mesh = make_host_mesh(1, 2, 2, 2)
+    topo = MiCSTopology(mesh)
+    model = build_model(cfg, tp=2)
+    rng = np.random.default_rng(7)
+    b, t = 8, 32
+    batch = {
+        "tokens": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                            jnp.int32),
+        "targets": jnp.array(rng.integers(0, cfg.vocab, (MICRO, b, t)),
+                             jnp.int32),
+        "mask": jnp.ones((MICRO, b, t), jnp.float32),
+    }
+    return cfg, topo, model, batch
+
+
+CFG, TOPO, MODEL, BATCH = _setup()
+
+
+def _run(mcfg, steps=STEPS, seed=1):
+    state = init_state(MODEL, TOPO, seed=seed)
+    step = build_train_step(MODEL, TOPO, mcfg,
+                            OptConfig(total_steps=50, warmup_steps=0,
+                                      lr_max=3e-3))
+    metrics = []
+    for _ in range(steps):
+        state, m = step(state, BATCH)
+        metrics.append((float(m["loss"]), float(m["grad_norm"])))
+    return metrics, jax.tree.map(np.asarray, state)
+
+
+def _assert_bitwise(mcfg_kw, tag):
+    serial, s_state = _run(MiCSConfig(boundary_schedule="serial", **mcfg_kw))
+    bucketed, b_state = _run(
+        MiCSConfig(boundary_schedule="bucketed", **mcfg_kw))
+    assert all(np.isfinite(v) for row in serial for v in row), serial
+    assert serial == bucketed, \
+        f"{tag}: metrics diverged {serial} vs {bucketed}"
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_state)[0],
+            jax.tree_util.tree_flatten_with_path(b_state)[0]):
+        assert np.array_equal(a, b), f"{tag}: state leaf {path} diverged"
+
+
+# ---------------------------------------------------------------------------
+@check("bucket_plan")
+def _bucket_plan():
+    # helper-level: exact cover, byte cap, degenerate cases
+    per = partition_buckets(10_000, 0.01, 4)      # 2500-elem buckets
+    assert per[0] == (0, 2500) and per[-1][1] == 10_000
+    assert all(hi - lo <= 2500 for lo, hi in per)
+    covered = [e for lo, hi in per for e in range(lo, hi)]
+    assert covered == list(range(10_000))
+    assert partition_buckets(100, 1e6, 4) == ((0, 100),)   # bucket > total
+    assert partition_buckets(0, 1.0, 4) == ()
+    # plan-level: canonical order, counts, shard sizing
+    tiny = plan_boundary(MODEL, TOPO, mode="bucketed", bucket_mb=TINY_MB)
+    huge = plan_boundary(MODEL, TOPO, mode="bucketed", bucket_mb=HUGE_MB)
+    n_pools = len(MODEL.all_pools())
+    assert huge.n_buckets == n_pools, huge.describe()
+    assert tiny.n_buckets > n_pools, tiny.describe()
+    cap = int(TINY_MB * 1e6)
+    assert all(b.elems * GRAD_ITEMSIZE <= cap for b in tiny.buckets)
+    p = TOPO.partition_size
+    for pool in MODEL.all_pools():
+        stack, _, flat_len = MODEL.global_flat_shapes()[pool.name]
+        pool_bkts = tiny.pool_buckets(pool.name)
+        assert pool_bkts[0].lo == 0
+        assert pool_bkts[-1].hi == stack * flat_len // p
+    RESULTS["bucket_plan_detail"] = {
+        "tiny": tiny.describe(), "huge": huge.describe()}
+
+
+# ---------------------------------------------------------------------------
+@check("bitwise_bucket_sizes")
+def _bitwise_bucket_sizes():
+    for mb in (TINY_MB, 0.2, HUGE_MB):   # several / few / one bucket per pool
+        _assert_bitwise(dict(micro_steps=MICRO, hop2_bucket_mb=mb),
+                        tag=f"bucket_mb={mb}")
+
+
+# ---------------------------------------------------------------------------
+@check("bitwise_topologies")
+def _bitwise_topologies():
+    combos = [
+        dict(hierarchical=False),                              # flat
+        dict(gather_order="outer_first"),                      # 3-stage
+        dict(quant_gather=True),                               # int8 wire
+        dict(gather_dtype=jnp.float32),                        # fp32 wire
+    ]
+    for kw in combos:
+        _assert_bitwise(
+            dict(micro_steps=MICRO, hop2_bucket_mb=TINY_MB, **kw),
+            tag=f"combo={kw}")
+
+
+# ---------------------------------------------------------------------------
+@check("bitwise_compress")
+def _bitwise_compress():
+    _assert_bitwise(
+        dict(micro_steps=MICRO, hop2_bucket_mb=TINY_MB, compress_hop2=True),
+        tag="compress_hop2")
+
+
+# ---------------------------------------------------------------------------
+@check("census_interleave")
+def _census_interleave():
+    mesh_shape = dict(zip(TOPO.mesh.axis_names, TOPO.mesh.devices.shape))
+    plans = {
+        "serial": plan_boundary(MODEL, TOPO, mode="serial",
+                                bucket_mb=TINY_MB),
+        "bucketed": plan_boundary(MODEL, TOPO, mode="bucketed",
+                                  bucket_mb=TINY_MB),
+    }
+    census = {}
+    for label in ("serial", "bucketed"):
+        step = build_train_step(
+            MODEL, TOPO,
+            MiCSConfig(micro_steps=MICRO, boundary_schedule=label,
+                       hop2_bucket_mb=TINY_MB),
+            OptConfig(total_steps=10))
+        stats = analyze(
+            step.lower(init_state_shapes(MODEL),
+                       make_batch_shapes(MODEL, MICRO * 8, 32, MICRO))
+                .compile().as_text(),
+            mesh_shape,
+            partition_axes=TOPO.partition_axes,
+            replication_axes=TOPO.replication_axes)
+        census[label] = stats["boundary"]
+        # hop-2 wire bytes are schedule-invariant (same reduction, resliced)
+        census[label]["hop2_wire_bytes"] = \
+            stats["by_stage"]["hop2"]["wire_bytes"]
+
+    n_pools = len(MODEL.all_pools())
+    ser, bkt = census["serial"], census["bucketed"]
+    assert ser["hop2_ops"] == n_pools, census
+    assert bkt["hop2_ops"] == plans["bucketed"].n_buckets > n_pools, census
+    assert bkt["hop2_max_operand_bytes"] <= int(TINY_MB * 1e6), census
+    # the pipeline's signature: compute issued between hop-2 collectives
+    assert bkt["interleaved"] and bkt["compute_between_hop2"] > 0, census
+    assert bkt["hop2_wire_bytes"] == ser["hop2_wire_bytes"], census
+    RESULTS["census_interleave_detail"] = census
+
+
+print(json.dumps(RESULTS, indent=1, default=str))
