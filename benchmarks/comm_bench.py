@@ -15,8 +15,9 @@ every PR.  Prints one JSON object (saved as BENCH_comm.json by run.py):
   gathered-bytes/collective counts, the carried-gather prefetch evidence,
   and the loss trajectories (which must be bitwise equal — the schedules
   differ only in *when* gathers are issued, never in values);
-* a ``policies`` section: for each gather policy (flat / inner_first /
-  outer_first bf16 wire, inner_first int8), the analytical per-stage wire
+* a ``policies`` section: for each gather/sync policy (flat / inner_first /
+  outer_first bf16 wire, inner_first int8, and the qgZ rows shipping the
+  int8 block-quantized hop-1 gradient wire), the analytical per-stage wire
   bytes (core/autotune.predict_traffic) against the measured census of the
   compiled step, the α-β modeled comm time under two link profiles (v5e +
   efa-100g, core/linkmodel.py), a measured wall time, and the
@@ -51,7 +52,7 @@ from repro.core.autotune import (
     compare_census, cost_candidate, cost_hop2_schedule, predict_traffic,
     rank_policies,
 )
-from repro.core.comm import CommEngine, GatherPolicy, SyncPolicy
+from repro.core.comm import CommEngine
 from repro.core.linkmodel import get_profile
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state, init_state_shapes,
@@ -68,14 +69,18 @@ MICRO = 2
 BOUNDARY_BUCKET_MB = 0.05  # small enough to split the smoke model's pools
 
 PROFILES = ("v5e", "efa-100g")
-# (label, GatherPolicy fields, MiCSConfig fields) — >= 3 policies for the
-# predicted-vs-measured ledger (acceptance criterion of ISSUE 2).
+# (label, MiCSConfig fields) — >= 3 policies for the predicted-vs-measured
+# ledger (acceptance criterion of ISSUE 2); the GatherPolicy/SyncPolicy are
+# derived via CommEngine.from_config so the ledger prices exactly what the
+# step runs.  The qgZ rows ship the int8 hop-1 gradient wire (ISSUE 4).
 POLICIES = (
-    ("flat@bf16", ("flat", "bf16"), dict(hierarchical=False)),
-    ("inner_first@bf16", ("inner_first", "bf16"), dict()),
-    ("outer_first@bf16", ("outer_first", "bf16"),
-     dict(gather_order="outer_first")),
-    ("inner_first@int8", ("inner_first", "int8"), dict(quant_gather=True)),
+    ("flat@bf16", dict(hierarchical=False)),
+    ("inner_first@bf16", dict()),
+    ("outer_first@bf16", dict(gather_order="outer_first")),
+    ("inner_first@int8", dict(quant_gather=True)),
+    ("inner_first@bf16+qgZ", dict(hop1_wire_dtype="int8")),
+    ("inner_first@int8+qgZ", dict(quant_gather=True,
+                                  hop1_wire_dtype="int8")),
 )
 
 
@@ -161,8 +166,9 @@ def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
     table from on real hardware.
     """
     ledger = {}
-    for label, (topology, wire), mcfg_kw in POLICIES:
+    for label, mcfg_kw in POLICIES:
         mcfg = MiCSConfig(micro_steps=MICRO, prefetch=False, **mcfg_kw)
+        engine = CommEngine.from_config(topo, mcfg)
         step = build_train_step(model, topo, mcfg,
                                 OptConfig(total_steps=100, warmup_steps=0,
                                           lr_max=3e-3))
@@ -181,8 +187,7 @@ def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
             state, m = step(state, batch)
         jax.block_until_ready(m["loss"])
         t_measured = (time.perf_counter() - t0) / steps
-        gp = GatherPolicy(topology, wire, None, False)
-        sp = SyncPolicy()
+        gp, sp = engine.gather_policy, engine.sync_policy
         predicted = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
                                     upcast_float_collectives=True)
         cmp = compare_census(predicted["by_stage"], stats["by_stage"])
@@ -200,9 +205,13 @@ def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
                 "stages": {
                     lbl: {
                         "tier": e["tier"],
-                        "alpha_events": e["events"] * (
-                            2 * (e["group_size"] - 1) if lbl == "hop2"
-                            else e["group_size"] - 1),
+                        # one (g-1)-hop ring per collective launch (count ==
+                        # events for float wires; int8 ships q + scales, so
+                        # its launches — and alpha events — double)
+                        "alpha_events": (
+                            e["events"] * 2 * (e["group_size"] - 1)
+                            if lbl == "hop2"
+                            else e["count"] * (e["group_size"] - 1)),
                         "wire_bytes": e["wire_bytes"],
                     }
                     for lbl, e in wire_pred["by_stage"].items()

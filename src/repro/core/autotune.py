@@ -31,10 +31,15 @@ same per-participant total as the flat gather —
 M(p-1)/p of a flat ring that bottlenecks on it).  That is the entire MiCS
 §3.3 argument, and why the ranking depends on the link table.
 
-Numerics policy: the tuner ranks lossy candidates (int8 wire, bf16 hop-2)
-alongside lossless ones, but only *selects* them when the config opted in
-(``quant_gather=True`` / ``compress_hop2=True``) — ``policy="auto"`` never
-silently changes training numerics, it only re-schedules the same bytes.
+Numerics policy: the tuner ranks lossy candidates (int8 gather wire,
+bf16/int8 hop-2, int8 qgZ hop-1) alongside lossless ones, but only
+*selects* them when the config opted into that exact mechanism
+(``quant_gather=True`` — int8 *weight* wire, whose gradient adjoint stays
+exact; ``compress_hop2=True``/``"bf16"``/``"int8"`` — the hop-2 wire, with
+``"int8"`` also permitting the milder bf16; ``hop1_wire_dtype="int8"`` —
+the lossy qgZ gradient wire).  Permissions are per-mechanism on purpose:
+``policy="auto"`` never silently changes training numerics beyond what the
+flag the user set already meant.
 """
 
 from __future__ import annotations
@@ -49,13 +54,38 @@ from repro.core.quant import BLOCK
 from repro.core.schedule import plan_boundary
 from repro.core.topology import MiCSTopology, default_hierarchy_inner
 
-# census bytes-per-element on the wire, by wire dtype.  int8 gathers are two
-# collectives per stage (q int8 + per-BLOCK f32 absmax scales).
-_WIRE_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0 + 4.0 / BLOCK}
-# gradient reduce-scatter element bytes: the adjoint runs in the wire dtype
-# for float wires and in fp32 for int8 (straight-through, grads never
-# quantized — core/comm.py).
-_GRAD_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 4.0}
+# int8 collectives ship two payloads per stage (q int8 + one f32 absmax
+# scale per BLOCK elements) — ~1.03 bytes/element on the wire.
+INT8_WIRE_BYTES = 1.0 + 4.0 / BLOCK
+# census bytes-per-element on the wire, by wire dtype.
+_WIRE_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": INT8_WIRE_BYTES}
+# gradient reduce-scatter element bytes under the uncompressed hop-1 wire
+# (hop1_wire_dtype='fp32'): the adjoint runs in the gather wire dtype for
+# float wires and in fp32 for int8 gathers (straight-through — the int8
+# *gather* never quantizes its cotangent; that is qgZ's job, below).
+_GRAD_BYTES_HOP1_FP32 = {"fp32": 4.0, "bf16": 2.0, "int8": 4.0}
+
+
+def grad_wire_bytes(gather_wire: str, hop1_wire: str) -> float:
+    """Adjoint reduce-scatter bytes/element for (gather wire, hop-1 wire).
+
+    ``hop1_wire='fp32'`` is the legacy uncompressed adjoint (dtype follows
+    the gather); ``'bf16'`` narrows the cotangent; ``'int8'`` is the qgZ
+    per-stage block-quantized reduce-scatter — int8 payload + f32 scale
+    traffic on every hop regardless of the forward wire (this is what flips
+    the int8 *weight*-gather ranking in training: its fp32 straight-through
+    adjoint stops dominating the gradient bytes)."""
+    if hop1_wire == "int8":
+        return INT8_WIRE_BYTES
+    if hop1_wire == "bf16":
+        return 2.0
+    return _GRAD_BYTES_HOP1_FP32[gather_wire]
+
+
+# Per-element HBM bytes of one qgZ stage's quantize + dequantize-accumulate
+# (read fp32, write int8+scales; read int8+scales, accumulate fp32) — the
+# compute overhead int8 hop-1 pays per stage on top of its wire time.
+QGZ_COMPUTE_BYTES_PER_ELEM = 10.0
 
 
 # ---------------------------------------------------------------------------
@@ -225,8 +255,9 @@ def predict_traffic(
 
     ``upcast_float_collectives=True`` models the XLA *CPU* backend, which
     widens sub-f32 float collectives to f32 on the wire (bf16 gathers,
-    bf16 hop-2; int8 payloads stay int8) — set it when comparing against a
-    census measured on host devices; leave False for the real link cost.
+    bf16 hop-1/hop-2; int8 payloads and their f32 scales are untouched) —
+    set it when comparing against a census measured on host devices; leave
+    False for the real link cost.
     """
     p = topo.partition_size
     s = int(micro_steps)
@@ -251,15 +282,24 @@ def predict_traffic(
             else "inter"
 
     stages = gather_stages(gather.topology, topo, gather.inner)
+    hop1_int8 = sync.hop1_wire_dtype == "int8" and p > 1
+    hop2_int8 = sync.hop2_wire_dtype == "int8"
     wire_b = _WIRE_BYTES[gather.wire_dtype]
-    grad_b = _GRAD_BYTES[gather.wire_dtype]
-    hop2_b = 2.0 if sync.hop2_wire_dtype == "bf16" else 4.0
+    grad_b = grad_wire_bytes(gather.wire_dtype, sync.hop1_wire_dtype)
+    hop2_b = _WIRE_BYTES[sync.hop2_wire_dtype]
     if upcast_float_collectives:
         if gather.wire_dtype == "bf16":
             wire_b = 4.0
-        grad_b = 4.0
-        hop2_b = 4.0
+        if not hop1_int8:
+            grad_b = 4.0
+        if not hop2_int8:
+            hop2_b = 4.0
     colls_per_event = 2 if gather.wire_dtype == "int8" else 1
+    # qgZ ships two payloads per stage (int8 q + f32 scales, both as
+    # all-to-alls); a float adjoint is one psum_scatter per stage.
+    rs_colls_per_event = 2 if hop1_int8 else 1
+    # int8 hop 2 = quantized RS (2 all-to-alls) + quantized AG (2 gathers).
+    hop2_colls = 4 if hop2_int8 else 1
     reorder = (gather.topology == "outer_first"
                and any(st.label == "outer" for st in stages))
 
@@ -276,8 +316,8 @@ def predict_traffic(
                 n["ag"] * colls_per_event, stage_tier(st))
             if mode == "train" and n["rs"] and sync.mode == "2hop":
                 acc(f"grad_rs.{st.label}", st,
-                    n["rs"] * st.wire_frac * m_grad, n["rs"], n["rs"],
-                    stage_tier(st))
+                    n["rs"] * st.wire_frac * m_grad, n["rs"],
+                    n["rs"] * rs_colls_per_event, stage_tier(st))
         if reorder:
             local_copy += (n["ag"] + (n["rs"] if mode == "train" else 0.0)) \
                 * flat_len * wire_b
@@ -288,7 +328,7 @@ def predict_traffic(
             r = topo.replication_degree
             ob = stack * (flat_len / p) * hop2_b
             spec = StageSpec("hop2", r, tuple(range(0, r * p, p)), 0.0)
-            acc("hop2", spec, 2.0 * ob * (r - 1) / r, 1.0, 1.0,
+            acc("hop2", spec, 2.0 * ob * (r - 1) / r, 1.0, hop2_colls,
                 _hop2_tier(topo, profile) if profile else "?")
 
     return {"by_stage": by_stage, "local_copy_bytes": local_copy}
@@ -364,7 +404,8 @@ def cost_hop2_schedule(
     if r <= 1 or sync.mode != "2hop":
         return out
     tier = _hop2_tier(topo, profile)
-    hop2_b = 2.0 if sync.hop2_wire_dtype == "bf16" else 4.0
+    hop2_b = _WIRE_BYTES[sync.hop2_wire_dtype]
+    quantized = sync.hop2_wire_dtype == "int8"
     plan = plan_boundary(model, topo, mode=boundary, bucket_mb=bucket_mb)
 
     t_c: list[float] = []   # per-payload collective time, canonical order
@@ -373,7 +414,10 @@ def cost_hop2_schedule(
         wire = 2.0 * n * hop2_b * (r - 1) / r
         t_c.append(profile.ring_time(tier, r, wire)
                    + (r - 1) * profile.link(tier).alpha)  # 2(r-1) hops
-        t_x.append(n * HOP2_HIDE_BYTES_PER_ELEM / profile.hbm_bw)
+        if quantized:
+            # quantize + dequantize both legs of the decomposed all-reduce
+            t_c[-1] += profile.hbm_time(2 * n * QGZ_COMPUTE_BYTES_PER_ELEM)
+        t_x.append(profile.hbm_time(n * HOP2_HIDE_BYTES_PER_ELEM))
 
     total = sum(t_c)
     if boundary == "serial" or not t_c:
@@ -402,6 +446,7 @@ class Candidate:
     inter_wire_bytes: float              # slow-tier bytes / step
     lossy_wire: bool
     lossy_hop2: bool
+    lossy_hop1: bool = False             # qgZ/bf16-compressed hop-1 wire
     boundary: str = "serial"             # hop-2 boundary schedule
     hop2_bucket_mb: float = DEFAULT_HOP2_BUCKET_MB
     n_hop2_buckets: int = 0
@@ -417,7 +462,7 @@ class Candidate:
             "bytes_by_stage": {
                 k: v["wire_bytes"] for k, v in self.bytes_by_stage.items()},
             "inter_wire_bytes": self.inter_wire_bytes,
-            "lossy": self.lossy_wire or self.lossy_hop2,
+            "lossy": self.lossy_wire or self.lossy_hop2 or self.lossy_hop1,
             "boundary": self.boundary,
             "hop2_bucket_mb": self.hop2_bucket_mb,
             "n_hop2_buckets": self.n_hop2_buckets,
@@ -452,7 +497,7 @@ class Plan:
         rows = [f"autotune[{self.profile.name}] mode={self.mode} "
                 f"(chosen marked *):",
                 f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
-                f"{'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
+                f"{'hop1':>5} {'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
                 f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9}"]
         cands = self.candidates[:top] if top else self.candidates
         for i, c in enumerate(cands):
@@ -462,6 +507,7 @@ class Plan:
             rows.append(
                 f" {mark}{i:>4} {c.gather.topology:<12} "
                 f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
+                f"{c.sync.hop1_wire_dtype:>5} "
                 f"{c.sync.hop2_wire_dtype:>5} {sched:>6} {bkt:>6} "
                 f"{c.t_comm_s * 1e3:>10.3f} "
                 f"{c.t_hop2_exposed_s * 1e3:>9.3f} "
@@ -491,6 +537,8 @@ def cost_candidate(
     pred = predict_traffic(model, topo, gather, sync,
                            micro_steps=micro_steps, mode=mode,
                            profile=profile)
+    hop1_int8 = (sync.hop1_wire_dtype == "int8"
+                 and topo.partition_size > 1 and mode == "train")
     t_by_stage: dict[str, float] = {}
     total = 0.0
     inter_bytes = 0.0
@@ -501,6 +549,11 @@ def cost_candidate(
         hops = g - 1
         link = profile.link(e["tier"])
         t = e["events"] * hops * link.alpha + e["wire_bytes"] / link.bandwidth
+        if hop1_int8 and label.startswith("grad_rs"):
+            # quantize/dequantize-accumulate compute of each qgZ stage:
+            # the stage streams ~g/(g-1) of its wire elements through HBM.
+            elems = e["wire_bytes"] / INT8_WIRE_BYTES * g / max(hops, 1)
+            t += profile.hbm_time(elems * QGZ_COMPUTE_BYTES_PER_ELEM)
         t_by_stage[label] = t
         total += t
         if e["tier"] == "inter":
@@ -521,7 +574,8 @@ def cost_candidate(
         gather=gather, sync=sync, t_comm_s=total, t_by_stage=t_by_stage,
         bytes_by_stage=pred["by_stage"], inter_wire_bytes=inter_bytes,
         lossy_wire=gather.wire_dtype == "int8",
-        lossy_hop2=sync.hop2_wire_dtype == "bf16",
+        lossy_hop2=sync.hop2_wire_dtype != "fp32",
+        lossy_hop1=sync.hop1_wire_dtype != "fp32",
         boundary=boundary, hop2_bucket_mb=hop2_bucket_mb,
         n_hop2_buckets=hop2["n_buckets"],
         t_hop2_total_s=hop2["t_total_s"],
@@ -534,8 +588,16 @@ def enumerate_candidates(
     *,
     prefetch: bool = True,
     wires: tuple[str, ...] = WIRE_DTYPES,
+    hop1_wires: tuple[str, ...] = ("fp32", "int8"),
+    mode: str = "train",
 ) -> list[tuple[GatherPolicy, SyncPolicy]]:
-    """Candidate grid: topology x inner factor x wire dtype x hop-2 wire."""
+    """Candidate grid: topology x inner x wire dtype x hop-1 x hop-2 wire.
+
+    The hop-1 axis defaults to {fp32, int8}: bf16 hop-1 is a manual option
+    (``MiCSConfig(hop1_wire_dtype="bf16")``) but is dominated in the grid —
+    it is lossy like qgZ while moving 2x its bytes.  Serving has no
+    gradients, so the hop-1 axis collapses there; likewise at p == 1.
+    """
     p = topo.partition_size
     gathers: list[GatherPolicy] = []
     for wire in wires:
@@ -549,8 +611,14 @@ def enumerate_candidates(
         for inner in inners:
             for topology in ("inner_first", "outer_first"):
                 gathers.append(GatherPolicy(topology, wire, inner, prefetch))
-    hop2_wires = ("fp32", "bf16") if topo.replication_degree > 1 else ("fp32",)
-    return [(g, SyncPolicy("2hop", h)) for g in gathers for h in hop2_wires]
+    hop2_wires = ("fp32", "bf16", "int8") \
+        if topo.replication_degree > 1 else ("fp32",)
+    if mode != "train" or p == 1:
+        hop1s: tuple[str, ...] = ("fp32",)
+    else:
+        hop1s = tuple(dict.fromkeys(hop1_wires))  # de-dup, keep order
+    return [(g, SyncPolicy("2hop", h2, h1))
+            for g in gathers for h2 in hop2_wires for h1 in hop1s]
 
 
 def enumerate_hop2_schedules(topo: MiCSTopology,
@@ -575,27 +643,42 @@ def rank_policies(
     mode: str = "train",
     allow_int8: bool = False,
     allow_bf16_hop2: bool = False,
+    allow_int8_hop1: bool = False,
+    allow_int8_hop2: bool = False,
 ) -> Plan:
     """Cost every candidate and rank by modeled collective time.
 
     The chosen plan is the fastest candidate whose numerics the caller
-    opted into; the full ranking (including lossy rows) is kept for the
-    dry-run table and BENCH artifacts.
+    opted into (``allow_int8`` — int8 gather wire, ``allow_bf16_hop2`` /
+    ``allow_int8_hop2`` — the compressed hop-2 wires (the int8 opt-in also
+    permits the milder bf16), ``allow_int8_hop1`` — the qgZ hop-1 wire);
+    the full ranking (including lossy rows) is kept for the dry-run table
+    and BENCH artifacts.
     """
     profile = get_profile(profile)
     cands = [
         cost_candidate(model, topo, profile, g, s,
                        micro_steps=micro_steps, mode=mode,
                        boundary=boundary, hop2_bucket_mb=bucket_mb)
-        for g, s in enumerate_candidates(topo, prefetch=prefetch)
+        for g, s in enumerate_candidates(topo, prefetch=prefetch, mode=mode)
         for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode)
     ]
     cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
-                              c.gather.wire_dtype, c.boundary,
-                              c.hop2_bucket_mb))
+                              c.gather.wire_dtype, c.sync.hop1_wire_dtype,
+                              c.sync.hop2_wire_dtype,
+                              c.boundary, c.hop2_bucket_mb))
+
+    def hop2_ok(c: Candidate) -> bool:
+        wire = c.sync.hop2_wire_dtype
+        if wire == "bf16":
+            return allow_bf16_hop2 or allow_int8_hop2
+        if wire == "int8":
+            return allow_int8_hop2
+        return True
     eligible = [c for c in cands
                 if (allow_int8 or not c.lossy_wire)
-                and (allow_bf16_hop2 or not c.lossy_hop2)]
+                and hop2_ok(c)
+                and (allow_int8_hop1 or not c.lossy_hop1)]
     chosen = eligible[0] if eligible else cands[0]
     return Plan(profile=profile, mode=mode, micro_steps=micro_steps,
                 candidates=tuple(cands), chosen=chosen)
@@ -619,7 +702,13 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
     plan = rank_policies(
         model, topo, mcfg.link_profile,
         micro_steps=mcfg.micro_steps, prefetch=mcfg.prefetch, mode=mode,
-        allow_int8=mcfg.quant_gather, allow_bf16_hop2=mcfg.compress_hop2,
+        # per-mechanism permissions: quant_gather opts into the int8
+        # *weight* wire only (its adjoint stays exact) — the lossy qgZ
+        # gradient wire needs its own explicit hop1_wire_dtype opt-in
+        allow_int8=mcfg.quant_gather,
+        allow_bf16_hop2=mcfg.compress_hop2 in (True, "bf16", "int8"),
+        allow_int8_hop2=mcfg.compress_hop2 == "int8",
+        allow_int8_hop1=mcfg.hop1_wire_dtype == "int8",
     )
     g, s = plan.chosen.gather, plan.chosen.sync
     if g.wire_dtype == "fp32":
@@ -635,7 +724,9 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         gather_dtype=gather_dtype,
         quant_gather=g.wire_dtype == "int8",
         sync_mode="2hop",
-        compress_hop2=s.hop2_wire_dtype == "bf16",
+        compress_hop2=(s.hop2_wire_dtype
+                       if s.hop2_wire_dtype != "fp32" else False),
+        hop1_wire_dtype=s.hop1_wire_dtype,
         boundary_schedule=plan.chosen.boundary,
         hop2_bucket_mb=plan.chosen.hop2_bucket_mb,
     )

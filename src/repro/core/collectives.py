@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import quant as Q
 from repro.core.topology import MiCSTopology, default_hierarchy_inner
 
 
@@ -263,6 +264,210 @@ def _hier_rs_multi_axis(
             out = lax.psum_scatter(out, name, scatter_dimension=axis, tiled=True)
         return out
     raise ValueError(f"unknown order {order!r}")
+
+
+# ---------------------------------------------------------------------------
+# block-quantized staged reduce-scatter (ZeRO++ qgZ on the MiCS hierarchy)
+# ---------------------------------------------------------------------------
+#
+# The float reduce-scatter above ships full-width payloads; the quantized
+# variant ships (int8 q, f32 per-128-block absmax scales) on every hop.  A
+# ``psum_scatter`` cannot carry int8 (the wire op *is* the sum), so each
+# stage becomes the all-to-all decomposition of a reduce-scatter:
+#
+#   quantize local buffer  ->  all-to-all(q), all-to-all(s) within the
+#   stage group  ->  dequantize  ->  accumulate the group's chunks in fp32
+#
+# and the fp32 partial sum is what the *next* stage quantizes — error is
+# injected once per hop on the wire and never compounds through a chain of
+# int8 summations (ZeRO++'s qgZ, adapted from its single all-to-all to this
+# repo's staged hierarchy).  Rounding is stochastic by default (unbiased in
+# expectation, core/quant.py); the dither key is a deterministic function of
+# (salt, stage, device, payload fingerprint), so runs are reproducible while
+# distinct payloads — different layers, micro-steps, training steps — draw
+# distinct dither (a fixed key would re-inject the *same* rounding error
+# into every call, accumulating coherently on slowly-varying gradients).
+
+_QGZ_SEED = 0x9f2c
+
+
+def _dither_key(salt: int, stage: int, coord, fingerprint) -> jax.Array:
+    key = jax.random.fold_in(jax.random.key(_QGZ_SEED), salt)
+    key = jax.random.fold_in(key, stage)
+    key = jax.random.fold_in(key, coord)
+    return jax.random.fold_in(key, fingerprint)
+
+
+def _payload_fingerprint(g: jax.Array):
+    """int32 fingerprint of a payload (bit pattern of its sum) — folds the
+    data into the dither key so repeated calls on different gradients never
+    share rounding noise, without threading a step counter through the VJP."""
+    return lax.bitcast_convert_type(jnp.sum(g), jnp.int32)
+
+
+def _device_coord(topo: MiCSTopology):
+    """Linearized global device index (dither decorrelation across devices)."""
+    idx = 0
+    for name in topo.mesh.axis_names:
+        idx = idx * topo.axis_size(name) + lax.axis_index(name)
+    return idx
+
+
+def _quant_exchange_stage(g, axis_names, *, group_size, groups, key):
+    """One qgZ stage: blockwise-quantize, ship int8+scales, fp32-accumulate.
+
+    ``g`` is this device's fp32 buffer ``[N]`` (``N % group_size == 0``);
+    returns the group-reduced chunk ``[N / group_size]`` in fp32.
+    """
+    k = group_size
+    if k == 1:
+        return g
+    n = g.shape[0]
+    if n % k:
+        raise ValueError(f"buffer length {n} not divisible by group {k}")
+    chunks = g.reshape(k, n // k)
+    q, s = Q.quantize_flat(chunks, key=key)
+    qx = lax.all_to_all(q, axis_names, 0, 0, axis_index_groups=groups)
+    sx = lax.all_to_all(s, axis_names, 0, 0, axis_index_groups=groups)
+    return jnp.sum(Q.dequantize_flat(qx, sx, dtype=jnp.float32), axis=0)
+
+
+def _quant_stage_plan(topo: MiCSTopology, topology: str, inner: int | None):
+    """The stage sequence of the quantized adjoint, mirroring the float
+    reduce-scatter of the same ``topology``: ``(axis_names, group_size,
+    axis_index_groups)`` per stage, plus the outer_first pre-reorder factors.
+
+    COUPLED to ``_hier_rs_single_axis``/``_hier_rs_multi_axis`` above: the
+    stage order, group construction and reorder factors must stay in
+    lockstep or the quantized adjoint scatters chunks to the wrong owners.
+    The equivalence is pinned by ``tests/qgz_harness.py::quant_rs_routing``
+    (grid-exact data makes the quantizer lossless, so any routing drift is
+    a hard mismatch against ``psum_scatter``).
+    """
+    p = topo.partition_size
+    reorder = None  # (outer, inner) reorder factors for outer_first
+    if topology == "flat":
+        return [(topo.partition_axes, p, None)], reorder
+    if len(topo.partition_axes) > 1:
+        axes = topo.partition_axes
+        sizes = [topo.axis_size(a) for a in axes]
+        if topology == "inner_first":
+            # forward gathered fast->slow; adjoint scatters slow->fast
+            stages = [((a,), topo.axis_size(a), None) for a in axes]
+        else:  # outer_first
+            inner_f = 1
+            for s_ in sizes[1:]:
+                inner_f *= s_
+            reorder = (sizes[0], inner_f)
+            stages = [((a,), topo.axis_size(a), None) for a in reversed(axes)]
+        return stages, reorder
+    axis_name = topo.partition_axes[0]
+    if inner is None:
+        inner = default_hierarchy_inner(p)
+    if p % inner:
+        raise ValueError(f"inner={inner} does not divide p={p}")
+    outer = p // inner
+    if inner == 1 or outer == 1:
+        return [((axis_name,), p, None)], reorder
+    outer_groups, inner_groups = _stage_groups(p, inner)
+    if topology == "inner_first":
+        stages = [((axis_name,), outer, outer_groups),
+                  ((axis_name,), inner, inner_groups)]
+    elif topology == "outer_first":
+        reorder = (outer, inner)
+        stages = [((axis_name,), inner, inner_groups),
+                  ((axis_name,), outer, outer_groups)]
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return stages, reorder
+
+
+def quantized_reduce_scatter(
+    g: jax.Array,
+    topo: MiCSTopology,
+    *,
+    topology: str = "inner_first",
+    inner: int | None = None,
+    salt: int = 0,
+    stochastic: bool = True,
+) -> jax.Array:
+    """Block-quantized hop-1 reduce-scatter over the partition group (qgZ).
+
+    Numerically this approximates ``hierarchical_reduce_scatter`` /
+    ``hop1_reduce_scatter`` of the same staging while shipping int8 (+ f32
+    block scales) on every hop; the result is always fp32.  Per-stage error
+    is bounded by one quantization step of that stage's fp32 partial sums
+    (additive across hops, never compounding), and with ``stochastic=True``
+    each stage is unbiased in expectation.
+    """
+    g = g.astype(jnp.float32)
+    if topo.partition_size == 1:
+        return g
+    if g.ndim != 1:
+        raise ValueError(f"quantized_reduce_scatter expects a flat [N] "
+                         f"buffer, got shape {g.shape}")
+    stages, reorder = _quant_stage_plan(topo, topology, inner)
+    if reorder is not None:
+        g = _reorder_chunks(g, 0, reorder[0], reorder[1])
+    coord = _device_coord(topo)
+    fp = _payload_fingerprint(g) if stochastic else None
+    for i, (axis_names, group_size, groups) in enumerate(stages):
+        key = _dither_key(salt, i, coord, fp) if stochastic else None
+        g = _quant_exchange_stage(
+            g, axis_names if len(axis_names) > 1 else axis_names[0],
+            group_size=group_size, groups=groups, key=key)
+    return g
+
+
+def quantized_all_reduce(
+    g: jax.Array,
+    topo: MiCSTopology,
+    *,
+    salt: int = 0,
+    stochastic: bool = True,
+) -> jax.Array:
+    """Block-quantized replication-group all-reduce (the int8 hop-2 leg).
+
+    An all-reduce is a reduce-scatter + all-gather; both legs ship (int8 q,
+    f32 block scales) with an fp32 accumulation between them: quantize ->
+    all-to-all -> dequant -> fp32 sum -> re-quantize -> all-gather ->
+    dequant.  Payload lengths need not divide the group (zero-padded to
+    ``r`` chunks; chunk tails are ragged blocks, core/quant.py).  Unlike
+    the elementwise bf16 hop-2 cast, the block structure follows the
+    *payload*, so results depend on hop-2 granularity: the serial and
+    bucketed boundary schedules are close but not bitwise equal under int8
+    hop-2 (they are under fp32/bf16).
+    """
+    axes = topo.replication_axes
+    r = topo.replication_degree
+    g = g.astype(jnp.float32)
+    if not axes or r == 1:
+        return g
+    if g.ndim != 1:
+        raise ValueError(f"quantized_all_reduce expects a flat [N] buffer, "
+                         f"got shape {g.shape}")
+    n = g.shape[0]
+    m = -(-n // r)
+    pad = r * m - n
+    x = jnp.pad(g, (0, pad)) if pad else g
+    coord = _device_coord(topo)
+    fp = _payload_fingerprint(g) if stochastic else None
+    # reduce-scatter leg
+    q, s = Q.quantize_flat(
+        x.reshape(r, m),
+        key=_dither_key(salt, 0, coord, fp) if stochastic else None)
+    qx = lax.all_to_all(q, axes, 0, 0)
+    sx = lax.all_to_all(s, axes, 0, 0)
+    red = jnp.sum(Q.dequantize_flat(qx, sx, dtype=jnp.float32), axis=0)
+    # all-gather leg (each replica owns — and re-quantizes — one chunk)
+    q2, s2 = Q.quantize_flat(
+        red, key=_dither_key(salt, 1, coord, fp) if stochastic else None)
+    qg = lax.all_gather(q2, axes, axis=0, tiled=True)
+    sg = lax.all_gather(s2, axes, axis=0, tiled=True)
+    nb = s2.shape[-1]
+    out = Q.dequantize_flat(qg.reshape(r, m), sg.reshape(r, nb),
+                            dtype=jnp.float32).reshape(r * m)
+    return out[:n] if pad else out
 
 
 # ---------------------------------------------------------------------------

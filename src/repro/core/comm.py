@@ -13,7 +13,10 @@ smeared across ``collectives.py``, ``mics.py``, ``quant.py`` and
   ``quant.py`` path), and the **double-buffered prefetch schedule** (layer
   i+1's all-gather issued during layer i's compute).
 * :class:`SyncPolicy` — hop-1 adjoint mode (exact staged reduce-scatter vs
-  the Fig-14 ``allreduce_slice`` ablation) and hop-2 wire compression.
+  the Fig-14 ``allreduce_slice`` ablation), the hop-1 wire dtype (``fp32``
+  exact / ``bf16`` / ``int8`` ZeRO++-qgZ-style per-stage block-quantized
+  reduce-scatter with fp32 inter-stage accumulation), and hop-2 wire
+  compression (``fp32`` / ``bf16`` / ``int8`` quantized all-reduce).
 * :class:`CommEngine` — binds the policies to a :class:`MiCSTopology` and
   owns the **centralized custom-VJP machinery**: each forward gather policy
   is paired with its *exact* adjoint reduce-scatter
@@ -43,6 +46,9 @@ from repro.core.topology import MODEL_AXIS, MiCSTopology, hierarchy_factors
 GATHER_TOPOLOGIES = ("flat", "inner_first", "outer_first")
 WIRE_DTYPES = ("fp32", "bf16", "int8")
 SYNC_MODES = ("2hop", "allreduce_slice")
+HOP1_WIRE_DTYPES = ("fp32", "bf16", "int8")
+HOP2_WIRE_DTYPES = ("fp32", "bf16", "int8")
+GRAD_ROUNDINGS = ("stochastic", "nearest")
 
 _WIRE_JNP = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -65,16 +71,43 @@ class GatherPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class SyncPolicy:
-    """How gradients synchronize (paper §3.4)."""
+    """How gradients synchronize (paper §3.4).
+
+    ``hop1_wire_dtype`` is what the per-micro-step adjoint reduce-scatter
+    ships: ``'fp32'`` keeps today's behavior (the staged reduce-scatter runs
+    in the gather's natural cotangent dtype — bitwise identical to the
+    pre-qgZ tree), ``'bf16'`` casts the cotangent before the float staged
+    reduce-scatter, ``'int8'`` is the ZeRO++-qgZ analogue — a per-stage
+    block-quantized reduce-scatter (int8 + f32 block scales per hop, fp32
+    accumulation between hops, ``collectives.quantized_reduce_scatter``).
+    ``hop2_wire_dtype='int8'`` is the matching boundary leg (quantized
+    reduce-scatter + all-gather, ``collectives.quantized_all_reduce``).
+    ``grad_rounding`` picks the int8 gradient quantizer's rounding:
+    ``'stochastic'`` (unbiased in expectation, the default) or ``'nearest'``.
+    """
 
     mode: str = "2hop"             # '2hop' | 'allreduce_slice' (Fig 14)
-    hop2_wire_dtype: str = "fp32"  # 'fp32' | 'bf16' compressed hop 2
+    hop2_wire_dtype: str = "fp32"  # 'fp32' | 'bf16' | 'int8' hop-2 wire
+    hop1_wire_dtype: str = "fp32"  # 'fp32' | 'bf16' | 'int8' (ZeRO++ qgZ)
+    grad_rounding: str = "stochastic"  # int8 gradient-quantizer rounding
 
     def __post_init__(self):
         if self.mode not in SYNC_MODES:
             raise ValueError(f"unknown sync mode {self.mode!r}")
-        if self.hop2_wire_dtype not in ("fp32", "bf16"):
+        if self.hop2_wire_dtype not in HOP2_WIRE_DTYPES:
             raise ValueError(f"unknown hop-2 wire dtype {self.hop2_wire_dtype!r}")
+        if self.hop1_wire_dtype not in HOP1_WIRE_DTYPES:
+            raise ValueError(f"unknown hop-1 wire dtype {self.hop1_wire_dtype!r}")
+        if self.grad_rounding not in GRAD_ROUNDINGS:
+            raise ValueError(f"unknown grad rounding {self.grad_rounding!r}")
+        if self.hop1_wire_dtype != "fp32" and self.mode != "2hop":
+            raise ValueError(
+                "hop-1 wire compression requires the 2hop schedule (the "
+                "allreduce_slice ablation has no staged hop-1 to compress)")
+
+    @property
+    def stochastic(self) -> bool:
+        return self.grad_rounding == "stochastic"
 
 
 class CommEngine:
@@ -99,8 +132,8 @@ class CommEngine:
         self.compute_dtype = compute_dtype
         self.model_axis = model_axis
         self._model_gather_fn = model_gather_fn_for(model_axis, topo.model_size)
-        self._gather_vjp = self._build_gather_vjp()
-        self._quant_gather_vjp = self._build_quant_gather_vjp()
+        self._gather_vjp = self._build_gather_vjp(quantized=False)
+        self._quant_gather_vjp = self._build_gather_vjp(quantized=True)
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -119,9 +152,16 @@ class CommEngine:
             inner=mcfg.hierarchy_inner,
             prefetch=getattr(mcfg, "prefetch", True),
         )
+        hop2 = mcfg.compress_hop2  # bool (legacy) or wire-dtype string
+        if hop2 is True:
+            hop2 = "bf16"
+        elif not hop2:
+            hop2 = "fp32"
         sp = SyncPolicy(
             mode=mcfg.sync_mode,
-            hop2_wire_dtype="bf16" if mcfg.compress_hop2 else "fp32",
+            hop2_wire_dtype=hop2,
+            hop1_wire_dtype=getattr(mcfg, "hop1_wire_dtype", "fp32"),
+            grad_rounding=getattr(mcfg, "grad_rounding", "stochastic"),
         )
         return cls(topo, gp, sp, compute_dtype=mcfg.gather_dtype)
 
@@ -171,35 +211,46 @@ class CommEngine:
     # -- centralized custom-VJP gathers -------------------------------------
     def _adjoint(self, ct: jax.Array) -> jax.Array:
         """Hop-1 of §3.4 — or the Fig-14 alternative schedule's full
-        all-reduce + slice when the ablation is selected."""
+        all-reduce + slice when the ablation is selected.
+
+        The wire is picked by ``SyncPolicy.hop1_wire_dtype``: ``fp32`` runs
+        the staged reduce-scatter in the cotangent's own dtype (bitwise
+        today's behavior), ``bf16`` narrows the cotangent first, ``int8``
+        runs the qgZ per-stage block-quantized reduce-scatter (int8 + f32
+        scales per hop, fp32 accumulation between hops) mirroring the
+        gather topology.  The return dtype always matches the cotangent, so
+        every gather policy composes with every hop-1 wire.
+        """
         if self.sync_policy.mode == "allreduce_slice":
             return C.alternative_sync(ct, self.topo)
+        hop1 = self.sync_policy.hop1_wire_dtype
+        if hop1 == "int8" and self.topo.partition_size > 1:
+            gp = self.gather_policy
+            out = C.quantized_reduce_scatter(
+                ct, self.topo, topology=gp.topology, inner=gp.inner,
+                stochastic=self.sync_policy.stochastic)
+            return out.astype(ct.dtype)
+        if hop1 == "bf16":
+            return self._policy_reduce_scatter(
+                ct.astype(jnp.bfloat16)).astype(ct.dtype)
         return self._policy_reduce_scatter(ct)
 
-    def _build_gather_vjp(self):
-        @jax.custom_vjp
-        def gather(row):
-            return self._policy_all_gather(row)
+    def _build_gather_vjp(self, *, quantized: bool):
+        """One parameterized builder for both wire families.
 
-        def fwd(row):
-            return self._policy_all_gather(row), None
-
-        def bwd(_, ct):
-            return (self._adjoint(ct),)
-
-        gather.defvjp(fwd, bwd)
-        return gather
-
-    def _build_quant_gather_vjp(self):
-        """int8 blockwise-quantized wire gather (ZeRO++ qwZ analogue).
-
-        Forward: quantize the local fp32 shard to (int8 q, f32 block scales),
-        all-gather both with the policy topology, dequantize to the compute
-        dtype.  Backward: straight-through — the exact adjoint reduce-scatter
-        of the *unquantized* gather, in fp32 (gradients are never quantized).
+        ``quantized=False``: the float wire — gather the row as-is (callers
+        cast to the wire dtype).  ``quantized=True``: the int8 blockwise
+        wire (ZeRO++ qwZ) — quantize the local fp32 shard to (int8 q, f32
+        block scales), all-gather both with the policy topology, dequantize
+        to the compute dtype.  Either way the backward is straight-through:
+        :meth:`_adjoint` of the (float) cotangent — the exact staged
+        reduce-scatter, or its bf16/int8-wire variant when ``SyncPolicy``
+        compresses hop 1; the forward quantizer is never differentiated.
         """
 
-        def q_gather(row):
+        def fwd_gather(row):
+            if not quantized:
+                return self._policy_all_gather(row)
             q, s = Q.quantize_flat(row)
             qg = self._policy_all_gather(q)
             sg = self._policy_all_gather(s)
@@ -207,13 +258,15 @@ class CommEngine:
 
         @jax.custom_vjp
         def gather(row):
-            return q_gather(row)
+            return fwd_gather(row)
 
         def fwd(row):
-            return q_gather(row), None
+            return fwd_gather(row), None
 
         def bwd(_, ct):
-            return (self._adjoint(ct.astype(jnp.float32)),)
+            if quantized:
+                ct = ct.astype(jnp.float32)
+            return (self._adjoint(ct),)
 
         gather.defvjp(fwd, bwd)
         return gather
@@ -253,33 +306,47 @@ class CommEngine:
         arises as the VJP of :meth:`gather_flat`."""
         return self._policy_reduce_scatter(g)
 
-    def hop2(self, g: jax.Array) -> jax.Array:
+    def hop2(self, g: jax.Array, *, salt: int = 0) -> jax.Array:
         """Replication-group all-reduce at the gradient-accumulation
-        boundary (§3.4 hop 2), with optional bf16 wire compression.  A no-op
-        under the alternative schedule (its backward already all-reduced
-        globally)."""
+        boundary (§3.4 hop 2), with optional bf16 or int8 wire compression.
+        A no-op under the alternative schedule (its backward already
+        all-reduced globally).
+
+        ``int8`` is the quantized decompress leg: reduce-scatter +
+        all-gather, both shipping (int8 q, f32 block scales) with an fp32
+        accumulation in between (``collectives.quantized_all_reduce``);
+        ``salt`` decorrelates the stochastic-rounding dither across payloads
+        (ignored by the float wires).
+        """
         if self.sync_policy.mode != "2hop":
             return g
-        if self.sync_policy.hop2_wire_dtype == "bf16":
+        wire = self.sync_policy.hop2_wire_dtype
+        if wire == "int8" and self.topo.replication_degree > 1:
+            return C.quantized_all_reduce(
+                g, self.topo, salt=salt,
+                stochastic=self.sync_policy.stochastic)
+        if wire == "bf16":
             g = g.astype(jnp.bfloat16)
         g = C.hop2_all_reduce(g, self.topo)
         return g.astype(jnp.float32)
 
-    def hop2_bucketed(self, bucket: jax.Array) -> jax.Array:
+    def hop2_bucketed(self, bucket: jax.Array, *, salt: int = 0) -> jax.Array:
         """Hop 2 at bucket granularity: the identical replication-group
-        all-reduce (same axes, same optional bf16 wire compression) applied
-        to one fixed-byte slice of a pool's flat gradient shard.
+        all-reduce (same axes, same optional wire compression) applied to
+        one fixed-byte slice of a pool's flat gradient shard.
 
         The boundary scheduler (core/schedule.py) issues these one bucket
-        ahead of the dependent norm/optimizer compute so the collective
+        ahead of the dependent norm/decompress compute so the collective
         overlaps it.  Because ``psum`` (and the bf16 cast) is elementwise,
         a bucket of the reduced buffer is bitwise equal to the reduction of
         the bucket — which is what makes the bucketed boundary exactly
-        equivalent to the serial reference.  This stays the single
-        construction point for the collective: same code path as
-        :meth:`hop2`, just a different payload shape.
+        equivalent to the serial reference for the fp32/bf16 wires.  The
+        int8 wire's quantization blocks follow the *payload*, so its
+        schedules agree only to quantization error (core/collectives.py).
+        This stays the single construction point for the collective: same
+        code path as :meth:`hop2`, just a different payload shape.
         """
-        return self.hop2(bucket)
+        return self.hop2(bucket, salt=salt)
 
     # -- misc reductions -----------------------------------------------------
     def partition_coord(self):

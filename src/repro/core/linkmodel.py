@@ -116,6 +116,14 @@ class LinkProfile:
         """Device-local copy (the paper's Fig-5 chunk-reorder stage)."""
         return nbytes / self.local_copy_bw
 
+    def hbm_time(self, nbytes: float) -> float:
+        """Time to stream ``nbytes`` through HBM — the unit the cost model
+        prices memory-bound boundary compute in: the hop-2 pipeline's
+        hideable norm/decompress work (``autotune.cost_hop2_schedule``) and
+        the int8 wire's per-stage quantize/dequantize overhead
+        (``autotune.QGZ_COMPUTE_BYTES_PER_ELEM``)."""
+        return nbytes / self.hbm_bw
+
 
 # ---------------------------------------------------------------------------
 # named profiles

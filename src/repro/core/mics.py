@@ -59,9 +59,12 @@ class MiCSConfig:
     compression) to the bandwidth-aware autotuner (core/autotune.py), which
     ranks every candidate over the named ``link_profile``
     (core/linkmodel.py) and rewrites this config with the winner before the
-    CommEngine is built.  Auto never changes numerics you did not opt into:
-    int8 wire needs ``quant_gather=True``, bf16 hop-2 needs
-    ``compress_hop2=True``; those flags turn from orders into permissions.
+    CommEngine is built.  Auto never changes numerics you did not opt into,
+    per mechanism: the int8 gather wire needs ``quant_gather=True`` (its
+    gradient adjoint stays exact), the compressed hop-2 wires need
+    ``compress_hop2=True``/``"bf16"``/``"int8"``, and the lossy int8 qgZ
+    hop-1 needs ``hop1_wire_dtype="int8"``; under ``policy="auto"`` those
+    flags turn from orders into permissions.
     """
 
     micro_steps: int = 1
@@ -70,10 +73,14 @@ class MiCSConfig:
     gather_dtype: Any = jnp.bfloat16
     sync_mode: str = "2hop"             # '2hop' | 'allreduce_slice' (ablation)
     hierarchy_inner: int | None = None  # intra-"node" factor for staged gather
-    compress_hop2: bool = False         # bf16-compressed cross-replica hop 2
+    compress_hop2: Any = False          # hop-2 wire: False/'fp32' | True/'bf16'
+    #                                     | 'int8' (quantized all-reduce leg)
     scores_bf16: bool = False           # bf16 attention scores (§Perf)
     mlstm_chunk: int = 0                # chunkwise-parallel mLSTM (§Perf)
     quant_gather: bool = False          # int8 wire / serving-weight gathers
+    hop1_wire_dtype: str = "fp32"       # 'fp32' | 'bf16' | 'int8' (ZeRO++ qgZ
+    #                                     block-quantized hop-1 reduce-scatter)
+    grad_rounding: str = "stochastic"   # int8 gradient quantizer rounding
     prefetch: bool = True               # double-buffered lookahead gathers
     policy: str = "manual"              # 'manual' | 'auto' (link-model tuner)
     link_profile: Any = "v5e"           # profile name or LinkProfile instance
@@ -81,6 +88,10 @@ class MiCSConfig:
     hop2_bucket_mb: float = 32.0        # fixed-byte hop-2 pipeline bucket
 
     def __post_init__(self):
+        from repro.core.comm import (
+            GRAD_ROUNDINGS, HOP1_WIRE_DTYPES, HOP2_WIRE_DTYPES,
+        )
+
         if self.policy not in ("manual", "auto"):
             raise ValueError(f"unknown policy {self.policy!r} "
                              "(expected 'manual' or 'auto')")
@@ -91,6 +102,19 @@ class MiCSConfig:
         if self.hop2_bucket_mb <= 0:
             raise ValueError(
                 f"hop2_bucket_mb must be > 0, got {self.hop2_bucket_mb}")
+        if self.hop1_wire_dtype not in HOP1_WIRE_DTYPES:
+            raise ValueError(
+                f"unknown hop1_wire_dtype {self.hop1_wire_dtype!r} "
+                f"(expected one of {HOP1_WIRE_DTYPES})")
+        if self.grad_rounding not in GRAD_ROUNDINGS:
+            raise ValueError(
+                f"unknown grad_rounding {self.grad_rounding!r} "
+                f"(expected one of {GRAD_ROUNDINGS})")
+        if not (self.compress_hop2 in (False, True)
+                or self.compress_hop2 in HOP2_WIRE_DTYPES):
+            raise ValueError(
+                f"compress_hop2 must be a bool or one of {HOP2_WIRE_DTYPES}, "
+                f"got {self.compress_hop2!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,19 @@
-"""Int8 blockwise quantization primitives (ZeRO++ qwZ-style).
+"""Int8 blockwise quantization primitives (ZeRO++ qwZ/qgZ-style).
 
-These are the dtype-level building blocks; the *collective* policy that
-uses them — int8 wire gathers for training and serving, with the
-straight-through exact adjoint — lives in ``core/comm.py`` (CommEngine,
-``GatherPolicy.wire_dtype='int8'``).  ``quantize_state`` remains the
-deployment-time conversion producing stored ``{'q','s'}`` serving weights.
+These are the dtype-level building blocks; the *collective* policies that
+use them live in ``core/comm.py`` / ``core/collectives.py``:
+
+* **qwZ** (weights): int8 wire gathers for training and serving with the
+  straight-through exact adjoint (``GatherPolicy.wire_dtype='int8'``).
+  ``quantize_state`` remains the deployment-time conversion producing
+  stored ``{'q','s'}`` serving weights.
+* **qgZ** (gradients): the per-stage block-quantized hierarchical
+  reduce-scatter (``collectives.quantized_reduce_scatter``,
+  ``SyncPolicy.hop1_wire_dtype='int8'``) and the int8 hop-2 leg
+  (``collectives.quantized_all_reduce``).  Gradient quantization uses the
+  *stochastic* rounding mode below so each quantize step is unbiased in
+  expectation — dequantized sums estimate the true reduction without a
+  systematic drift term.
 
 Decode steps re-gather every layer's weights across the partition group each
 step; at batch sizes that fit real serving traffic this is the binding
@@ -14,13 +23,19 @@ traffic vs bf16 (1.03 B/param vs 2), at ~0.2-0.4% relative weight error —
 standard W8 inference practice (cf. LLM.int8()/SmoothQuant), applied here to
 the *collective* rather than the matmul:
 
-    stored:  q  int8 [*, flat_len]       (flat pools, MiCS-sharded as usual)
-             s  f32  [*, flat_len/BLOCK] (absmax scale per 128-elem block)
+    stored:  q  int8 [*, L]               (flat pools, MiCS-sharded as usual)
+             s  f32  [*, ceil(L/BLOCK)]   (absmax scale per 128-elem block)
     use:     all-gather(q) + all-gather(s)  ->  dequant  ->  unflatten
+
+Ragged tails are supported: ``L`` need not be a multiple of ``BLOCK`` — the
+final block is short (quantized against its own absmax), so arbitrary
+bucket/chunk sizes from ``flat_param.partition_buckets`` and the qgZ stage
+chunking quantize cleanly.  Aligned inputs produce bit-identical results to
+the historical aligned-only implementation.
 
 Master states stay fp32 either way: stored-int8 weights are a one-time
 deployment conversion (`quantize_state`), while training's int8 *wire*
-gathers quantize transiently per collective and keep gradients fp32.
+collectives quantize transiently per stage and accumulate in fp32.
 """
 
 from __future__ import annotations
@@ -31,24 +46,56 @@ import jax.numpy as jnp
 BLOCK = 128
 
 
-def quantize_flat(flat: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """flat [..., L] (L % BLOCK == 0) -> (int8 [..., L], f32 [..., L/BLOCK])."""
+def n_blocks(length: int) -> int:
+    """Scale entries for a flat buffer of ``length`` elements (ragged-aware)."""
+    return -(-length // BLOCK)
+
+
+def quantize_flat(
+    flat: jax.Array, *, key: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """flat [..., L] -> (int8 [..., L], f32 [..., ceil(L/BLOCK)]).
+
+    ``key=None`` (default) rounds to nearest — deterministic and
+    bitwise-reproducible, the qwZ weight-wire mode.  With a PRNG ``key`` the
+    rounding is *stochastic*: ``floor(v + u)`` with ``u ~ U[0, 1)``, so
+    ``E[dequantize(quantize(x))] == x`` elementwise (the qgZ gradient-wire
+    mode; the unbiasedness is what keeps quantized reductions drift-free).
+    """
     *lead, L = flat.shape
-    if L % BLOCK:
-        raise ValueError(f"flat length {L} not a multiple of {BLOCK}")
-    blocks = flat.astype(jnp.float32).reshape(*lead, L // BLOCK, BLOCK)
+    nb = n_blocks(L)
+    pad = nb * BLOCK - L
+    x = flat.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = x.reshape(*lead, nb, BLOCK)
     absmax = jnp.max(jnp.abs(blocks), axis=-1)
     scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
-    return q.astype(jnp.int8).reshape(*lead, L), scale
+    v = blocks / scale[..., None]
+    if key is None:
+        q = jnp.round(v)
+    else:
+        q = jnp.floor(v + jax.random.uniform(key, blocks.shape))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8).reshape(*lead, nb * BLOCK)
+    if pad:
+        q = q[..., :L]
+    return q, scale
 
 
 def dequantize_flat(q: jax.Array, scale: jax.Array,
                     dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of :func:`quantize_flat` (ragged tails follow the scale count)."""
     *lead, L = q.shape
-    blocks = q.astype(jnp.float32).reshape(*lead, L // BLOCK, BLOCK)
-    out = blocks * scale[..., None]
-    return out.reshape(*lead, L).astype(dtype)
+    nb = scale.shape[-1]
+    pad = nb * BLOCK - L
+    x = q.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    out = (x.reshape(*lead, nb, BLOCK) * scale[..., None])
+    out = out.reshape(*lead, nb * BLOCK)
+    if pad:
+        out = out[..., :L]
+    return out.astype(dtype)
 
 
 def quantize_state(params: dict[str, jax.Array]) -> dict[str, dict]:

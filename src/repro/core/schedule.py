@@ -33,6 +33,16 @@ are bitwise equal, and the fold order is literally the same Python loop).
 The denominator (``micro_steps * data_parallel``) and the clip factor are
 folded into one ``grad_scale`` passed to ``adamw_shard_update`` — no
 standalone full-gradient-tree division pass on either schedule.
+
+**The int8 decompress leg** (qgZ follow-on).  With
+``SyncPolicy.hop2_wire_dtype='int8'`` each hop-2 payload runs as a
+block-quantized all-reduce (``collectives.quantized_all_reduce``: int8 +
+f32 scales on both legs, fp32 accumulation between them), and the hidden
+per-bucket compute grows the block *dequantize* on top of the norm
+partial.  Unlike the elementwise bf16 cast, the quantization blocks follow
+the payload, so int8 hop-2 results depend on payload granularity: serial
+and bucketed agree to quantization error, not bitwise — the bitwise
+schedule-equivalence guarantee above is for the fp32/bf16 wires.
 """
 
 from __future__ import annotations
@@ -148,8 +158,13 @@ def _sq(bucket: jax.Array) -> jax.Array:
 
 
 def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict):
-    """Reference: whole-pool hop-2 first, then per-bucket norm partials."""
-    reduced = {name: comm.hop2(g) for name, g in flat_grads.items()}
+    """Reference: whole-pool hop-2 first, then per-bucket norm partials.
+
+    ``salt`` (the pool index) seeds the int8 hop-2 wire's stochastic-
+    rounding dither per payload; the float wires ignore it.
+    """
+    reduced = {name: comm.hop2(g, salt=i)
+               for i, (name, g) in enumerate(flat_grads.items())}
     sq_parts = [
         _sq(lax.slice_in_dim(reduced[b.pool], b.lo, b.hi, axis=0))
         for b in plan.buckets
@@ -159,10 +174,14 @@ def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict):
 
 def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict):
     """Software pipeline: issue bucket k's hop-2, then run bucket k−1's
-    dependent compute (squared-norm partial + wire decompress).  The
-    collective of bucket k has no data dependency on bucket k−1's compute,
-    which is what lets the backend overlap the two; the drain step handles
-    the last bucket."""
+    dependent compute (squared-norm partial + wire decompress — the bf16
+    upcast, or the int8 leg's block dequantize).  The collective of bucket
+    k has no data dependency on bucket k−1's compute, which is what lets
+    the backend overlap the two; the drain step handles the last bucket.
+    The global bucket index salts the int8 wire's dither so no two
+    payloads of one boundary share a key (offsets repeat across pools —
+    every pool has a bucket at lo=0 — so the plan-order index is the salt).
+    """
     parts: dict[str, list] = {name: [] for name in flat_grads}
     sq_parts: list[jax.Array] = []
     pending = None  # (BucketRef, in-flight reduced bucket)
@@ -171,9 +190,9 @@ def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict):
         sq_parts.append(_sq(reduced_bucket))
         parts[ref.pool].append(reduced_bucket)
 
-    for ref in plan.buckets:
+    for i, ref in enumerate(plan.buckets):
         raw = lax.slice_in_dim(flat_grads[ref.pool], ref.lo, ref.hi, axis=0)
-        in_flight = comm.hop2_bucketed(raw)   # issue bucket k
+        in_flight = comm.hop2_bucketed(raw, salt=i)  # issue bucket k
         if pending is not None:
             retire(*pending)                  # compute for bucket k−1
         pending = (ref, in_flight)

@@ -292,6 +292,18 @@ def main():
                     help="int8 block-quantized wire/serving-weight gathers "
                          "(GatherPolicy wire_dtype='int8'; under --policy "
                          "auto this *permits* rather than forces int8)")
+    ap.add_argument("--hop1-wire-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="hop-1 gradient reduce-scatter wire: fp32 = exact "
+                         "staged adjoint, int8 = ZeRO++-qgZ per-stage "
+                         "block-quantized reduce-scatter (fp32 inter-stage "
+                         "accumulation; under --policy auto this permits "
+                         "rather than forces the int8 hop-1)")
+    ap.add_argument("--compress-hop2", default="off",
+                    choices=["off", "bf16", "int8"],
+                    help="hop-2 replication-group all-reduce wire: bf16 "
+                         "cast or the int8 quantized decompress leg "
+                         "(core/schedule.py); 'off' = fp32")
     ap.add_argument("--prefetch", type=int, default=1,
                     help="1 = double-buffered lookahead gathers (layer i+1 "
                          "gathered during layer i's compute; the default), "
@@ -322,6 +334,9 @@ def main():
         scores_bf16=args.bf16_scores,
         mlstm_chunk=args.mlstm_chunk,
         quant_gather=args.quant_gather,
+        hop1_wire_dtype=args.hop1_wire_dtype,
+        compress_hop2=(False if args.compress_hop2 == "off"
+                       else args.compress_hop2),
         prefetch=bool(args.prefetch),
         policy=args.policy,
         link_profile=args.link_profile,

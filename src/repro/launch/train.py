@@ -67,6 +67,12 @@ def main():
                     help="int8 blockwise wire gathers (GatherPolicy "
                          "wire_dtype='int8'; under --policy auto this "
                          "*permits* rather than forces int8)")
+    ap.add_argument("--hop1-wire-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="hop-1 gradient reduce-scatter wire: fp32 = the "
+                         "exact staged adjoint, int8 = ZeRO++-qgZ "
+                         "block-quantized stages with fp32 accumulation "
+                         "(under --policy auto this permits int8 hop-1)")
     ap.add_argument("--prefetch", type=int, default=1,
                     help="1 = double-buffered lookahead gathers (default), "
                          "0 = serial reference schedule")
@@ -92,6 +98,7 @@ def main():
                       hierarchical=not args.no_hierarchical,
                       gather_order=args.gather_order,
                       quant_gather=args.quant_gather,
+                      hop1_wire_dtype=args.hop1_wire_dtype,
                       prefetch=bool(args.prefetch),
                       policy=args.policy,
                       link_profile=args.link_profile,

@@ -30,7 +30,11 @@ from the replica-group coordinates: contiguous runs along a partition axis
 are the fast "intra-node" stage, strided groups the slow inter-node stage),
 ``grad_rs.*`` for the adjoint reduce-scatters, ``hop2`` for the
 replication-group all-reduce, ``model_gather`` for tensor-parallel segment
-reassembly.  The census also reports **prefetch evidence**: all-gathers
+reassembly.  The quantized gradient wires are attributed the same way:
+qgZ's per-stage all-to-alls (int8 payloads + f32 block scales) land in
+``grad_rs.{flat,inner,outer}`` by their replica-group coordinates, and the
+int8 hop-2's decomposed all-reduce (all-to-all + all-gather over the
+replication axes) lands in ``hop2``.  The census also reports **prefetch evidence**: all-gathers
 inside ``while`` bodies whose results flow into the loop carry without
 passing through any compute (dot) are gathers issued one layer *ahead* of
 their consumer — the double-buffered schedule's signature in optimized HLO.
@@ -51,8 +55,12 @@ _DTYPE_BYTES = {
 
 _SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+# The shape alternation accepts tuple shapes with one level of nested
+# tuples — e.g. a while carry holding PRNG loop state ``(s32[], ...,
+# (s32[], u32[4]{0}, ...), ...)`` as emitted for rolled threefry loops.
 _INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}]+))\s+"
     r"([\w\-]+)\(([^)]*(?:\([^)]*\))?[^)]*)\)")
 _OPERAND = re.compile(r"%([\w.\-]+)")
 _GROUPS = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
@@ -187,7 +195,15 @@ def _stage_label(
     model_axis: str,
     nbytes: float = 0.0,
 ) -> str:
-    """Attribute one collective to a CommEngine policy stage."""
+    """Attribute one collective to a CommEngine policy stage.
+
+    ``all-to-all`` collectives are the quantized gradient wires: over
+    partition axes they are qgZ hop-1 stages (the all-to-all decomposition
+    of a block-quantized reduce-scatter, ``grad_rs.*``); over replication
+    axes they are the int8 hop-2 reduce-scatter leg, whose matching
+    all-gather over the replication axes is the other half of the
+    decomposed quantized all-reduce — both land in ``hop2``.
+    """
     # size-1 axes never vary inside a replica group; compare against the
     # *effective* partition/replication axes only.
     pset = {a for a in partition_axes if mesh_shape.get(a, 1) > 1}
@@ -195,10 +211,12 @@ def _stage_label(
     aset = set(axes)
     if not aset:
         return "other"
-    if kind in ("all-gather", "reduce-scatter"):
-        prefix = "param_gather" if kind == "all-gather" else "grad_rs"
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
         if aset == {model_axis}:
             return "model_gather" if kind == "all-gather" else "model_rs"
+        if rset and aset <= rset and kind in ("all-gather", "all-to-all"):
+            return "hop2"  # decomposed quantized all-reduce legs
+        prefix = "param_gather" if kind == "all-gather" else "grad_rs"
         if not aset <= pset:
             return "other"
         coords = _group_coords(group, mesh_shape)
@@ -364,9 +382,14 @@ def boundary_census(
     compute instructions (fusions, reduces, arithmetic — not converts or
     copies) *between* them in program order.  The serial reference issues
     every hop-2 back to back before the first norm reduce touches any
-    result.  Reports, over all computations:
+    result.  Under the int8 hop-2 wire there are no hop-2 all-reduces at
+    all: each payload runs as a decomposed quantized all-reduce whose int8
+    all-to-all (the reduce-scatter leg) is counted as that payload's hop-2
+    op instead (the f32 scale traffic and the all-gather leg are not
+    double-counted).  Reports, over all computations:
 
-      hop2_ops               total hop-2-stage all-reduce instructions
+      hop2_ops               hop-2-stage collectives, one per payload
+                             (all-reduces, or int8 all-to-all legs)
       hop2_max_operand_bytes largest single hop-2 payload (bucket ceiling)
       compute_between_hop2   compute instructions strictly between the
                              first and last hop-2 of a computation
@@ -378,8 +401,11 @@ def boundary_census(
     for comp in comps.values():
         positions = []
         for idx, ins in enumerate(comp.instrs):
-            if ins.op not in ("all-reduce", "all-reduce-start"):
+            if ins.op not in ("all-reduce", "all-reduce-start", "all-to-all"):
                 continue
+            kind = "all-to-all" if ins.op == "all-to-all" else "all-reduce"
+            if kind == "all-to-all" and "s8[" not in ins.shape_str:
+                continue  # count only the int8 q leg, once per payload
             groups = _parse_groups(ins.line)
             if groups:
                 axes = _group_axes(groups[0], mesh_shape)
@@ -392,7 +418,7 @@ def boundary_census(
                 if o in comp.table:
                     ob += _parse_shape(comp.table[o])[0]
             stage = _stage_label(
-                "all-reduce", axes, group0, mesh_shape,
+                kind, axes, group0, mesh_shape,
                 tuple(partition_axes), tuple(replication_axes), model_axis,
                 nbytes=ob)
             if stage != "hop2":

@@ -20,6 +20,11 @@ Checks:
   census_match_multi    multi-axis ('pod','shard') partition group: the
                         outer stage is the pod hop, bytes match both stage
                         orders
+  census_match_qgz      the int8 qgZ hop-1 wire under all 3 topologies:
+                        the grad_rs stages become per-stage all-to-all
+                        pairs (int8 q + f32 scales) whose predicted wire
+                        bytes and instruction counts match the compiled
+                        HLO exactly (ISSUE 4 acceptance)
   auto_plan_census      policy="auto" end to end: resolve_config picks a
                         plan, the step compiled from the resolved config
                         measures the bytes the plan predicted
@@ -78,12 +83,14 @@ def check(name):
     return deco
 
 
-def _mcfg(topology: str, wire: str, prefetch: bool = False) -> MiCSConfig:
+def _mcfg(topology: str, wire: str, prefetch: bool = False,
+          hop1: str = "fp32") -> MiCSConfig:
     return MiCSConfig(
         micro_steps=MICRO,
         hierarchical=topology != "flat",
         gather_order=topology if topology != "flat" else "inner_first",
         prefetch=prefetch,
+        hop1_wire_dtype=hop1,
         **_WIRE_MCFG[wire],
     )
 
@@ -100,12 +107,14 @@ def _measure(model, topo, mcfg, *, global_batch=16, seq=16):
                    replication_axes=topo.replication_axes)
 
 
-def _assert_match(model, topo, topology, wire, *, prefetch=False, tag=""):
-    mcfg = _mcfg(topology, wire, prefetch)
+def _assert_match(model, topo, topology, wire, *, prefetch=False,
+                  hop1="fp32", tag=""):
+    mcfg = _mcfg(topology, wire, prefetch, hop1)
     measured = _measure(model, topo, mcfg)["by_stage"]
     pred = predict_traffic(
         model, topo,
-        GatherPolicy(topology, wire, None, prefetch), SyncPolicy(),
+        GatherPolicy(topology, wire, None, prefetch),
+        SyncPolicy(hop1_wire_dtype=hop1),
         micro_steps=MICRO, upcast_float_collectives=True,
     )["by_stage"]
     cmp = compare_census(pred, measured)
@@ -166,6 +175,21 @@ def _census_multi():
     for topology, d in detail.items():
         assert "param_gather.outer" in d, (topology, d)
     RESULTS["census_match_multi_detail"] = detail
+
+
+# ---------------------------------------------------------------------------
+@check("census_match_qgz")
+def _census_qgz():
+    """int8 qgZ hop-1: per-stage all-to-all wire bytes and counts are
+    instruction-exact for every topology (the ISSUE 4 acceptance check)."""
+    model, topo = _single_axis()
+    detail = {}
+    for topology in ("flat", "inner_first", "outer_first"):
+        detail[topology] = _assert_match(
+            model, topo, topology, "bf16", hop1="int8",
+            tag=f"qgz/{topology}")
+        assert any(k.startswith("grad_rs") for k in detail[topology])
+    RESULTS["census_match_qgz_detail"] = detail
 
 
 # ---------------------------------------------------------------------------

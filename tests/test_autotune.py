@@ -198,9 +198,13 @@ def test_auto_picks_outer_first_on_slow_inter_pod():
     plan = rank_policies(StubModel(), topo_multi(pods=2, shard=8), prof,
                          micro_steps=4, prefetch=False)
     assert plan.chosen.gather.topology == "outer_first"
-    # and the winner's slow-tier bytes are the minimum of the ranking
+    # and the winner's slow-tier bytes are the minimum among candidates of
+    # the same (lossless) numerics — the lossy int8/qgZ rows move even
+    # fewer bytes but are not eligible without opt-in
+    lossless = [c for c in plan.candidates
+                if not (c.lossy_wire or c.lossy_hop2 or c.lossy_hop1)]
     assert plan.chosen.inter_wire_bytes == pytest.approx(
-        min(c.inter_wire_bytes for c in plan.candidates))
+        min(c.inter_wire_bytes for c in lossless))
 
 
 def test_uniform_links_never_pick_outer_first():
@@ -237,14 +241,21 @@ def test_lossy_candidates_ranked_but_not_chosen():
 def test_candidate_grid_shape():
     cands = enumerate_candidates(topo_single(p=8, repl=2), prefetch=False)
     gathers = {(g.topology, g.wire_dtype, g.inner) for g, _ in cands}
-    # flat + {inner,outer}x{2,4} per wire dtype, hop2 in {fp32, bf16}
+    # flat + {inner,outer}x{2,4} per wire dtype, hop2 in {fp32, bf16,
+    # int8}, hop1 in {fp32, int8} (the qgZ axis)
     assert len(gathers) == 3 * (1 + 2 * 2)
-    assert len(cands) == 2 * len(gathers)
+    assert {s.hop1_wire_dtype for _, s in cands} == {"fp32", "int8"}
+    assert {s.hop2_wire_dtype for _, s in cands} == {"fp32", "bf16", "int8"}
+    assert len(cands) == 3 * 2 * len(gathers)
     # p=2 degenerates to flat only
     flat_only = enumerate_candidates(
         StubTopo({"shard": 2, "repl": 1}, ("shard",), ("repl",)),
         prefetch=False)
     assert {g.topology for g, _ in flat_only} == {"flat"}
+    # serving has no gradients: the hop-1 axis collapses
+    serve = enumerate_candidates(topo_single(p=8, repl=2), prefetch=True,
+                                 mode="serve")
+    assert {s.hop1_wire_dtype for _, s in serve} == {"fp32"}
 
 
 def test_plan_table_and_describe_serializable():
@@ -300,7 +311,7 @@ def harness_results():
 
 CHECKS = [
     "census_match_single", "census_match_prefetch", "census_match_multi",
-    "auto_plan_census",
+    "census_match_qgz", "auto_plan_census",
 ]
 
 

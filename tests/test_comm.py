@@ -32,7 +32,9 @@ def test_policy_validation():
     with pytest.raises(ValueError):
         SyncPolicy(mode="3hop")
     with pytest.raises(ValueError):
-        SyncPolicy(hop2_wire_dtype="int8")
+        SyncPolicy(hop2_wire_dtype="fp8")
+    # int8 hop-2 is the qgZ decompress leg, a legal wire since ISSUE 4
+    assert SyncPolicy(hop2_wire_dtype="int8").hop2_wire_dtype == "int8"
 
 
 @pytest.mark.parametrize("mcfg,topology,wire,mode,hop2_wire", [

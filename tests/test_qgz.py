@@ -1,0 +1,285 @@
+"""qgZ tests: the int8 block-quantized gradient wires (hop-1 per-stage
+reduce-scatter, hop-2 decompress leg).
+
+Single-device units cover policy validation, config mapping, the cost
+model's gradient-wire pricing, and the ISSUE acceptance ranking (an
+int8-hop-1 candidate above the pure-fp32 baseline on ``efa-100g``); the
+8-virtual-device harness (tests/qgz_harness.py) covers collective routing
+exactness, convergence of the tiny LM under the quantized wires, and the
+bucket-granular int8 hop-2 census."""
+
+import pathlib
+
+import pytest
+
+from harness_util import run_harness
+from repro.core.comm import CommEngine, GatherPolicy, SyncPolicy
+from repro.core.mics import MiCSConfig
+
+HARNESS = pathlib.Path(__file__).parent / "qgz_harness.py"
+
+
+# ---------------------------------------------------------------------------
+# policy / config units (single device)
+# ---------------------------------------------------------------------------
+
+def test_sync_policy_validation():
+    SyncPolicy(hop1_wire_dtype="int8")
+    SyncPolicy(hop2_wire_dtype="int8")
+    with pytest.raises(ValueError):
+        SyncPolicy(hop1_wire_dtype="fp8")
+    with pytest.raises(ValueError):
+        SyncPolicy(grad_rounding="truncate")
+    with pytest.raises(ValueError):
+        # the ablation has no staged hop-1 to compress
+        SyncPolicy(mode="allreduce_slice", hop1_wire_dtype="int8")
+    assert SyncPolicy().stochastic
+    assert not SyncPolicy(grad_rounding="nearest").stochastic
+
+
+def test_mics_config_validation():
+    MiCSConfig(hop1_wire_dtype="int8", compress_hop2="int8")
+    with pytest.raises(ValueError):
+        MiCSConfig(hop1_wire_dtype="fp8")
+    with pytest.raises(ValueError):
+        MiCSConfig(grad_rounding="up")
+    with pytest.raises(ValueError):
+        MiCSConfig(compress_hop2="fp8")
+
+
+@pytest.mark.parametrize("mcfg,hop1,hop2", [
+    (MiCSConfig(), "fp32", "fp32"),
+    (MiCSConfig(hop1_wire_dtype="int8"), "int8", "fp32"),
+    (MiCSConfig(compress_hop2=True), "fp32", "bf16"),
+    (MiCSConfig(compress_hop2="bf16"), "fp32", "bf16"),
+    (MiCSConfig(compress_hop2="int8", hop1_wire_dtype="bf16"),
+     "bf16", "int8"),
+])
+def test_from_config_grad_wires(topo1, mcfg, hop1, hop2):
+    eng = CommEngine.from_config(topo1, mcfg)
+    assert eng.sync_policy.hop1_wire_dtype == hop1
+    assert eng.sync_policy.hop2_wire_dtype == hop2
+    assert eng.sync_policy.stochastic
+
+
+def test_hop1_noop_at_p1(topo1):
+    """partition_size == 1: the int8 hop-1 adjoint is the identity."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    eng = CommEngine.from_config(
+        topo1, MiCSConfig(hop1_wire_dtype="int8"))
+    ct = jnp.arange(16.0, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(eng._adjoint(ct)),
+                                  np.asarray(ct))
+
+
+# ---------------------------------------------------------------------------
+# cost-model pricing + ranking (device-free)
+# ---------------------------------------------------------------------------
+
+def test_grad_wire_bytes_pricing():
+    from repro.core.autotune import INT8_WIRE_BYTES, grad_wire_bytes
+    from repro.core.quant import BLOCK
+
+    assert INT8_WIRE_BYTES == pytest.approx(1.0 + 4.0 / BLOCK)
+    # hop-1 fp32 keeps the legacy gather-wire-follows rule
+    assert grad_wire_bytes("fp32", "fp32") == 4.0
+    assert grad_wire_bytes("bf16", "fp32") == 2.0
+    assert grad_wire_bytes("int8", "fp32") == 4.0   # straight-through
+    # compressed hop-1 decouples from the gather wire
+    for gw in ("fp32", "bf16", "int8"):
+        assert grad_wire_bytes(gw, "bf16") == 2.0
+        assert grad_wire_bytes(gw, "int8") == pytest.approx(INT8_WIRE_BYTES)
+
+
+def test_predict_traffic_int8_hop1_stages():
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import INT8_WIRE_BYTES, predict_traffic
+
+    model, topo = StubModel(), topo_single(p=16, repl=2)
+    gp = GatherPolicy("inner_first", "bf16", 4, False)
+    base = predict_traffic(model, topo, gp, SyncPolicy(), micro_steps=2)
+    qgz = predict_traffic(model, topo, gp,
+                          SyncPolicy(hop1_wire_dtype="int8"), micro_steps=2)
+    for stage in ("grad_rs.inner", "grad_rs.outer"):
+        b, q = base["by_stage"][stage], qgz["by_stage"][stage]
+        # bf16 adjoint (2 B) -> int8+scales wire (~1.03 B)
+        assert q["wire_bytes"] == pytest.approx(
+            b["wire_bytes"] * INT8_WIRE_BYTES / 2.0)
+        assert q["count"] == 2 * b["count"]     # q + scales per stage
+        assert q["events"] == b["events"]
+    for stage in ("param_gather.inner", "param_gather.outer", "hop2"):
+        assert qgz["by_stage"][stage]["wire_bytes"] == pytest.approx(
+            base["by_stage"][stage]["wire_bytes"])
+    # int8 hop-2: the decomposed quantized all-reduce, 4 legs per payload
+    q2 = predict_traffic(model, topo, gp,
+                         SyncPolicy(hop2_wire_dtype="int8"), micro_steps=2)
+    assert q2["by_stage"]["hop2"]["wire_bytes"] == pytest.approx(
+        base["by_stage"]["hop2"]["wire_bytes"] * INT8_WIRE_BYTES / 4.0)
+    assert q2["by_stage"]["hop2"]["count"] == \
+        4 * base["by_stage"]["hop2"]["count"]
+
+
+def test_int8_hop1_ranked_above_fp32_baseline():
+    """ISSUE acceptance: on efa-100g an int8-hop-1 candidate outranks the
+    pure-fp32 baseline — the gradient wire is byte-dominated there."""
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import rank_policies
+
+    plan = rank_policies(StubModel(), topo_single(p=16, repl=2), "efa-100g",
+                         micro_steps=2, prefetch=False)
+    cands = plan.candidates
+    best_int8_hop1 = min(i for i, c in enumerate(cands)
+                         if c.sync.hop1_wire_dtype == "int8")
+    pure_fp32 = min(i for i, c in enumerate(cands)
+                    if c.gather.wire_dtype == "fp32"
+                    and c.sync.hop1_wire_dtype == "fp32"
+                    and c.sync.hop2_wire_dtype == "fp32")
+    assert best_int8_hop1 < pure_fp32
+    # and qgZ flips the weight-gather ranking: with the int8 hop-1 the
+    # int8 *gather* no longer pays the fp32 straight-through adjoint
+    with_qgz_int8g = min(i for i, c in enumerate(cands)
+                         if c.gather.wire_dtype == "int8"
+                         and c.sync.hop1_wire_dtype == "int8")
+    with_qgz_bf16g = min(i for i, c in enumerate(cands)
+                         if c.gather.wire_dtype == "bf16"
+                         and c.sync.hop1_wire_dtype == "int8")
+    assert with_qgz_int8g < with_qgz_bf16g
+    no_qgz_int8g = min(i for i, c in enumerate(cands)
+                       if c.gather.wire_dtype == "int8"
+                       and c.sync.hop1_wire_dtype == "fp32")
+    no_qgz_bf16g = min(i for i, c in enumerate(cands)
+                       if c.gather.wire_dtype == "bf16"
+                       and c.sync.hop1_wire_dtype == "fp32")
+    assert no_qgz_bf16g < no_qgz_int8g      # the PR 2 observation, intact
+
+
+def test_int8_hop1_permission_gating():
+    """The tuner ranks qgZ rows always but selects them only under the
+    explicit hop1_wire_dtype='int8' opt-in — quant_gather (the int8
+    *weight* wire, whose adjoint stays exact) must NOT permit the lossy
+    gradient wire on its own."""
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import rank_policies, resolve_config
+
+    topo = topo_single(p=16, repl=2)
+    plan = rank_policies(StubModel(), topo, "efa-100g", micro_steps=2,
+                         prefetch=False)
+    assert any(c.lossy_hop1 for c in plan.candidates)
+    assert plan.chosen.sync.hop1_wire_dtype == "fp32"
+    opted = rank_policies(StubModel(), topo, "efa-100g", micro_steps=2,
+                          prefetch=False, allow_int8_hop1=True)
+    assert opted.chosen.sync.hop1_wire_dtype == "int8"
+
+    mcfg = MiCSConfig(policy="auto", link_profile="efa-100g", micro_steps=2,
+                      hop1_wire_dtype="int8", prefetch=False)
+    resolved, plan = resolve_config(mcfg, StubModel(), topo)
+    assert resolved.hop1_wire_dtype == plan.chosen.sync.hop1_wire_dtype \
+        == "int8"
+    # a pre-qgZ auto config (quant_gather only) keeps exact gradients
+    legacy = MiCSConfig(policy="auto", link_profile="efa-100g",
+                        micro_steps=2, quant_gather=True, prefetch=False)
+    resolved_l, _ = resolve_config(legacy, StubModel(), topo)
+    assert resolved_l.hop1_wire_dtype == "fp32"
+
+
+def test_int8_hop2_ranked_and_gated():
+    """compress_hop2='int8' under policy='auto' is honored: the grid ranks
+    the int8 hop-2 wire and the opt-in selects it (it is the cheapest
+    hop-2 candidate) instead of silently rewriting to bf16/fp32."""
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import rank_policies, resolve_config
+
+    topo = topo_single(p=16, repl=2)
+    plan = rank_policies(StubModel(), topo, "efa-100g", micro_steps=2,
+                         prefetch=False)
+    assert any(c.sync.hop2_wire_dtype == "int8" for c in plan.candidates)
+    assert plan.chosen.sync.hop2_wire_dtype == "fp32"
+    # bf16 opt-in does not unlock int8 hop-2
+    bf16 = rank_policies(StubModel(), topo, "efa-100g", micro_steps=2,
+                         prefetch=False, allow_bf16_hop2=True)
+    assert bf16.chosen.sync.hop2_wire_dtype == "bf16"
+    mcfg = MiCSConfig(policy="auto", link_profile="efa-100g", micro_steps=2,
+                      compress_hop2="int8", prefetch=False)
+    resolved, plan = resolve_config(mcfg, StubModel(), topo)
+    assert plan.chosen.sync.hop2_wire_dtype == "int8"
+    assert resolved.compress_hop2 == "int8"
+
+
+def test_resolve_roundtrips_hop1_through_from_config(topo1):
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import resolve_config
+
+    mcfg = MiCSConfig(micro_steps=2, policy="auto", link_profile="efa-100g",
+                      quant_gather=True, compress_hop2=True, prefetch=False)
+    resolved, plan = resolve_config(mcfg, StubModel(),
+                                    topo_single(p=16, repl=2))
+    eng = CommEngine.from_config(topo1, resolved)
+    assert eng.sync_policy == plan.chosen.sync
+    assert eng.gather_policy.wire_dtype == plan.chosen.gather.wire_dtype
+
+
+def test_qgz_compute_priced():
+    """int8 hop-1 stage times include the quant/dequant HBM term, so the
+    qgZ row is not modeled as free compression."""
+    from test_autotune import StubModel, topo_single
+
+    from repro.core.autotune import cost_candidate
+    from repro.core.linkmodel import get_profile
+
+    model, topo = StubModel(), topo_single(p=16, repl=2)
+    prof = get_profile("efa-100g")
+    gp = GatherPolicy("inner_first", "bf16", 4, False)
+    qgz = cost_candidate(model, topo, prof, gp,
+                         SyncPolicy(hop1_wire_dtype="int8"), micro_steps=2)
+    assert qgz.lossy_hop1 and not qgz.lossy_wire
+    # stage time exceeds the pure wire+alpha time by the HBM term
+    for stage in ("grad_rs.inner", "grad_rs.outer"):
+        e = qgz.bytes_by_stage[stage]
+        link = prof.link(e["tier"])
+        wire_only = e["events"] * (e["group_size"] - 1) * link.alpha \
+            + e["wire_bytes"] / link.bandwidth
+        assert qgz.t_by_stage[stage] > wire_only
+
+
+# ---------------------------------------------------------------------------
+# multi-device harness
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def harness_results():
+    return run_harness(HARNESS)
+
+
+CHECKS = [
+    "quant_rs_routing", "quant_rs_accuracy", "hop1_bf16_bitwise",
+    "int8_hop1_convergence", "int8_hop2_boundary",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_qgz_check(harness_results, name):
+    res = harness_results.get(name)
+    assert res is not None, f"harness did not run {name}"
+    assert res["ok"], f"{name}: {res.get('err')}\n{res.get('tb', '')}"
+
+
+def test_convergence_within_tolerance(harness_results):
+    detail = harness_results.get("int8_hop1_convergence_detail")
+    assert detail is not None
+    tol = detail["tolerance"]
+    assert detail["qgZ_rel_final"] < tol
+    assert detail["qwZ+qgZ_rel_final"] < tol
+
+
+def test_int8_hop2_bucket_granularity(harness_results):
+    detail = harness_results.get("int8_hop2_boundary_detail")
+    assert detail is not None
+    assert detail["census"]["hop2_ops"] == detail["n_buckets"]
+    assert detail["census"]["interleaved"]

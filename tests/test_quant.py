@@ -1,5 +1,7 @@
 """Int8 block-quantized serving-weight gathers (§Perf B3): roundtrip error
-bound and end-to-end decode consistency against fp32 weights."""
+bound and end-to-end decode consistency against fp32 weights — plus the
+qgZ-supporting primitives: ragged tails (arbitrary bucket/chunk lengths)
+and stochastic-rounding unbiasedness."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +10,9 @@ import pytest
 
 from repro.configs import get_config, smoke_variant
 from repro.core.mics import MiCSConfig, init_state
-from repro.core.quant import BLOCK, dequantize_flat, quantize_flat, quantize_state
+from repro.core.quant import (
+    BLOCK, dequantize_flat, n_blocks, quantize_flat, quantize_state,
+)
 from repro.models.build import build_model
 from repro.runtime.serving import build_serve_steps
 
@@ -31,6 +35,91 @@ def test_quant_zeros_exact():
     x = jnp.zeros((2, BLOCK * 4), jnp.float32)
     q, s = quantize_flat(x)
     np.testing.assert_array_equal(np.asarray(dequantize_flat(q, s)), 0)
+
+
+# ---------------------------------------------------------------------------
+# ragged tails (qgZ bucket/chunk lengths need not divide BLOCK)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [1, 100, BLOCK - 1, BLOCK + 1,
+                                    3 * BLOCK + 17, 1000])
+def test_quant_ragged_roundtrip(length):
+    x = jnp.asarray(RNG.normal(size=(length,)) * 0.1, jnp.float32)
+    q, s = quantize_flat(x)
+    assert q.shape == (length,)
+    assert s.shape == (n_blocks(length),) == (-(-length // BLOCK),)
+    back = np.asarray(dequantize_flat(q, s, dtype=jnp.float32))
+    # per-block bound, short final block included (its own absmax)
+    for b in range(n_blocks(length)):
+        lo, hi = b * BLOCK, min((b + 1) * BLOCK, length)
+        blk = np.asarray(x)[lo:hi]
+        bound = np.abs(blk).max() / 254 + 1e-8
+        assert np.all(np.abs(back[lo:hi] - blk) <= bound * 1.01), (b, lo, hi)
+
+
+def test_quant_ragged_matches_aligned_prefix():
+    """The short final block must not perturb earlier (aligned) blocks."""
+    x = jnp.asarray(RNG.normal(size=(2 * BLOCK,)) * 0.05, jnp.float32)
+    q_full, s_full = quantize_flat(x)
+    q_rag, s_rag = quantize_flat(x[: BLOCK + 7])
+    np.testing.assert_array_equal(np.asarray(q_full[:BLOCK]),
+                                  np.asarray(q_rag[:BLOCK]))
+    np.testing.assert_array_equal(np.asarray(s_full[:1]),
+                                  np.asarray(s_rag[:1]))
+
+
+def test_quant_ragged_leading_dims():
+    x = jnp.asarray(RNG.normal(size=(3, 2, 200)) * 0.05, jnp.float32)
+    q, s = quantize_flat(x)
+    assert q.shape == (3, 2, 200) and s.shape == (3, 2, 2)
+    back = dequantize_flat(q, s, dtype=jnp.float32)
+    assert np.abs(np.asarray(back) - np.asarray(x)).max() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding (the qgZ gradient-wire mode)
+# ---------------------------------------------------------------------------
+
+def test_stochastic_rounding_unbiased():
+    """Mean over keys of dequant(quant(x, key)) converges to x — well below
+    one deterministic-rounding step of systematic error."""
+    x = jnp.asarray(RNG.normal(size=(256,)) * 0.02, jnp.float32)
+    keys = jax.random.split(jax.random.key(3), 4000)
+
+    def trial(k):
+        q, s = quantize_flat(x, key=k)
+        return dequantize_flat(q, s, dtype=jnp.float32)
+
+    mean = np.asarray(jnp.mean(jax.vmap(trial)(keys), axis=0))
+    _, s0 = quantize_flat(x)
+    step = float(np.asarray(s0).max())          # one quantization step
+    bias = np.abs(mean - np.asarray(x)).max()
+    # nearest rounding has bias up to step/2; the stochastic mean must sit
+    # an order of magnitude closer to the true value
+    assert bias < 0.05 * step, (bias, step)
+
+
+def test_stochastic_rounding_error_bound():
+    """A single stochastic draw errs by at most one full step per element
+    (vs half a step for nearest) and stays inside the int8 range."""
+    x = jnp.asarray(RNG.normal(size=(4 * BLOCK,)) * 0.1, jnp.float32)
+    q, s = quantize_flat(x, key=jax.random.key(11))
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    back = np.asarray(dequantize_flat(q, s, dtype=jnp.float32))
+    step = np.repeat(np.asarray(s), BLOCK)
+    assert np.all(np.abs(back - np.asarray(x)) <= step * 1.01)
+
+
+def test_stochastic_rounding_exact_on_grid():
+    """Values already on the quantization grid are reproduced exactly for
+    every key (floor(v + u) == v for integer v, u < 1)."""
+    ints = jnp.asarray(RNG.integers(-127, 128, size=(BLOCK,)), jnp.float32)
+    ints = ints.at[0].set(127.0)                # pin absmax -> scale == 1
+    for seed in (0, 1, 2):
+        q, s = quantize_flat(ints, key=jax.random.key(seed))
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_flat(q, s, dtype=jnp.float32)),
+            np.asarray(ints))
 
 
 def test_quantized_decode_matches_fp32(topo1):
