@@ -16,7 +16,6 @@ Everything else follows from ring-collective algebra:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core.linkmodel import EFA_100G, EFA_400G, LinkProfile, get_profile
 

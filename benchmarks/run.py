@@ -18,8 +18,6 @@ import json
 import pathlib
 import time
 
-import numpy as np
-
 from benchmarks import paper_model as pm
 
 ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
@@ -441,7 +439,7 @@ def bench_table1_model_zoo():
 def bench_roofline_table():
     import sys
     sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
-    from repro.roofline.analysis import build_table, markdown_table
+    from repro.roofline.analysis import build_table
 
     rows = build_table()
     RESULTS["roofline"] = rows
@@ -463,7 +461,6 @@ def bench_kernel_walltime():
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.flash_attention import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
 
     q = jnp.ones((4, 256, 64), jnp.float32)

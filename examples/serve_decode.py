@@ -11,7 +11,6 @@ the binding knob here: ``--prefetch 0`` falls back to the serial schedule,
 (docs/autotuning.md).
 """
 
-import argparse
 
 from repro.launch.serve import main as serve_main
 

@@ -19,7 +19,14 @@ module closes the loop: given a model, a MiCS topology and a link profile it
    axis), returning a ranked :class:`Plan`, and
 3. **resolves** ``MiCSConfig(policy="auto")`` into the concrete winning
    config (:func:`resolve_config`), which is what ``build_train_step``,
-   ``build_serve_steps`` and ``launch/dryrun.py`` call.
+   ``build_serve_steps`` and ``launch/dryrun.py`` call, and
+4. **gates on memory** (``hbm_budget_gb``): every candidate is priced per
+   device by the analytical HBM footprint model (core/memplan.py, the
+   same predicted-vs-compiled discipline as the wire-byte census),
+   infeasible candidates are filtered from selection, the
+   ``prefetch_carry='remat'`` mitigation joins the grid, and
+   :func:`resolve_scale` implements the paper's §3.1 rule — the minimal
+   partition-group size whose aggregate memory holds the model states.
 
 The per-stage byte identity worth knowing: a staged gather moves exactly the
 same per-participant total as the flat gather —
@@ -48,8 +55,11 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.linkmodel import LinkProfile, get_profile
-from repro.core.comm import GatherPolicy, SyncPolicy, WIRE_DTYPES
+from repro.core import memplan as M
+from repro.core.comm import (
+    WIRE_DTYPES, GatherPolicy, SyncPolicy, policies_from_config,
+)
+from repro.core.linkmodel import GIB, LinkProfile, get_profile
 from repro.core.quant import BLOCK
 from repro.core.schedule import plan_boundary
 from repro.core.topology import MiCSTopology, default_hierarchy_inner
@@ -193,7 +203,7 @@ def gather_stages(topology: str, topo: MiCSTopology,
 # ---------------------------------------------------------------------------
 
 def _event_counts(stack: int, s: int, *, scanned: bool, prefetch: bool,
-                  mode: str) -> dict[str, float]:
+                  mode: str, carry: str = "stored") -> dict[str, float]:
     """How many gather / reduce-scatter events one pool contributes per step.
 
     Derived from the schedules in models/lm.py + core/mics.py and verified
@@ -207,19 +217,29 @@ def _event_counts(stack: int, s: int, *, scanned: bool, prefetch: bool,
       of one wrap-around lookahead per micro-step, and its loop-invariant
       prologue gather (layer 0) is hoisted out of the micro loop by XLA
       (``s·stack + 1`` gathers total, DESIGN.md §4).
+    * ``carry='remat'`` keeps the prefetch forward but re-issues every
+      layer's gather in the backward (``2·s·stack + 1`` total) — the
+      memory-planner knob trading one all-gather per layer for the
+      O(layers x flat_len) carry residual; its adjoints come only from the
+      backward re-gathers (``s·stack``), the forward lookahead gathers are
+      outside the differentiated region (models/lm.py custom VJP).
     * embed/head pools are gathered outside the layer scans; the gather is
       loop-invariant across micro-steps, so XLA hoists it out of the micro
       loop entirely: ONE gather per step, however many micro-steps.
     * every gather whose cotangent is needed contributes one adjoint
-      reduce-scatter per micro-step — per layer plus, under prefetch, the
-      prologue gather's adjoint (``s·(stack+1)``).
+      reduce-scatter per micro-step — per layer plus, under the stored
+      prefetch carry, the prologue gather's adjoint (``s·(stack+1)``).
     """
     if mode == "serve":
         ag = stack + 1 if (prefetch and scanned and stack > 1) else stack
         return {"ag": float(ag), "rs": 0.0}
     if scanned and prefetch and stack > 1:
-        ag = s * stack + 1
-        rs = s * (stack + 1)
+        if carry == "remat":
+            ag = 2 * s * stack + 1    # prefetch fwd + backward re-gather
+            rs = s * stack
+        else:
+            ag = s * stack + 1
+            rs = s * (stack + 1)
     elif scanned:
         ag = 2 * s * stack        # forward + checkpoint re-gather
         rs = s * stack
@@ -307,7 +327,8 @@ def predict_traffic(
     for pool in model.all_pools():
         stack, _tp, flat_len = model.global_flat_shapes()[pool.name]
         n = _event_counts(stack, s, scanned=pool.name in scanned,
-                          prefetch=gather.prefetch, mode=mode)
+                          prefetch=gather.prefetch, mode=mode,
+                          carry=gather.prefetch_carry)
         m_gather = flat_len * wire_b
         m_grad = flat_len * grad_b
         for st in stages:
@@ -452,6 +473,7 @@ class Candidate:
     n_hop2_buckets: int = 0
     t_hop2_total_s: float = 0.0          # full hop-2 ring time
     t_hop2_exposed_s: float = 0.0        # what actually serializes the step
+    mem_bytes: float = 0.0               # memplan per-device footprint
 
     def describe(self) -> dict:
         return {
@@ -469,6 +491,8 @@ class Candidate:
             "t_hop2_total_s": self.t_hop2_total_s,
             "t_hop2_exposed_s": self.t_hop2_exposed_s,
             "t_hop2_hidden_s": self.t_hop2_total_s - self.t_hop2_exposed_s,
+            "mem_bytes": self.mem_bytes,
+            "mem_gib": self.mem_bytes / GIB,
         }
 
 
@@ -481,12 +505,14 @@ class Plan:
     micro_steps: int
     candidates: tuple[Candidate, ...]    # best first
     chosen: Candidate
+    hbm_budget_gb: float | None = None   # GiB gate the ranking was filtered on
 
     def describe(self) -> dict:
         return {
             "profile": self.profile.name,
             "mode": self.mode,
             "micro_steps": self.micro_steps,
+            "hbm_budget_gb": self.hbm_budget_gb,
             "chosen": self.chosen.describe(),
             "ranking": [c.describe() for c in self.candidates],
         }
@@ -494,24 +520,31 @@ class Plan:
     def table(self, top: int | None = 8) -> str:
         """Human-readable ranked table (what ``dryrun --policy auto``
         prints)."""
-        rows = [f"autotune[{self.profile.name}] mode={self.mode} "
+        budget = "" if self.hbm_budget_gb is None \
+            else f" hbm_budget={self.hbm_budget_gb:g}GiB"
+        rows = [f"autotune[{self.profile.name}] mode={self.mode}{budget} "
                 f"(chosen marked *):",
                 f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
                 f"{'hop1':>5} {'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
-                f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9}"]
+                f"{'carry':>6} "
+                f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9} "
+                f"{'mem_GB':>7}"]
         cands = self.candidates[:top] if top else self.candidates
         for i, c in enumerate(cands):
             mark = "*" if c is self.chosen else " "
             sched = "bucket" if c.boundary == "bucketed" else "serial"
             bkt = f"{c.hop2_bucket_mb:g}" if c.boundary == "bucketed" else "-"
+            mem = f"{c.mem_bytes / GIB:.2f}" if c.mem_bytes else "-"
             rows.append(
                 f" {mark}{i:>4} {c.gather.topology:<12} "
                 f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
                 f"{c.sync.hop1_wire_dtype:>5} "
                 f"{c.sync.hop2_wire_dtype:>5} {sched:>6} {bkt:>6} "
+                f"{c.gather.prefetch_carry:>6} "
                 f"{c.t_comm_s * 1e3:>10.3f} "
                 f"{c.t_hop2_exposed_s * 1e3:>9.3f} "
-                f"{c.inter_wire_bytes / 1e6:>9.2f}")
+                f"{c.inter_wire_bytes / 1e6:>9.2f} "
+                f"{mem:>7}")
         if self.chosen not in cands:
             rows.append(f"  ... chosen: {self.chosen.describe()['gather']}")
         return "\n".join(rows)
@@ -645,6 +678,9 @@ def rank_policies(
     allow_bf16_hop2: bool = False,
     allow_int8_hop1: bool = False,
     allow_int8_hop2: bool = False,
+    hbm_budget_gb: float | None = None,
+    local_batch: int = 0,
+    seq: int = 0,
 ) -> Plan:
     """Cost every candidate and rank by modeled collective time.
 
@@ -654,19 +690,43 @@ def rank_policies(
     permits the milder bf16), ``allow_int8_hop1`` — the qgZ hop-1 wire);
     the full ranking (including lossy rows) is kept for the dry-run table
     and BENCH artifacts.
+
+    ``hbm_budget_gb`` adds the memory planner's gate (core/memplan.py):
+    every candidate is priced per device, the ``prefetch_carry='remat'``
+    mitigation joins the grid, infeasible candidates are excluded from
+    selection (they stay in the ranking, marked by their ``mem_bytes``),
+    and :class:`repro.core.memplan.MemoryBudgetError` is raised — never a
+    silently empty plan — when nothing numerics-eligible fits.
+    ``local_batch``/``seq`` size the activation terms (0 = model states +
+    comm buffers only).
     """
     profile = get_profile(profile)
-    cands = [
-        cost_candidate(model, topo, profile, g, s,
-                       micro_steps=micro_steps, mode=mode,
-                       boundary=boundary, hop2_bucket_mb=bucket_mb)
-        for g, s in enumerate_candidates(topo, prefetch=prefetch, mode=mode)
-        for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode)
-    ]
+    carries = ("stored",) if hbm_budget_gb is None else ("stored", "remat")
+    cands = []
+    for g, s in enumerate_candidates(topo, prefetch=prefetch, mode=mode):
+        for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode):
+            for carry in carries:
+                if carry != "stored" and not (g.prefetch and mode == "train"):
+                    continue   # remat only differs where a backward exists
+                g2 = dataclasses.replace(g, prefetch_carry=carry)
+                c = cost_candidate(model, topo, profile, g2, s,
+                                   micro_steps=micro_steps, mode=mode,
+                                   boundary=boundary,
+                                   hop2_bucket_mb=bucket_mb)
+                mem = M.predict_footprint(
+                    model, topo, g2, s, micro_steps=micro_steps, mode=mode,
+                    local_batch=local_batch, seq=seq, boundary=boundary,
+                    hop2_bucket_mb=bucket_mb)
+                cands.append(dataclasses.replace(
+                    c, mem_bytes=mem.total_bytes))
+    # modeled time first; among time-ties the smaller footprint wins (which
+    # is what makes remat the tie-break choice at p=1, where the extra
+    # backward re-gather moves zero wire bytes).
     cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
                               c.gather.wire_dtype, c.sync.hop1_wire_dtype,
                               c.sync.hop2_wire_dtype,
-                              c.boundary, c.hop2_bucket_mb))
+                              c.boundary, c.hop2_bucket_mb,
+                              c.mem_bytes, c.gather.prefetch_carry))
 
     def hop2_ok(c: Candidate) -> bool:
         wire = c.sync.hop2_wire_dtype
@@ -675,13 +735,28 @@ def rank_policies(
         if wire == "int8":
             return allow_int8_hop2
         return True
+
+    def fits(c: Candidate) -> bool:
+        return hbm_budget_gb is None \
+            or c.mem_bytes <= hbm_budget_gb * GIB
     eligible = [c for c in cands
                 if (allow_int8 or not c.lossy_wire)
                 and hop2_ok(c)
                 and (allow_int8_hop1 or not c.lossy_hop1)]
-    chosen = eligible[0] if eligible else cands[0]
+    feasible = [c for c in eligible if fits(c)]
+    if hbm_budget_gb is not None and eligible and not feasible:
+        smallest = min(eligible, key=lambda c: c.mem_bytes)
+        raise M.MemoryBudgetError(
+            f"no eligible policy fits hbm_budget_gb={hbm_budget_gb} on "
+            f"p={topo.partition_size}: the smallest candidate "
+            f"({smallest.gather.topology}/{smallest.gather.wire_dtype}, "
+            f"prefetch_carry={smallest.gather.prefetch_carry!r}) needs "
+            f"{smallest.mem_bytes / 1024**3:.3f} GiB per device; grow the "
+            f"partition group (memplan.min_partition_size) or the budget")
+    chosen = (feasible or eligible or cands)[0]
     return Plan(profile=profile, mode=mode, micro_steps=micro_steps,
-                candidates=tuple(cands), chosen=chosen)
+                candidates=tuple(cands), chosen=chosen,
+                hbm_budget_gb=hbm_budget_gb)
 
 
 # ---------------------------------------------------------------------------
@@ -689,13 +764,22 @@ def rank_policies(
 # ---------------------------------------------------------------------------
 
 def resolve_config(mcfg, model, topo: MiCSTopology, *,
-                   mode: str = "train"):
+                   mode: str = "train", local_batch: int = 0, seq: int = 0):
     """Resolve ``MiCSConfig(policy="auto")`` into concrete policy fields.
 
     Returns ``(resolved_config, plan)``; manual configs pass through with
     ``plan=None``.  The winning GatherPolicy/SyncPolicy is mapped back onto
     the legacy config fields so ``CommEngine.from_config`` (the one place
     those fields are interpreted) reconstructs exactly the chosen policies.
+
+    With ``mcfg.hbm_budget_gb`` set, the memory planner gates the ranking
+    (core/memplan.py): infeasible candidates are filtered out, the
+    ``prefetch_carry='remat'`` mitigation joins the grid (chosen only when
+    the stored carry does not fit — it costs one extra all-gather per
+    layer), and a clear :class:`repro.core.memplan.MemoryBudgetError` is
+    raised when nothing fits on this topology's partition group.  Use
+    :func:`resolve_scale` to pick the partition-group *size* itself — the
+    paper's §3.1 minimal-group rule.
     """
     if getattr(mcfg, "policy", "manual") != "auto":
         return mcfg, None
@@ -709,6 +793,8 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         allow_bf16_hop2=mcfg.compress_hop2 in (True, "bf16", "int8"),
         allow_int8_hop2=mcfg.compress_hop2 == "int8",
         allow_int8_hop1=mcfg.hop1_wire_dtype == "int8",
+        hbm_budget_gb=getattr(mcfg, "hbm_budget_gb", None),
+        local_batch=local_batch, seq=seq,
     )
     g, s = plan.chosen.gather, plan.chosen.sync
     if g.wire_dtype == "fp32":
@@ -727,7 +813,41 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         compress_hop2=(s.hop2_wire_dtype
                        if s.hop2_wire_dtype != "fp32" else False),
         hop1_wire_dtype=s.hop1_wire_dtype,
+        prefetch_carry=g.prefetch_carry,
         boundary_schedule=plan.chosen.boundary,
         hop2_bucket_mb=plan.chosen.hop2_bucket_mb,
     )
     return resolved, plan
+
+
+def resolve_scale(model, mcfg, *, data_extent: int, mode: str = "train",
+                  local_batch: int = 0, seq: int = 0,
+                  extra_replication: int = 1):
+    """The paper's §3.1 scale-aware partitioning rule for ``MiCSConfig``.
+
+    Returns ``(partition_size, prefetch_carry, mem_plan)`` — the *minimal*
+    partition-group size over a data axis of ``data_extent`` whose
+    predicted per-device footprint fits ``mcfg.hbm_budget_gb`` GiB, trying
+    the stored carry first and the remat mitigation second at every size
+    (a smaller group rescued by remat beats a larger stored one: smaller
+    groups keep collectives on faster tiers, which is the whole point of
+    scale-aware partitioning).  Raises
+    :class:`repro.core.memplan.MemoryBudgetError` when even the full data
+    axis (ZeRO-3 scale) does not fit.  ``extra_replication`` covers the
+    data-parallel axes the group cannot span (pods, the dp2 leftover of a
+    narrow tp) so hop-2 staging is priced even at p == data_extent.
+    ``launch/dryrun.py --hbm-budget-gb`` applies this before building the
+    topology.
+    """
+    if getattr(mcfg, "hbm_budget_gb", None) is None:
+        raise ValueError("resolve_scale needs MiCSConfig.hbm_budget_gb")
+    gp, sp = policies_from_config(mcfg)
+    carries = ("stored", "remat") if gp.prefetch and mode == "train" \
+        else ("stored",)
+    return M.min_partition_size(
+        model, data_extent=data_extent, hbm_budget_gb=mcfg.hbm_budget_gb,
+        gather=gp, sync=sp, micro_steps=mcfg.micro_steps, mode=mode,
+        local_batch=local_batch, seq=seq,
+        boundary=mcfg.boundary_schedule,
+        hop2_bucket_mb=mcfg.hop2_bucket_mb, carries=carries,
+        extra_replication=extra_replication)

@@ -283,10 +283,14 @@ def _hier_rs_multi_axis(
 # int8 summations (ZeRO++'s qgZ, adapted from its single all-to-all to this
 # repo's staged hierarchy).  Rounding is stochastic by default (unbiased in
 # expectation, core/quant.py); the dither key is a deterministic function of
-# (salt, stage, device, payload fingerprint), so runs are reproducible while
-# distinct payloads — different layers, micro-steps, training steps — draw
-# distinct dither (a fixed key would re-inject the *same* rounding error
-# into every call, accumulating coherently on slowly-varying gradients).
+# (salt, stage, device, step) — the training step counter threaded from the
+# step function (``seed=``), so runs are reproducible while distinct
+# training steps draw distinct dither (a fixed key would re-inject the
+# *same* rounding error into every call, accumulating coherently on
+# slowly-varying gradients).  Callers with no step counter in scope
+# (standalone collectives, serving) fall back to a payload fingerprint (bit
+# pattern of the buffer sum) as the step component — value-dependent but
+# equally decorrelating.
 
 _QGZ_SEED = 0x9f2c
 
@@ -301,8 +305,20 @@ def _dither_key(salt: int, stage: int, coord, fingerprint) -> jax.Array:
 def _payload_fingerprint(g: jax.Array):
     """int32 fingerprint of a payload (bit pattern of its sum) — folds the
     data into the dither key so repeated calls on different gradients never
-    share rounding noise, without threading a step counter through the VJP."""
+    share rounding noise.  The fallback step component: the train step
+    threads its real step counter instead (``seed=`` below), which makes
+    the dither value-independent as well."""
     return lax.bitcast_convert_type(jnp.sum(g), jnp.int32)
+
+
+def _step_component(g: jax.Array, seed, stochastic: bool):
+    """The dither key's step component: the threaded step counter when the
+    caller has one, else the payload fingerprint (legacy fallback)."""
+    if not stochastic:
+        return None
+    if seed is not None:
+        return seed
+    return _payload_fingerprint(g)
 
 
 def _device_coord(topo: MiCSTopology):
@@ -390,6 +406,7 @@ def quantized_reduce_scatter(
     inner: int | None = None,
     salt: int = 0,
     stochastic: bool = True,
+    seed=None,
 ) -> jax.Array:
     """Block-quantized hop-1 reduce-scatter over the partition group (qgZ).
 
@@ -398,7 +415,9 @@ def quantized_reduce_scatter(
     block scales) on every hop; the result is always fp32.  Per-stage error
     is bounded by one quantization step of that stage's fp32 partial sums
     (additive across hops, never compounding), and with ``stochastic=True``
-    each stage is unbiased in expectation.
+    each stage is unbiased in expectation.  ``seed`` (a traced int32, the
+    training step) replaces the payload-fingerprint component of the dither
+    key — value-independent, step-varying rounding noise.
     """
     g = g.astype(jnp.float32)
     if topo.partition_size == 1:
@@ -410,7 +429,7 @@ def quantized_reduce_scatter(
     if reorder is not None:
         g = _reorder_chunks(g, 0, reorder[0], reorder[1])
     coord = _device_coord(topo)
-    fp = _payload_fingerprint(g) if stochastic else None
+    fp = _step_component(g, seed, stochastic)
     for i, (axis_names, group_size, groups) in enumerate(stages):
         key = _dither_key(salt, i, coord, fp) if stochastic else None
         g = _quant_exchange_stage(
@@ -425,6 +444,7 @@ def quantized_all_reduce(
     *,
     salt: int = 0,
     stochastic: bool = True,
+    seed=None,
 ) -> jax.Array:
     """Block-quantized replication-group all-reduce (the int8 hop-2 leg).
 
@@ -451,7 +471,7 @@ def quantized_all_reduce(
     pad = r * m - n
     x = jnp.pad(g, (0, pad)) if pad else g
     coord = _device_coord(topo)
-    fp = _payload_fingerprint(g) if stochastic else None
+    fp = _step_component(g, seed, stochastic)
     # reduce-scatter leg
     q, s = Q.quantize_flat(
         x.reshape(r, m),

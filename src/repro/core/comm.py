@@ -37,6 +37,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import collectives as C
 from repro.core import quant as Q
@@ -45,6 +46,7 @@ from repro.core.topology import MODEL_AXIS, MiCSTopology, hierarchy_factors
 
 GATHER_TOPOLOGIES = ("flat", "inner_first", "outer_first")
 WIRE_DTYPES = ("fp32", "bf16", "int8")
+PREFETCH_CARRIES = ("stored", "remat")
 SYNC_MODES = ("2hop", "allreduce_slice")
 HOP1_WIRE_DTYPES = ("fp32", "bf16", "int8")
 HOP2_WIRE_DTYPES = ("fp32", "bf16", "int8")
@@ -55,18 +57,33 @@ _WIRE_JNP = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
 
 @dataclasses.dataclass(frozen=True)
 class GatherPolicy:
-    """How a flat-param pool is all-gathered across its partition group."""
+    """How a flat-param pool is all-gathered across its partition group.
+
+    ``prefetch_carry`` decides what the double-buffered schedule keeps for
+    the backward pass (only meaningful with ``prefetch=True``):
+    ``'stored'`` carries the gathered flat buffer as a per-layer scan
+    residual (no backward re-gather — the seed behavior, O(layers x
+    flat_len) HBM); ``'remat'`` drops the carried buffer and re-issues the
+    gather inside the backward instead (one extra all-gather per layer,
+    O(layers x shard) HBM — the memory-planner mitigation knob,
+    models/lm.py).
+    """
 
     topology: str = "inner_first"  # 'flat' | 'inner_first' | 'outer_first'
     wire_dtype: str = "bf16"       # 'fp32' | 'bf16' | 'int8' (ZeRO++ qwZ)
     inner: int | None = None       # intra-"node" factor for staged gathers
     prefetch: bool = True          # one-slot lookahead layer scan
+    prefetch_carry: str = "stored"  # 'stored' | 'remat' backward residual
 
     def __post_init__(self):
         if self.topology not in GATHER_TOPOLOGIES:
             raise ValueError(f"unknown gather topology {self.topology!r}")
         if self.wire_dtype not in WIRE_DTYPES:
             raise ValueError(f"unknown wire dtype {self.wire_dtype!r}")
+        if self.prefetch_carry not in PREFETCH_CARRIES:
+            raise ValueError(
+                f"unknown prefetch_carry {self.prefetch_carry!r} "
+                f"(expected one of {PREFETCH_CARRIES})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +127,38 @@ class SyncPolicy:
         return self.grad_rounding == "stochastic"
 
 
+def policies_from_config(mcfg) -> tuple[GatherPolicy, SyncPolicy]:
+    """Interpret a ``MiCSConfig``'s legacy flags as (GatherPolicy,
+    SyncPolicy) — topology-free, so the memory planner and partition-group
+    auto-sizing can price policies before any mesh exists.  The one place
+    those flags are interpreted (``CommEngine.from_config`` calls this)."""
+    topology = mcfg.gather_order if mcfg.hierarchical else "flat"
+    compute = jnp.dtype(mcfg.gather_dtype)
+    if mcfg.quant_gather:
+        wire = "int8"
+    else:
+        wire = "bf16" if compute == jnp.dtype(jnp.bfloat16) else "fp32"
+    gp = GatherPolicy(
+        topology=topology,
+        wire_dtype=wire,
+        inner=mcfg.hierarchy_inner,
+        prefetch=getattr(mcfg, "prefetch", True),
+        prefetch_carry=getattr(mcfg, "prefetch_carry", "stored"),
+    )
+    hop2 = mcfg.compress_hop2  # bool (legacy) or wire-dtype string
+    if hop2 is True:
+        hop2 = "bf16"
+    elif not hop2:
+        hop2 = "fp32"
+    sp = SyncPolicy(
+        mode=mcfg.sync_mode,
+        hop2_wire_dtype=hop2,
+        hop1_wire_dtype=getattr(mcfg, "hop1_wire_dtype", "fp32"),
+        grad_rounding=getattr(mcfg, "grad_rounding", "stochastic"),
+    )
+    return gp, sp
+
+
 class CommEngine:
     """Owns every parameter-gather and gradient-sync collective of one run.
 
@@ -134,41 +183,27 @@ class CommEngine:
         self._model_gather_fn = model_gather_fn_for(model_axis, topo.model_size)
         self._gather_vjp = self._build_gather_vjp(quantized=False)
         self._quant_gather_vjp = self._build_gather_vjp(quantized=True)
+        self._gather_vjp_seeded = self._build_gather_vjp(
+            quantized=False, seeded=True)
+        self._quant_gather_vjp_seeded = self._build_gather_vjp(
+            quantized=True, seeded=True)
 
     # -- construction -------------------------------------------------------
     @classmethod
     def from_config(cls, topo: MiCSTopology, mcfg) -> "CommEngine":
         """Map a ``MiCSConfig`` onto gather/sync policies (the one place the
         legacy flags are interpreted)."""
-        topology = mcfg.gather_order if mcfg.hierarchical else "flat"
-        compute = jnp.dtype(mcfg.gather_dtype)
-        if mcfg.quant_gather:
-            wire = "int8"
-        else:
-            wire = "bf16" if compute == jnp.dtype(jnp.bfloat16) else "fp32"
-        gp = GatherPolicy(
-            topology=topology,
-            wire_dtype=wire,
-            inner=mcfg.hierarchy_inner,
-            prefetch=getattr(mcfg, "prefetch", True),
-        )
-        hop2 = mcfg.compress_hop2  # bool (legacy) or wire-dtype string
-        if hop2 is True:
-            hop2 = "bf16"
-        elif not hop2:
-            hop2 = "fp32"
-        sp = SyncPolicy(
-            mode=mcfg.sync_mode,
-            hop2_wire_dtype=hop2,
-            hop1_wire_dtype=getattr(mcfg, "hop1_wire_dtype", "fp32"),
-            grad_rounding=getattr(mcfg, "grad_rounding", "stochastic"),
-        )
+        gp, sp = policies_from_config(mcfg)
         return cls(topo, gp, sp, compute_dtype=mcfg.gather_dtype)
 
     # -- properties ---------------------------------------------------------
     @property
     def prefetch(self) -> bool:
         return self.gather_policy.prefetch
+
+    @property
+    def prefetch_carry(self) -> str:
+        return self.gather_policy.prefetch_carry
 
     @property
     def partition_size(self) -> int:
@@ -209,7 +244,7 @@ class CommEngine:
             g, self.topo, order=gp.topology, inner=gp.inner)
 
     # -- centralized custom-VJP gathers -------------------------------------
-    def _adjoint(self, ct: jax.Array) -> jax.Array:
+    def _adjoint(self, ct: jax.Array, seed=None) -> jax.Array:
         """Hop-1 of §3.4 — or the Fig-14 alternative schedule's full
         all-reduce + slice when the ablation is selected.
 
@@ -219,7 +254,9 @@ class CommEngine:
         runs the qgZ per-stage block-quantized reduce-scatter (int8 + f32
         scales per hop, fp32 accumulation between hops) mirroring the
         gather topology.  The return dtype always matches the cotangent, so
-        every gather policy composes with every hop-1 wire.
+        every gather policy composes with every hop-1 wire.  ``seed`` is the
+        step-varying dither seed for the int8 wire's stochastic rounding
+        (threaded from the train step; the float wires ignore it).
         """
         if self.sync_policy.mode == "allreduce_slice":
             return C.alternative_sync(ct, self.topo)
@@ -228,14 +265,14 @@ class CommEngine:
             gp = self.gather_policy
             out = C.quantized_reduce_scatter(
                 ct, self.topo, topology=gp.topology, inner=gp.inner,
-                stochastic=self.sync_policy.stochastic)
+                stochastic=self.sync_policy.stochastic, seed=seed)
             return out.astype(ct.dtype)
         if hop1 == "bf16":
             return self._policy_reduce_scatter(
                 ct.astype(jnp.bfloat16)).astype(ct.dtype)
         return self._policy_reduce_scatter(ct)
 
-    def _build_gather_vjp(self, *, quantized: bool):
+    def _build_gather_vjp(self, *, quantized: bool, seeded: bool = False):
         """One parameterized builder for both wire families.
 
         ``quantized=False``: the float wire — gather the row as-is (callers
@@ -246,6 +283,14 @@ class CommEngine:
         :meth:`_adjoint` of the (float) cotangent — the exact staged
         reduce-scatter, or its bf16/int8-wire variant when ``SyncPolicy``
         compresses hop 1; the forward quantizer is never differentiated.
+
+        ``seeded=True`` builds the ``gather(row, seed)`` variant: ``seed``
+        is a traced int32 scalar (the training step counter) carried as a
+        VJP residual into the adjoint, where the int8 hop-1 wire folds it
+        into its stochastic-rounding dither key in place of the payload
+        fingerprint — the step-varying, value-independent dither the
+        ROADMAP qgZ follow-on asked for.  The seed is inert data (integer
+        cotangent is float0); float hop-1 wires ignore it entirely.
         """
 
         def fwd_gather(row):
@@ -255,6 +300,24 @@ class CommEngine:
             qg = self._policy_all_gather(q)
             sg = self._policy_all_gather(s)
             return Q.dequantize_flat(qg, sg, dtype=self.compute_dtype)
+
+        if seeded:
+
+            @jax.custom_vjp
+            def gather(row, seed):
+                return fwd_gather(row)
+
+            def fwd(row, seed):
+                return fwd_gather(row), seed
+
+            def bwd(seed, ct):
+                if quantized:
+                    ct = ct.astype(jnp.float32)
+                ct_seed = np.zeros(jnp.shape(seed), jax.dtypes.float0)
+                return self._adjoint(ct, seed=seed), ct_seed
+
+            gather.defvjp(fwd, bwd)
+            return gather
 
         @jax.custom_vjp
         def gather(row):
@@ -272,7 +335,7 @@ class CommEngine:
         return gather
 
     # -- public gather API --------------------------------------------------
-    def gather_flat(self, row) -> jax.Array:
+    def gather_flat(self, row, *, seed=None) -> jax.Array:
         """Gather one layer's flat shard into the full flat buffer.
 
         ``row`` is either a float shard ``[S_local]`` or a pre-quantized
@@ -281,6 +344,11 @@ class CommEngine:
         the compute dtype — ``from_config`` keeps them identical); int8
         and stored-int8 rows dequantize to ``compute_dtype``.  One call per
         layer — the coalesced communication of paper §4 by construction.
+
+        ``seed`` (optional traced int32, the training step counter) rides
+        the VJP into the adjoint so the int8 qgZ hop-1 wire draws
+        step-varying, value-independent dither; ``None`` keeps the legacy
+        payload-fingerprint dither (serving and standalone gathers).
         """
         gp = self.gather_policy
         if isinstance(row, dict):  # stored-int8 serving weights
@@ -290,15 +358,20 @@ class CommEngine:
         if gp.wire_dtype == "int8":
             if self.topo.partition_size == 1:  # nothing on the wire
                 return row.astype(self.compute_dtype)
+            if seed is not None:
+                return self._quant_gather_vjp_seeded(row, seed)
             return self._quant_gather_vjp(row)
-        return self._gather_vjp(row.astype(_WIRE_JNP[gp.wire_dtype]))
+        row = row.astype(_WIRE_JNP[gp.wire_dtype])
+        if seed is not None:
+            return self._gather_vjp_seeded(row, seed)
+        return self._gather_vjp(row)
 
     def unflatten(self, pool, full: jax.Array) -> dict[str, jax.Array]:
         """Rebuild layer tensors, reassembling model-axis-sharded segments."""
         return pool.layout.unflatten(full, model_gather_fn=self._model_gather_fn)
 
-    def gather(self, pool, row) -> dict[str, jax.Array]:
-        return self.unflatten(pool, self.gather_flat(row))
+    def gather(self, pool, row, *, seed=None) -> dict[str, jax.Array]:
+        return self.unflatten(pool, self.gather_flat(row, seed=seed))
 
     # -- gradient synchronization ------------------------------------------
     def hop1_reduce_scatter(self, g: jax.Array) -> jax.Array:
@@ -306,7 +379,7 @@ class CommEngine:
         arises as the VJP of :meth:`gather_flat`."""
         return self._policy_reduce_scatter(g)
 
-    def hop2(self, g: jax.Array, *, salt: int = 0) -> jax.Array:
+    def hop2(self, g: jax.Array, *, salt: int = 0, seed=None) -> jax.Array:
         """Replication-group all-reduce at the gradient-accumulation
         boundary (§3.4 hop 2), with optional bf16 or int8 wire compression.
         A no-op under the alternative schedule (its backward already
@@ -316,7 +389,8 @@ class CommEngine:
         all-gather, both shipping (int8 q, f32 block scales) with an fp32
         accumulation in between (``collectives.quantized_all_reduce``);
         ``salt`` decorrelates the stochastic-rounding dither across payloads
-        (ignored by the float wires).
+        and ``seed`` (the traced step counter) across steps — both ignored
+        by the float wires.
         """
         if self.sync_policy.mode != "2hop":
             return g
@@ -324,13 +398,14 @@ class CommEngine:
         if wire == "int8" and self.topo.replication_degree > 1:
             return C.quantized_all_reduce(
                 g, self.topo, salt=salt,
-                stochastic=self.sync_policy.stochastic)
+                stochastic=self.sync_policy.stochastic, seed=seed)
         if wire == "bf16":
             g = g.astype(jnp.bfloat16)
         g = C.hop2_all_reduce(g, self.topo)
         return g.astype(jnp.float32)
 
-    def hop2_bucketed(self, bucket: jax.Array, *, salt: int = 0) -> jax.Array:
+    def hop2_bucketed(self, bucket: jax.Array, *, salt: int = 0,
+                      seed=None) -> jax.Array:
         """Hop 2 at bucket granularity: the identical replication-group
         all-reduce (same axes, same optional wire compression) applied to
         one fixed-byte slice of a pool's flat gradient shard.
@@ -346,7 +421,7 @@ class CommEngine:
         This stays the single construction point for the collective: same
         code path as :meth:`hop2`, just a different payload shape.
         """
-        return self.hop2(bucket, salt=salt)
+        return self.hop2(bucket, salt=salt, seed=seed)
 
     # -- misc reductions -----------------------------------------------------
     def partition_coord(self):

@@ -27,7 +27,6 @@ from typing import Callable, Iterable, Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 # Any partition-group size we ever use (<= 32 data-parallel participants in

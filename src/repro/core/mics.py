@@ -35,7 +35,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -82,14 +81,19 @@ class MiCSConfig:
     #                                     block-quantized hop-1 reduce-scatter)
     grad_rounding: str = "stochastic"   # int8 gradient quantizer rounding
     prefetch: bool = True               # double-buffered lookahead gathers
+    prefetch_carry: str = "stored"      # 'stored' carry residual | 'remat'
+    #                                     backward re-gather (memplan knob)
     policy: str = "manual"              # 'manual' | 'auto' (link-model tuner)
     link_profile: Any = "v5e"           # profile name or LinkProfile instance
     boundary_schedule: str = "bucketed"  # 'serial' (reference) | 'bucketed'
     hop2_bucket_mb: float = 32.0        # fixed-byte hop-2 pipeline bucket
+    hbm_budget_gb: float | None = None  # per-device HBM budget (GiB) the
+    #                                     memory planner gates policies on
 
     def __post_init__(self):
         from repro.core.comm import (
             GRAD_ROUNDINGS, HOP1_WIRE_DTYPES, HOP2_WIRE_DTYPES,
+            PREFETCH_CARRIES,
         )
 
         if self.policy not in ("manual", "auto"):
@@ -102,6 +106,13 @@ class MiCSConfig:
         if self.hop2_bucket_mb <= 0:
             raise ValueError(
                 f"hop2_bucket_mb must be > 0, got {self.hop2_bucket_mb}")
+        if self.prefetch_carry not in PREFETCH_CARRIES:
+            raise ValueError(
+                f"unknown prefetch_carry {self.prefetch_carry!r} "
+                f"(expected one of {PREFETCH_CARRIES})")
+        if self.hbm_budget_gb is not None and self.hbm_budget_gb <= 0:
+            raise ValueError(
+                f"hbm_budget_gb must be > 0, got {self.hbm_budget_gb}")
         if self.hop1_wire_dtype not in HOP1_WIRE_DTYPES:
             raise ValueError(
                 f"unknown hop1_wire_dtype {self.hop1_wire_dtype!r} "
@@ -231,16 +242,20 @@ def build_train_step(
     s = mcfg.micro_steps
     denom = float(s * topo.data_parallel_size)
 
-    def loss_of(flat, micro_batch):
-        return lm.loss_fn(model, flat, comm, ctx, micro_batch)
+    def loss_of(flat, micro_batch, step_ctx):
+        return lm.loss_fn(model, flat, comm, step_ctx, micro_batch)
 
     def sharded_step(state, batch):
         params = state["params"]
+        # The step counter rides the context into every gather's VJP: the
+        # int8 qgZ wires fold it into their stochastic-rounding dither key
+        # (step-varying, value-independent); float wires never read it.
+        step_ctx = dataclasses.replace(ctx, step_seed=state["step"])
 
         def micro(carry, mb):
             grads_acc, loss_acc, aux_acc = carry
             (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
-                params, mb)
+                params, mb, step_ctx)
             grads_acc = jax.tree.map(
                 lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
             return (grads_acc, loss_acc + metrics["loss"],
@@ -254,7 +269,8 @@ def build_train_step(
         # Serial reference or the bucketed software pipeline; bitwise
         # identical either way (tests/schedule_harness.py).
         new_params, new_m, new_v, gnorm = apply_boundary(
-            boundary, comm, model, topo, oc, state, grads, denom)
+            boundary, comm, model, topo, oc, state, grads, denom,
+            seed=state["step"])
         step = state["step"]
 
         metrics = {

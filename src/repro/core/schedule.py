@@ -157,13 +157,14 @@ def _sq(bucket: jax.Array) -> jax.Array:
     return jnp.sum(jnp.square(bucket))
 
 
-def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict):
+def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict, seed=None):
     """Reference: whole-pool hop-2 first, then per-bucket norm partials.
 
     ``salt`` (the pool index) seeds the int8 hop-2 wire's stochastic-
-    rounding dither per payload; the float wires ignore it.
+    rounding dither per payload and ``seed`` (the traced step counter)
+    decorrelates it across steps; the float wires ignore both.
     """
-    reduced = {name: comm.hop2(g, salt=i)
+    reduced = {name: comm.hop2(g, salt=i, seed=seed)
                for i, (name, g) in enumerate(flat_grads.items())}
     sq_parts = [
         _sq(lax.slice_in_dim(reduced[b.pool], b.lo, b.hi, axis=0))
@@ -172,7 +173,7 @@ def _reduce_serial(plan: BoundaryPlan, comm, flat_grads: dict):
     return reduced, sq_parts
 
 
-def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict):
+def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict, seed=None):
     """Software pipeline: issue bucket k's hop-2, then run bucket k−1's
     dependent compute (squared-norm partial + wire decompress — the bf16
     upcast, or the int8 leg's block dequantize).  The collective of bucket
@@ -192,7 +193,7 @@ def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict):
 
     for i, ref in enumerate(plan.buckets):
         raw = lax.slice_in_dim(flat_grads[ref.pool], ref.lo, ref.hi, axis=0)
-        in_flight = comm.hop2_bucketed(raw, salt=i)  # issue bucket k
+        in_flight = comm.hop2_bucketed(raw, salt=i, seed=seed)  # bucket k
         if pending is not None:
             retire(*pending)                  # compute for bucket k−1
         pending = (ref, in_flight)
@@ -215,6 +216,7 @@ def apply_boundary(
     state: dict,
     grads: dict,
     denom: float,
+    seed=None,
 ):
     """Run one gradient-accumulation boundary under ``plan``.
 
@@ -223,15 +225,17 @@ def apply_boundary(
     (``micro_steps * data_parallel``).  Returns
     ``(new_params, new_m, new_v, grad_norm)`` with the global-norm clip
     applied exactly — the norm is reduced from every bucket's partial
-    before any shard update issues.
+    before any shard update issues.  ``seed`` (the traced step counter)
+    feeds the int8 hop-2 wire's stochastic-rounding dither; float wires
+    ignore it.
     """
     flat_grads = {
         name: grads[name].reshape(-1) for name in plan.shard_elems
     }
     if plan.mode == "bucketed":
-        reduced, sq_parts = _reduce_bucketed(plan, comm, flat_grads)
+        reduced, sq_parts = _reduce_bucketed(plan, comm, flat_grads, seed)
     else:
-        reduced, sq_parts = _reduce_serial(plan, comm, flat_grads)
+        reduced, sq_parts = _reduce_serial(plan, comm, flat_grads, seed)
 
     # ---- exact global-norm clip, denominator folded -----------------------
     sq_local = jnp.float32(0.0)

@@ -18,8 +18,6 @@ import queue
 import threading
 from typing import Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -7,12 +7,20 @@ collective census (roofline inputs) to artifacts/dryrun/<cell>.json.
 
 Communication policy: all collectives run through the CommEngine
 (core/comm.py).  The manual flags (--gather-order, --quant-gather,
---prefetch, ...) map 1:1 onto its GatherPolicy/SyncPolicy; ``--policy
-auto`` instead hands the choice to the link-model autotuner
-(core/autotune.py), which prints the ranked candidate table for the
-``--link-profile`` and records the chosen plan — plus a
+--prefetch, --prefetch-carry, ...) map 1:1 onto its
+GatherPolicy/SyncPolicy; ``--policy auto`` instead hands the choice to the
+link-model autotuner (core/autotune.py), which prints the ranked candidate
+table for the ``--link-profile`` and records the chosen plan — plus a
 predicted-vs-measured cross-check of the plan's per-stage wire bytes
-against the compiled HLO census — into the cell artifact.  Training cells
+against the compiled HLO census — into the cell artifact.
+
+Memory: every cell records the memory planner's predicted per-device
+footprint next to XLA's compiled ``memory_analysis()``
+(plan-vs-compiled, core/memplan.py).  ``--hbm-budget-gb`` additionally
+applies the paper's §3.1 rule — the minimal partition group whose
+predicted footprint fits — when no --partition-size is pinned, and gates
+``--policy auto`` candidates on feasibility (with the
+``prefetch_carry='remat'`` mitigation joining the grid).  Training cells
 additionally record the boundary scheduler's bucket plan
 (``--boundary-schedule`` / ``--hop2-bucket-mb``, core/schedule.py) with
 the link model's predicted exposed-vs-hidden hop-2 time and the measured
@@ -42,10 +50,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, cells, get_config
+from repro.core import memplan
 from repro.core.autotune import (
     compare_census, cost_hop2_schedule, predict_traffic, resolve_config,
+    resolve_scale,
 )
-from repro.core.comm import CommEngine
+from repro.core.comm import CommEngine, policies_from_config
 from repro.core.linkmodel import get_profile
 from repro.core.mics import (
     MiCSConfig, build_train_step, init_state_shapes, make_batch_shapes,
@@ -107,6 +117,24 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
     spec = SHAPES[shape]
     t0 = time.time()
     n_params = exact_param_count(cfg)
+    scale_plan = None
+    if mcfg.hbm_budget_gb is not None and partition_size is None \
+            and not zero3:
+        # the paper's §3.1 rule, analytically: minimal partition group
+        # whose predicted per-device footprint fits the budget
+        # (core/memplan.py); the chosen prefetch carry rides along.
+        sizing_model = build_model(cfg, tp=tp or 16)
+        # the partition group is carved from the 16-wide data axis; pods
+        # and the dp2 leftover of a narrow tp replicate on top of it
+        extra_repl = (2 if multi_pod else 1) * (16 // (tp or 16))
+        partition_size, carry, scale_plan = resolve_scale(
+            sizing_model, mcfg, data_extent=16,
+            mode="train" if spec["kind"] == "train" else "serve",
+            extra_replication=extra_repl)
+        mcfg = dataclasses.replace(mcfg, prefetch_carry=carry)
+        print(f"memplan: p={partition_size} prefetch_carry={carry} "
+              f"({scale_plan.total_gb:.2f} GiB predicted vs budget "
+              f"{mcfg.hbm_budget_gb:g} GiB)", flush=True)
     topo = make_mics_topology(
         multi_pod=multi_pod, param_count=n_params,
         partition_size=partition_size, zero3=zero3, tp=tp,
@@ -212,6 +240,26 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
                       "generated_code_size_in_bytes")
             if hasattr(ma, k)
         }
+    # memory planner: predicted per-device footprint vs the compiled
+    # analysis (plan-vs-compiled, core/memplan.py) for every cell.
+    micro = record["micro_steps"]
+    lb = max((spec["global_batch"] // micro) // topo.data_parallel_size, 0)
+    gp_, sp_ = policies_from_config(mcfg)
+    mem_plan = memplan.predict_footprint(
+        model, topo, gp_, sp_, micro_steps=micro,
+        mode="train" if spec["kind"] == "train" else "serve",
+        local_batch=lb, seq=spec["seq"],
+        boundary=mcfg.boundary_schedule,
+        hop2_bucket_mb=mcfg.hop2_bucket_mb)
+    record["memplan"] = mem_plan.describe()
+    record["memplan"]["hbm_budget_gb"] = mcfg.hbm_budget_gb
+    if scale_plan is not None:
+        record["memplan"]["resolved_partition_size"] = topo.partition_size
+    if ma is not None and hasattr(ma, "temp_size_in_bytes"):
+        meas = (ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+        record["memplan"]["compiled_total_bytes"] = meas
+        record["memplan"]["plan_vs_compiled_ratio"] = (
+            mem_plan.total_bytes / meas if meas else None)
     from repro.compat import cost_analysis
 
     ca = cost_analysis(compiled)
@@ -308,6 +356,21 @@ def main():
                     help="1 = double-buffered lookahead gathers (layer i+1 "
                          "gathered during layer i's compute; the default), "
                          "0 = serial reference schedule")
+    ap.add_argument("--prefetch-carry", default="stored",
+                    choices=["stored", "remat"],
+                    help="backward residual of the prefetch schedule: "
+                         "'stored' carries the gathered buffer (no backward "
+                         "re-gather, O(layers x flat_len) HBM), 'remat' "
+                         "re-issues the gather in the backward (one extra "
+                         "all-gather per layer, O(layers x shard) HBM — the "
+                         "memory planner's mitigation knob)")
+    ap.add_argument("--hbm-budget-gb", type=float, default=0,
+                    help="per-device HBM budget in GiB for the memory "
+                         "planner (core/memplan.py): picks the minimal "
+                         "partition group that fits (paper §3.1) when no "
+                         "--partition-size is pinned, gates --policy auto "
+                         "candidates, and reports plan-vs-compiled "
+                         "footprints per cell; 0 = no budget")
     ap.add_argument("--boundary-schedule", default="bucketed",
                     choices=["serial", "bucketed"],
                     help="gradient-accumulation boundary: 'bucketed' "
@@ -338,10 +401,12 @@ def main():
         compress_hop2=(False if args.compress_hop2 == "off"
                        else args.compress_hop2),
         prefetch=bool(args.prefetch),
+        prefetch_carry=args.prefetch_carry,
         policy=args.policy,
         link_profile=args.link_profile,
         boundary_schedule=args.boundary_schedule,
         hop2_bucket_mb=args.hop2_bucket_mb,
+        hbm_budget_gb=args.hbm_budget_gb or None,
     )
 
     todo = []
@@ -366,6 +431,12 @@ def main():
                        f"flops={rec['stats']['dot_flops']:.3e} "
                        f"wire={rec['stats']['total_wire_bytes']:.3e}B "
                        f"carried_gathers={pf['carried_all_gathers']}")
+                mp = rec.get("memplan", {})
+                if mp:
+                    msg += f" mem={mp['total_gib']:.2f}GiB"
+                    if mp.get("plan_vs_compiled_ratio"):
+                        msg += (" (plan/compiled="
+                                f"{mp['plan_vs_compiled_ratio']:.2f})")
                 if "boundary" in rec:
                     bd, pr = rec["boundary"], rec["boundary"]["predicted"]
                     msg += (f" hop2[{bd['mode']}x{bd['n_hop2_collectives']}]="

@@ -7,8 +7,6 @@ refactors its data axis into (repl, shard) sub-axes via
 
 from __future__ import annotations
 
-import jax
-
 from repro.core.topology import (  # re-exported for launch scripts
     MiCSTopology,
     choose_partition_size,

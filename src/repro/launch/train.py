@@ -26,8 +26,9 @@ import argparse
 import logging
 
 from repro.configs import get_config, smoke_variant
+from repro.core import memplan
 from repro.core.autotune import cost_hop2_schedule, resolve_config
-from repro.core.comm import CommEngine
+from repro.core.comm import CommEngine, policies_from_config
 from repro.core.linkmodel import get_profile
 from repro.core.mics import MiCSConfig
 from repro.core.schedule import plan_boundary
@@ -76,6 +77,18 @@ def main():
     ap.add_argument("--prefetch", type=int, default=1,
                     help="1 = double-buffered lookahead gathers (default), "
                          "0 = serial reference schedule")
+    ap.add_argument("--prefetch-carry", default="stored",
+                    choices=["stored", "remat"],
+                    help="prefetch backward residual: 'stored' carries the "
+                         "gathered buffer (O(layers x flat_len) HBM), "
+                         "'remat' re-gathers in the backward — one extra "
+                         "all-gather per layer buys the residual down to "
+                         "O(layers x shard); core/memplan.py prices both")
+    ap.add_argument("--hbm-budget-gb", type=float, default=0,
+                    help="per-device HBM budget in GiB: the memory planner "
+                         "gates --policy auto candidates on it and falls "
+                         "back to the remat carry when the stored one "
+                         "does not fit; 0 = no budget")
     ap.add_argument("--boundary-schedule", default="bucketed",
                     choices=["serial", "bucketed"],
                     help="gradient-accumulation boundary: bucketed hop-2 "
@@ -100,10 +113,12 @@ def main():
                       quant_gather=args.quant_gather,
                       hop1_wire_dtype=args.hop1_wire_dtype,
                       prefetch=bool(args.prefetch),
+                      prefetch_carry=args.prefetch_carry,
                       policy=args.policy,
                       link_profile=args.link_profile,
                       boundary_schedule=args.boundary_schedule,
-                      hop2_bucket_mb=args.hop2_bucket_mb)
+                      hop2_bucket_mb=args.hop2_bucket_mb,
+                      hbm_budget_gb=args.hbm_budget_gb or None)
     mcfg, plan = resolve_config(mcfg, model, topo, mode="train")
     if plan is not None:
         print(plan.table())
@@ -118,6 +133,15 @@ def main():
           f"({mcfg.hop2_bucket_mb:g} MB) — modeled hop-2 "
           f"{hop2['t_exposed_s']*1e6:.0f}us exposed / "
           f"{hop2['t_total_s']*1e6:.0f}us total on {profile.name}")
+    gp, sp = policies_from_config(mcfg)
+    lb = max((args.global_batch // args.micro_steps)
+             // topo.data_parallel_size, 0)
+    mem = memplan.predict_footprint(
+        model, topo, gp, sp, micro_steps=args.micro_steps, mode="train",
+        local_batch=lb, seq=args.seq, boundary=mcfg.boundary_schedule,
+        hop2_bucket_mb=mcfg.hop2_bucket_mb)
+    print(f"memplan: {mem.total_gb:.3f} GiB predicted per device "
+          f"(prefetch_carry={mcfg.prefetch_carry})")
     oc = OptConfig(lr_max=args.lr, total_steps=args.steps,
                    warmup_steps=max(args.steps // 20, 1))
     dc = DataConfig(vocab=cfg.vocab, seq=args.seq,

@@ -14,7 +14,6 @@ attention output and MLP down projections (Megatron TP).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import math
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.flat_param import FlatLayout, LayoutBuilder
+from repro.core.flat_param import LayoutBuilder
 from repro.models import blocks as B
 from repro.models import recurrent as R
 from repro.models.dims import attn_dims, pad_to_tp, shard_dim

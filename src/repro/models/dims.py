@@ -20,7 +20,6 @@ smaller than it.  Policy (see DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
-import math
 
 
 def _round_up(x: int, m: int) -> int:

@@ -40,6 +40,7 @@ class Ctx:
     compute_dtype: Any = jnp.bfloat16
     scores_bf16: bool = False      # bf16 attention scores (§Perf)
     mlstm_chunk: int = 0           # chunkwise-parallel mLSTM (§Perf; 0=scan)
+    step_seed: Any = None          # traced step counter (qgZ dither seed)
 
     @property
     def scores_dtype(self):

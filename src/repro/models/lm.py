@@ -17,10 +17,22 @@ Two schedules exist (``CommEngine.prefetch`` selects):
   i's compute*.  The gather has no data dependency on the current layer's
   math, so XLA's scheduler can overlap it with the matmuls — the ZeRO-3
   style prefetch MiCS assumes.  Loss is bitwise identical to the serial
-  schedule (same gathers, same compute, same order of adds); the trade-off
-  is that the carried buffer becomes a per-layer scan residual for the
-  backward pass (DESIGN.md §4 quantifies this against the serial schedule's
-  re-gather).
+  schedule (same gathers, same compute, same order of adds).
+
+The prefetch schedule's backward residual is selected by
+``GatherPolicy.prefetch_carry``:
+
+* ``'stored'`` (the seed behaviour) — the carried gathered buffer becomes a
+  per-layer scan residual, so the backward never re-gathers; costs
+  O(layers x flat_len) HBM per scanned pool (DESIGN.md §4).
+* ``'remat'`` — the whole pool scan runs under a custom VJP
+  (:func:`_apply_pool_prefetch_remat`): the forward is the *identical*
+  double-buffered scan (bitwise-equal losses), but only the layer-input
+  activations and the parameter shards are kept; the backward re-issues
+  each layer's all-gather (through the same CommEngine gather and its
+  exact adjoint) and re-linearizes the layer on the fly.  Costs one extra
+  all-gather per layer per micro-step and only O(layers x shard) HBM —
+  the memory planner's first mitigation knob (core/memplan.py).
 """
 
 from __future__ import annotations
@@ -35,7 +47,6 @@ from jax import lax
 from repro.configs.base import ArchConfig
 from repro.core.flat_param import FlatLayout
 from repro.models import layers as L
-from repro.models.dims import pad_to_tp, shard_dim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,9 +100,17 @@ def _apply_pool(
     """Scan a pool over its stack.  flat_rows: [stack, 1, S_local] leaves.
 
     ``comm`` is the CommEngine owning every gather collective; its
-    ``prefetch`` policy selects the serial or double-buffered schedule.
+    ``prefetch`` policy selects the serial or double-buffered schedule, and
+    ``prefetch_carry`` the stored-vs-remat backward residual of the latter.
     """
     if getattr(comm, "prefetch", False) and pool.stack > 1:
+        if (getattr(comm, "prefetch_carry", "stored") == "remat"
+                and caches is None and ctx.enc_out is None):
+            # remat needs a backward pass to pay off and a custom VJP to
+            # run; the cached (serving) path has no backward, and a
+            # cross-attended encoder output may not be closed over by a
+            # custom VJP (it carries gradient) — both fall back to stored.
+            return _apply_pool_prefetch_remat(pool, flat_rows, x, ctx, comm)
         return _apply_pool_prefetch(pool, flat_rows, x, ctx, comm, caches)
     return _apply_pool_serial(pool, flat_rows, x, ctx, comm, caches)
 
@@ -100,7 +119,7 @@ def _apply_pool_serial(pool, flat_rows, x, ctx, comm, caches):
     """Reference schedule: gather layer i, then compute layer i."""
 
     def inner(x, row, cache):
-        tensors = comm.gather(pool, _row(row))
+        tensors = comm.gather(pool, _row(row), seed=ctx.step_seed)
         (x, aux), new_cache = pool.apply(tensors, x, ctx, cache)
         return x, aux, new_cache
 
@@ -141,10 +160,11 @@ def _apply_pool_prefetch(pool, flat_rows, x, ctx, comm, caches):
     buffer (and the lookahead gather) instead of storing activations.
     """
     nxt_rows = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), flat_rows)
-    cur0 = comm.gather_flat(_row(flat_rows, (0, 0)))
+    cur0 = comm.gather_flat(_row(flat_rows, (0, 0)), seed=ctx.step_seed)
 
     def inner(x, cur_full, nxt_row, cache):
-        nxt_full = comm.gather_flat(_row(nxt_row))  # layer i+1, issued first
+        nxt_full = comm.gather_flat(
+            _row(nxt_row), seed=ctx.step_seed)      # layer i+1, issued first
         tensors = comm.unflatten(pool, cur_full)     # layer i, from the carry
         (x, aux), new_cache = pool.apply(tensors, x, ctx, cache)
         return x, aux, nxt_full, new_cache
@@ -170,6 +190,89 @@ def _apply_pool_prefetch(pool, flat_rows, x, ctx, comm, caches):
     (x, aux, _), new_caches = lax.scan(
         body, (x, jnp.float32(0.0), cur0), (nxt_rows, caches))
     return x, aux, new_caches
+
+
+def _apply_pool_prefetch_remat(pool, flat_rows, x, ctx, comm):
+    """Double-buffered prefetch with a rematerialized backward residual
+    (``GatherPolicy.prefetch_carry='remat'``).
+
+    The forward is the *same* double-buffered scan as
+    :func:`_apply_pool_prefetch` — same gathers on the same shards in the
+    same order, so losses are bitwise identical to the stored schedule.
+    The difference is what survives for the backward pass: the whole scan
+    runs under a ``jax.custom_vjp`` whose residuals are only the parameter
+    shards (``flat_rows``, which already live in HBM — O(layers x shard))
+    and the stacked per-layer input activations (the activation checkpoint
+    any schedule keeps).  The carried gathered buffer is *not* a residual.
+    The backward is a hand-rolled reverse scan that re-issues each layer's
+    all-gather (``comm.gather_flat`` — the CommEngine's custom-VJP gather,
+    so the row cotangent is still the exact staged hop-1 reduce-scatter)
+    and linearizes the layer on the fly, exactly what ``jax.checkpoint``
+    would recompute, minus the stored carry.  Cost: one extra all-gather
+    per layer per micro-step (the re-gather); saving: the O(layers x
+    flat_len) carry residual (DESIGN.md §4, core/memplan.py).
+
+    Cache-carrying (serving) and encoder-output-consuming pools never take
+    this path (:func:`_apply_pool` falls back): serving has no backward,
+    and ``ctx.enc_out`` carries gradient that a custom VJP closure would
+    silently drop.
+    """
+    seed = ctx.step_seed
+
+    @jax.checkpoint
+    def layer(row, x_in):
+        """One layer from its shard: gather -> unflatten -> apply.
+
+        Checkpointed so its VJP is the same recompute-then-transpose the
+        stored schedule's ``jax.checkpoint(inner)`` runs — gradients stay
+        bitwise identical between the two carries, not just losses.
+        """
+        full = comm.gather_flat(_row(row), seed=seed)
+        tensors = comm.unflatten(pool, full)
+        (x_out, aux), _ = pool.apply(tensors, x_in, ctx, None)
+        return x_out, aux
+
+    def fwd_scan(x, flat_rows):
+        """The double-buffered forward; also stacks per-layer inputs."""
+        nxt_rows = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), flat_rows)
+        cur0 = comm.gather_flat(_row(flat_rows, (0, 0)), seed=seed)
+
+        def body(carry, nxt_row):
+            xc, aux_tot, cur = carry
+            nxt = comm.gather_flat(_row(nxt_row), seed=seed)  # layer i+1
+            tensors = comm.unflatten(pool, cur)
+            (x_out, aux), _ = pool.apply(tensors, xc, ctx, None)
+            return (x_out, aux_tot + aux, nxt), xc            # stash input
+
+        (x_out, aux, _), x_ins = lax.scan(
+            body, (x, jnp.float32(0.0), cur0), nxt_rows)
+        return (x_out, aux), x_ins
+
+    @jax.custom_vjp
+    def scan_fn(x, flat_rows):
+        return fwd_scan(x, flat_rows)[0]
+
+    def scan_fwd(x, flat_rows):
+        out, x_ins = fwd_scan(x, flat_rows)
+        return out, (flat_rows, x_ins)
+
+    def scan_bwd(res, cts):
+        flat_rows, x_ins = res
+        ct_x, ct_aux = cts
+
+        def body(ct_x, xs):
+            row, x_in = xs
+            _, vjp = jax.vjp(layer, row, x_in)   # re-gathers the layer
+            d_row, d_x = vjp((ct_x, ct_aux))
+            return d_x, d_row
+
+        ct_x, d_rows = lax.scan(body, ct_x, (flat_rows, x_ins),
+                                reverse=True)
+        return ct_x, d_rows
+
+    scan_fn.defvjp(scan_fwd, scan_bwd)
+    x, aux = scan_fn(x, flat_rows)
+    return x, aux, None
 
 
 def embed_tokens(model: ModelDef, t_embed, tokens, ctx: L.Ctx, *, pos=None):
@@ -216,7 +319,8 @@ def forward(
     Returns (hidden, aux_loss, new_caches, t_head).
     """
     cfg = model.cfg
-    t_embed = comm.gather(model.embed, _row(flat["embed"], (0, 0)))
+    t_embed = comm.gather(model.embed, _row(flat["embed"], (0, 0)),
+                          seed=ctx.step_seed)
     aux_total = jnp.float32(0.0)
     new_caches: dict[str, Any] = {}
 
@@ -245,7 +349,8 @@ def forward(
         if nc is not None:
             new_caches[pool.name] = nc
 
-    t_head = comm.gather(model.head, _row(flat["head"], (0, 0)))
+    t_head = comm.gather(model.head, _row(flat["head"], (0, 0)),
+                         seed=ctx.step_seed)
     return x, aux_total, new_caches, t_head
 
 

@@ -15,7 +15,6 @@ TPU adaptation notes (DESIGN.md §2):
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +24,7 @@ from repro.configs.base import ArchConfig
 from repro.core.flat_param import LayoutBuilder
 from repro.models import layers as L
 from repro.models.blocks import (
-    apply_norm, dense_layer_apply, dense_layer_layout, mlp_apply, mlp_layout,
-    norm_layout,
+    apply_norm, mlp_apply, mlp_layout, norm_layout,
 )
 from repro.models.dims import shard_dim
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-from collections import defaultdict
 
 from repro.core.linkmodel import V5E
 

@@ -314,6 +314,11 @@ def prefetch_census(comps: dict) -> dict:
     reaches the ROOT tuple through data-movement ops only (no dot, no
     compute fusion).  The serial schedule has zero such gathers — every
     gather's value is consumed by the same iteration's matmuls.
+
+    ``carried_buffer_bytes`` is the summed result size of the carried
+    gathers — the per-iteration slice of the prefetch-carry residual the
+    memory planner prices (core/memplan.py: the stored carry keeps
+    ``stack`` stacked copies of it; the remat carry drops it).
     """
     bodies = set()
     for comp in comps.values():
@@ -324,6 +329,7 @@ def prefetch_census(comps: dict) -> dict:
                     bodies.add(wm.group(2))
 
     total, carried = 0, 0
+    carried_bytes = 0.0
     for bname in sorted(bodies):
         comp = comps.get(bname)
         if comp is None:
@@ -353,8 +359,11 @@ def prefetch_census(comps: dict) -> dict:
                     _is_data_movement(comps, sub)
                     for sub in _CALLS.findall(ins.line)):
                 frontier.extend(ins.operands)
-        carried += len(gathers & seen)
-    return {"body_all_gathers": total, "carried_all_gathers": carried}
+        for name in gathers & seen:
+            carried += 1
+            carried_bytes += _parse_shape(by_name[name].shape_str)[0]
+    return {"body_all_gathers": total, "carried_all_gathers": carried,
+            "carried_buffer_bytes": carried_bytes}
 
 
 # Arithmetic ops that count as boundary compute when they sit between two

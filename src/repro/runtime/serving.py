@@ -11,8 +11,6 @@ replication documented in DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
-import dataclasses
 import json
 import traceback
 
@@ -39,8 +38,8 @@ from repro.configs import get_config, smoke_variant
 from repro.core import collectives as C
 from repro.core.comm import CommEngine, GatherPolicy, SyncPolicy
 from repro.core.mics import (
-    MiCSConfig, build_train_step, init_state, make_batch_shapes,
-    init_state_shapes,
+    MiCSConfig, build_train_step, init_state, init_state_shapes,
+    make_batch_shapes,
 )
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.models.build import build_model

@@ -5,7 +5,6 @@ set their own device count.  Locally the ambient set is one CPU device; CI
 exports --xla_force_host_platform_device_count=8, and the suite is verified
 to pass under both (no test may assume an exact ambient device count)."""
 
-import jax
 import pytest
 
 from repro.core.topology import MiCSTopology, make_host_mesh

@@ -32,7 +32,6 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-
 from repro.configs import get_config, smoke_variant
 from repro.core import collectives as C
 from repro.core.mics import MiCSConfig, build_train_step, init_state, state_pspecs

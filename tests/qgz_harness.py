@@ -10,6 +10,10 @@ on them.  Checks:
                          lossless, so any mismatch is a routing bug
   quant_rs_accuracy      dense multi-contributor reduce-scatter stays
                          within the blockwise quantization error bound
+  step_seed_dither       the threaded step seed (ISSUE 5 satellite) is
+                         bitwise reproducible per seed, draws distinct
+                         dither across seeds on the same payload, and
+                         stays within the error bound
   hop1_bf16_bitwise      hop1_wire_dtype='bf16' under the bf16 gather wire
                          is bitwise the default path (the cast is identity)
   int8_hop1_convergence  tiny-LM training with the int8 qgZ hop-1 tracks
@@ -34,7 +38,6 @@ os.environ["XLA_FLAGS"] = (
 import json
 import traceback
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -139,6 +142,43 @@ def _quant_rs_accuracy():
     scale = np.abs(np.asarray(want)).max()
     assert err / scale < 0.05, (err, scale)
     RESULTS["quant_rs_accuracy_detail"] = {"rel_err": float(err / scale)}
+
+
+# ---------------------------------------------------------------------------
+@check("step_seed_dither")
+def _step_seed_dither():
+    """The threaded step seed replaces the payload-fingerprint dither
+    component: distinct seeds draw distinct stochastic rounding on the SAME
+    payload (value-independent decorrelation across steps), the same seed
+    is bitwise reproducible, and every seed stays within the quantization
+    error bound."""
+    topo = MiCSTopology(make_host_mesh(1, 2, 4, 1),
+                        partition_axes=("shard",),
+                        replication_axes=("pod", "repl"))
+    x = jnp.asarray(np.random.default_rng(11).normal(size=(4 * 4096,)),
+                    jnp.float32)
+
+    def body(g, seed):
+        got = C.quantized_reduce_scatter(g, topo, topology="inner_first",
+                                         seed=seed)
+        want = lax.psum_scatter(g, ("shard",), scatter_dimension=0,
+                                tiled=True)
+        return got, want
+
+    run = shard_map(body, mesh=topo.mesh, in_specs=(P(None), P()),
+                    out_specs=(P(("shard",)), P(("shard",))),
+                    check_vma=False)
+    got0, want = run(x, jnp.int32(0))
+    got0b, _ = run(x, jnp.int32(0))
+    got1, _ = run(x, jnp.int32(1))
+    assert np.array_equal(np.asarray(got0), np.asarray(got0b)), \
+        "same step seed must be bitwise reproducible"
+    assert not np.array_equal(np.asarray(got0), np.asarray(got1)), \
+        "distinct step seeds must draw distinct dither"
+    scale = np.abs(np.asarray(want)).max()
+    for got in (got0, got1):
+        err = np.abs(np.asarray(got) - np.asarray(want)).max()
+        assert err / scale < 0.05, (err, scale)
 
 
 # ---------------------------------------------------------------------------

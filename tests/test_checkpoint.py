@@ -4,13 +4,11 @@ injected failures, and data-pipeline determinism/seekability."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, smoke_variant
-from repro.core.mics import MiCSConfig, build_train_step, init_state
+from repro.core.mics import MiCSConfig, init_state
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.build import build_model
 from repro.optim.adamw import OptConfig

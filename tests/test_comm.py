@@ -13,7 +13,7 @@ import pytest
 
 from harness_util import run_harness
 from repro.core.comm import (
-    CommEngine, GatherPolicy, SyncPolicy, GATHER_TOPOLOGIES,
+    GATHER_TOPOLOGIES, CommEngine, GatherPolicy, SyncPolicy,
 )
 from repro.core.mics import MiCSConfig
 

@@ -1,11 +1,10 @@
 """Property-based tests of the flat parameter pool invariants (hypothesis)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from hypothesis_compat import given, settings, strategies as st
 
-from repro.core.flat_param import PAD_MULTIPLE, FlatLayout, LayoutBuilder
+from hypothesis_compat import given, settings, strategies as st
+from repro.core.flat_param import PAD_MULTIPLE, LayoutBuilder
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

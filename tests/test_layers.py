@@ -2,7 +2,6 @@
 local windows, GQA grouping, vocab-parallel CE == plain CE, rotary, MoE
 dispatch == dense-expert reference."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -258,8 +258,8 @@ def harness_results():
 
 
 CHECKS = [
-    "quant_rs_routing", "quant_rs_accuracy", "hop1_bf16_bitwise",
-    "int8_hop1_convergence", "int8_hop2_boundary",
+    "quant_rs_routing", "quant_rs_accuracy", "step_seed_dither",
+    "hop1_bf16_bitwise", "int8_hop1_convergence", "int8_hop2_boundary",
 ]
 
 

@@ -48,11 +48,11 @@ def test_serving_footprint_heuristic():
 
 def test_windowed_cache_roll_matches_decode_slots():
     """Prefill writes slot a%cap for absolute position a; decode continues."""
-    from repro.models import layers as L
-    from repro.models.blocks import make_kv_cache, self_attention
-    from repro.core.flat_param import LayoutBuilder
-    from repro.models.blocks import attn_layout
     import dataclasses
+
+    from repro.core.flat_param import LayoutBuilder
+    from repro.models import layers as L
+    from repro.models.blocks import attn_layout, self_attention
 
     cfg = dataclasses.replace(smoke_variant(get_config("recurrentgemma-2b")),
                               window=8)

@@ -2,7 +2,6 @@
 on CPU — one forward/backward/optimizer step with finite loss and the exact
 state structure, plus a serve (prefill+decode) smoke for each family."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, strategies as st
 
+from hypothesis_compat import given, settings, strategies as st
 from repro.compat import cost_analysis
 from repro.core.topology import (
     HBM_BYTES_PER_CHIP, MiCSTopology, choose_partition_size, make_host_mesh,
