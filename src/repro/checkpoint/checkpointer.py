@@ -46,9 +46,13 @@ class Checkpointer:
 
     # -- save ---------------------------------------------------------------
     def save(self, state, step: int, *, topo: MiCSTopology,
-             data_cursor: int = 0, blocking: bool = True):
+             data_cursor: int = 0, blocking: bool = True,
+             host_stash: dict | None = None):
         """Snapshot `state` at `step`.  Arrays are fetched to host first (so
-        the device buffers donate-rotate freely) and written by a worker."""
+        the device buffers donate-rotate freely) and written by a worker.
+        ``host_stash`` (core/hostoffload.export_stash) carries the
+        host-offloaded optimizer moments when ``offload_opt=True`` — the
+        half of the training state that is not in ``state``."""
         host_state = jax.tree.map(np.asarray, state)
         meta = {
             "step": int(step),
@@ -60,7 +64,8 @@ class Checkpointer:
         }
         self.wait()
         self._worker = threading.Thread(
-            target=self._write, args=(host_state, meta), daemon=True)
+            target=self._write, args=(host_state, meta, host_stash),
+            daemon=True)
         self._worker.start()
         if blocking:
             self.wait()
@@ -70,7 +75,7 @@ class Checkpointer:
             self._worker.join()
             self._worker = None
 
-    def _write(self, host_state, meta):
+    def _write(self, host_state, meta, host_stash=None):
         step = meta["step"]
         tmp = self.dir / f"step_{step:08d}.tmp"
         final = self.dir / f"step_{step:08d}"
@@ -86,6 +91,11 @@ class Checkpointer:
             arrays[key] = leaf
         np.savez(tmp / "state.npz", **arrays)
         meta["leaves"] = names
+        if host_stash:
+            # offloaded-moment shards, keyed "k_<ns>_<tag>_<slot>_<device>"
+            np.savez(tmp / "stash.npz",
+                     **{"k_" + "_".join(str(int(x)) for x in k): v
+                        for k, v in host_stash.items()})
         (tmp / MANIFEST).write_text(json.dumps(meta, indent=1))
         if final.exists():
             shutil.rmtree(final)
@@ -99,12 +109,18 @@ class Checkpointer:
         )
         return steps[-1] if steps else None
 
-    def restore(self, model: ModelDef, topo: MiCSTopology, step: int | None = None):
+    def restore(self, model: ModelDef, topo: MiCSTopology,
+                step: int | None = None, *, offload_opt: bool = False):
         """Load a checkpoint onto (possibly different) `topo`.
 
         Returns (state, meta).  Cross-topology restores reshard via the flat
         layout — the on-disk representation is topology-agnostic global
         arrays, so nothing special is needed beyond new out-shardings.
+        ``offload_opt=True`` additionally imports the checkpoint's host-stash
+        shards (the offloaded AdamW moments) under the sentinel namespace
+        (core/hostoffload.CKPT_NAMESPACE); the stash keys are per-device, so
+        that leg of the restore is same-topology only — a cross-topology
+        restore starts the moments from the lazy zero-init instead.
         """
         if step is None:
             step = self.latest_step()
@@ -115,10 +131,19 @@ class Checkpointer:
         data = np.load(path / "state.npz")
         leaves = [data[f"leaf_{i:04d}"] for i in range(len(meta["leaves"]))]
 
+        if offload_opt and (path / "stash.npz").exists():
+            from repro.core.hostoffload import import_stash
+
+            blob = np.load(path / "stash.npz")
+            import_stash(
+                {tuple(int(x) for x in name[2:].split("_")): blob[name]
+                 for name in blob.files},
+                as_checkpoint=True)
+
         # rebuild the pytree structure from a template
         from repro.core.mics import init_state_shapes
 
-        template = init_state_shapes(model)
+        template = init_state_shapes(model, offload_opt=offload_opt)
         flat_t, treedef = jax.tree_util.tree_flatten(template)
         if len(flat_t) != len(leaves):
             raise ValueError(
@@ -131,7 +156,7 @@ class Checkpointer:
                     f"the TP degree is fixed (flat layouts are TP-local)")
         state_host = jax.tree_util.tree_unflatten(treedef, leaves)
 
-        shardings = state_shardings(model, topo)
+        shardings = state_shardings(model, topo, offload_opt=offload_opt)
         with topo.mesh:
             state = jax.tree.map(
                 lambda a, s: jax.device_put(jnp.asarray(a), s),

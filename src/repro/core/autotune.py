@@ -223,6 +223,13 @@ def _event_counts(stack: int, s: int, *, scanned: bool, prefetch: bool,
       O(layers x flat_len) carry residual; its adjoints come only from the
       backward re-gathers (``s·stack``), the forward lookahead gathers are
       outside the differentiated region (models/lm.py custom VJP).
+    * ``carry='host'`` (``GatherPolicy.carry_offload='host'``) keeps the
+      stored forward's gather count (``s·stack + 1``) — the carry streams
+      to host memory instead of re-gathering — while its hand-rolled
+      backward contributes exactly one adjoint per layer (``s·stack``,
+      like remat: the prologue gather sits outside the custom VJP).  The
+      d2h/h2d stream itself is not wire traffic; ``cost_candidate`` prices
+      it on the profile's ``host`` tier.
     * embed/head pools are gathered outside the layer scans; the gather is
       loop-invariant across micro-steps, so XLA hoists it out of the micro
       loop entirely: ONE gather per step, however many micro-steps.
@@ -237,6 +244,9 @@ def _event_counts(stack: int, s: int, *, scanned: bool, prefetch: bool,
         if carry == "remat":
             ag = 2 * s * stack + 1    # prefetch fwd + backward re-gather
             rs = s * stack
+        elif carry == "host":
+            ag = s * stack + 1        # stored forward, host-resident carry
+            rs = s * stack            # one hand-rolled adjoint per layer
         else:
             ag = s * stack + 1
             rs = s * (stack + 1)
@@ -324,11 +334,13 @@ def predict_traffic(
                and any(st.label == "outer" for st in stages))
 
     scanned = {pl.name for pl in model.pools}
+    carry = "host" if getattr(gather, "carry_offload", "none") == "host" \
+        else gather.prefetch_carry
     for pool in model.all_pools():
         stack, _tp, flat_len = model.global_flat_shapes()[pool.name]
         n = _event_counts(stack, s, scanned=pool.name in scanned,
                           prefetch=gather.prefetch, mode=mode,
-                          carry=gather.prefetch_carry)
+                          carry=carry)
         m_gather = flat_len * wire_b
         m_grad = flat_len * grad_b
         for st in stages:
@@ -384,9 +396,17 @@ def compare_census(predicted: dict, measured: dict,
 # Per-element HBM bytes of the compute a bucketed hop-2 can hide behind the
 # next bucket's collective: reading the fp32 reduction result, writing the
 # decompressed fp32 value (bf16 hop-2 wire), and the squared-norm partial's
-# read — NOT the AdamW pass, which the exact global-norm clip pins after the
-# last bucket's partial (core/schedule.py's ordering argument).
+# read.  Under the EXACT clip this is all that can hide — the global-norm
+# barrier pins every AdamW shard update after the last bucket's partial
+# (core/schedule.py's ordering argument).  Under the APPROX clip
+# (``clip_mode='approx'``) bucket k-1's AdamW pipelines under bucket k's
+# collective too, adding :data:`ADAMW_STREAM_BYTES_PER_ELEM` of hideable
+# work per element.
 HOP2_HIDE_BYTES_PER_ELEM = 12.0
+# HBM bytes/element of one AdamW shard update: read p/m/v/g fp32 (16),
+# write p/m/v fp32 (12) — the compute the approx-clip pipeline interleaves
+# between hop-2 collectives.
+ADAMW_STREAM_BYTES_PER_ELEM = 28.0
 
 DEFAULT_HOP2_BUCKET_MB = 32.0
 HOP2_BUCKET_MB_CANDIDATES = (4.0, 32.0, 128.0)
@@ -400,6 +420,7 @@ def cost_hop2_schedule(
     *,
     boundary: str = "serial",
     bucket_mb: float = DEFAULT_HOP2_BUCKET_MB,
+    clip_mode: str = "exact",
 ) -> dict:
     """α-β cost of the boundary hop-2 under a schedule.
 
@@ -407,7 +428,7 @@ def cost_hop2_schedule(
     the optimizer waits for the whole tree).  ``bucketed``: fixed-byte
     buckets software-pipelined against the per-bucket norm/decompress
     compute (core/schedule.py); bucket *k*'s collective hides behind bucket
-    *k−1*'s compute, so the exposed time is
+    *k−1*'s compute, so the exposed time under the exact clip is
 
         t_c[0] + Σ_{k≥1} max(0, t_c[k] − t_x[k−1])
 
@@ -415,19 +436,34 @@ def cost_hop2_schedule(
     compute (:data:`HOP2_HIDE_BYTES_PER_ELEM` over the profile's HBM
     bandwidth).  Smaller buckets expose less head time but pay one
     ``2(r−1)·α`` startup per bucket — the trade the tuner ranks
-    ``hop2_bucket_mb`` over.  Returns ``{"t_total_s", "t_exposed_s",
-    "t_hidden_s", "n_buckets"}`` (zeros when hop 2 is absent).
+    ``hop2_bucket_mb`` over.
+
+    ``clip_mode='approx'`` removes the global clip barrier: each bucket's
+    AdamW update (:data:`ADAMW_STREAM_BYTES_PER_ELEM` more hideable bytes)
+    pipelines under the next bucket's collective, and the head term
+    ``t_c[0]`` drops too — bucket 0's clip factor needs no hop-2 result
+    (the running norm through bucket −1 is empty, factor 1), so its
+    collective hides under the pre-boundary backward epilogue.  Exposed
+    time can reach zero — the fully-overlapped step.
+
+    Returns ``{"t_total_s", "t_exposed_s", "t_hidden_s", "n_buckets",
+    "clip_mode"}`` (zeros when hop 2 is absent).
     """
     profile = get_profile(profile)
     r = topo.replication_degree
     out = {"t_total_s": 0.0, "t_exposed_s": 0.0, "t_hidden_s": 0.0,
-           "n_buckets": 0}
+           "n_buckets": 0, "clip_mode": clip_mode}
     if r <= 1 or sync.mode != "2hop":
         return out
     tier = _hop2_tier(topo, profile)
     hop2_b = _WIRE_BYTES[sync.hop2_wire_dtype]
     quantized = sync.hop2_wire_dtype == "int8"
-    plan = plan_boundary(model, topo, mode=boundary, bucket_mb=bucket_mb)
+    # plan_boundary validates (boundary, clip_mode) compatibility.
+    plan = plan_boundary(model, topo, mode=boundary, bucket_mb=bucket_mb,
+                         clip_mode=clip_mode)
+    approx = plan.clip_mode == "approx"
+    hide_b = HOP2_HIDE_BYTES_PER_ELEM + (
+        ADAMW_STREAM_BYTES_PER_ELEM if approx else 0.0)
 
     t_c: list[float] = []   # per-payload collective time, canonical order
     t_x: list[float] = []   # per-payload hideable compute time
@@ -438,13 +474,14 @@ def cost_hop2_schedule(
         if quantized:
             # quantize + dequantize both legs of the decomposed all-reduce
             t_c[-1] += profile.hbm_time(2 * n * QGZ_COMPUTE_BYTES_PER_ELEM)
-        t_x.append(profile.hbm_time(n * HOP2_HIDE_BYTES_PER_ELEM))
+        t_x.append(profile.hbm_time(n * hide_b))
 
     total = sum(t_c)
     if boundary == "serial" or not t_c:
         exposed = total
     else:
-        exposed = t_c[0] + sum(
+        head = 0.0 if approx else t_c[0]
+        exposed = head + sum(
             max(0.0, t_c[k] - t_x[k - 1]) for k in range(1, len(t_c)))
     out.update(t_total_s=total, t_exposed_s=exposed,
                t_hidden_s=total - exposed, n_buckets=len(t_c))
@@ -470,6 +507,7 @@ class Candidate:
     lossy_hop1: bool = False             # qgZ/bf16-compressed hop-1 wire
     boundary: str = "serial"             # hop-2 boundary schedule
     hop2_bucket_mb: float = DEFAULT_HOP2_BUCKET_MB
+    clip_mode: str = "exact"             # boundary clip (approx = pipelined)
     n_hop2_buckets: int = 0
     t_hop2_total_s: float = 0.0          # full hop-2 ring time
     t_hop2_exposed_s: float = 0.0        # what actually serializes the step
@@ -487,6 +525,8 @@ class Candidate:
             "lossy": self.lossy_wire or self.lossy_hop2 or self.lossy_hop1,
             "boundary": self.boundary,
             "hop2_bucket_mb": self.hop2_bucket_mb,
+            "clip_mode": self.clip_mode,
+            "carry_offload": self.gather.carry_offload,
             "n_hop2_buckets": self.n_hop2_buckets,
             "t_hop2_total_s": self.t_hop2_total_s,
             "t_hop2_exposed_s": self.t_hop2_exposed_s,
@@ -526,7 +566,7 @@ class Plan:
                 f"(chosen marked *):",
                 f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
                 f"{'hop1':>5} {'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
-                f"{'carry':>6} "
+                f"{'clip':>6} {'carry':>6} {'off':>4} "
                 f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9} "
                 f"{'mem_GB':>7}"]
         cands = self.candidates[:top] if top else self.candidates
@@ -534,13 +574,14 @@ class Plan:
             mark = "*" if c is self.chosen else " "
             sched = "bucket" if c.boundary == "bucketed" else "serial"
             bkt = f"{c.hop2_bucket_mb:g}" if c.boundary == "bucketed" else "-"
+            off = "host" if c.gather.carry_offload == "host" else "-"
             mem = f"{c.mem_bytes / GIB:.2f}" if c.mem_bytes else "-"
             rows.append(
                 f" {mark}{i:>4} {c.gather.topology:<12} "
                 f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
                 f"{c.sync.hop1_wire_dtype:>5} "
                 f"{c.sync.hop2_wire_dtype:>5} {sched:>6} {bkt:>6} "
-                f"{c.gather.prefetch_carry:>6} "
+                f"{c.clip_mode:>6} {c.gather.prefetch_carry:>6} {off:>4} "
                 f"{c.t_comm_s * 1e3:>10.3f} "
                 f"{c.t_hop2_exposed_s * 1e3:>9.3f} "
                 f"{c.inter_wire_bytes / 1e6:>9.2f} "
@@ -561,12 +602,18 @@ def cost_candidate(
     mode: str = "train",
     boundary: str = "serial",
     hop2_bucket_mb: float = DEFAULT_HOP2_BUCKET_MB,
+    clip_mode: str = "exact",
 ) -> Candidate:
     """α-β time of one candidate: per-stage ring times over the profile's
     tiers + the outer-first reorder copy.  The hop-2 stage is costed by the
     boundary schedule (:func:`cost_hop2_schedule`): only its *exposed* time
     enters ``t_comm_s`` — under the bucketed pipeline the hidden fraction
-    overlaps boundary compute and no longer serializes the step."""
+    overlaps boundary compute and no longer serializes the step, and the
+    approx clip (``clip_mode='approx'``) additionally pipelines AdamW
+    under the collectives.  A host-offloaded carry
+    (``gather.carry_offload='host'``) adds a ``host_offload`` stage: the
+    2 x stack x flat_len bytes/micro-step each scanned pool streams over
+    the profile's host tier (the price of freeing that HBM)."""
     pred = predict_traffic(model, topo, gather, sync,
                            micro_steps=micro_steps, mode=mode,
                            profile=profile)
@@ -594,7 +641,8 @@ def cost_candidate(
     hop2 = {"t_total_s": 0.0, "t_exposed_s": 0.0, "n_buckets": 0}
     if mode == "train" and "hop2" in pred["by_stage"]:
         hop2 = cost_hop2_schedule(model, topo, profile, sync,
-                                  boundary=boundary, bucket_mb=hop2_bucket_mb)
+                                  boundary=boundary, bucket_mb=hop2_bucket_mb,
+                                  clip_mode=clip_mode)
         t_by_stage["hop2"] = hop2["t_exposed_s"]
         total += hop2["t_exposed_s"]
         if pred["by_stage"]["hop2"]["tier"] == "inter":
@@ -603,6 +651,27 @@ def cost_candidate(
         t_by_stage["reorder.copy"] = profile.copy_time(
             pred["local_copy_bytes"])
         total += t_by_stage["reorder.copy"]
+    if (mode == "train"
+            and getattr(gather, "carry_offload", "none") == "host"):
+        # d2h (forward put) + h2d (backward get) of every scanned pool's
+        # carried buffer, once per layer per micro-step.  Priced serially
+        # on the host tier — pessimistic (the streams overlap layer
+        # compute on a real DMA engine), which keeps host-carry rows from
+        # outranking in-HBM ones on time; they win only through the memory
+        # gate, which is their purpose.
+        cb = M._COMPUTE_BYTES[gather.wire_dtype]
+        host_bytes = 0.0
+        host_events = 0
+        scanned = {pl.name for pl in model.pools}
+        for name, (stack, _tp, flat_len) in \
+                model.global_flat_shapes().items():
+            if name in scanned and stack > 1:
+                host_bytes += 2.0 * micro_steps * stack * flat_len * cb
+                host_events += 2 * micro_steps * stack
+        if host_bytes:
+            t_by_stage["host_offload"] = profile.xfer_time(
+                "host", host_bytes, host_events)
+            total += t_by_stage["host_offload"]
     return Candidate(
         gather=gather, sync=sync, t_comm_s=total, t_by_stage=t_by_stage,
         bytes_by_stage=pred["by_stage"], inter_wire_bytes=inter_bytes,
@@ -610,6 +679,7 @@ def cost_candidate(
         lossy_hop2=sync.hop2_wire_dtype != "fp32",
         lossy_hop1=sync.hop1_wire_dtype != "fp32",
         boundary=boundary, hop2_bucket_mb=hop2_bucket_mb,
+        clip_mode=clip_mode,
         n_hop2_buckets=hop2["n_buckets"],
         t_hop2_total_s=hop2["t_total_s"],
         t_hop2_exposed_s=hop2["t_exposed_s"],
@@ -678,9 +748,11 @@ def rank_policies(
     allow_bf16_hop2: bool = False,
     allow_int8_hop1: bool = False,
     allow_int8_hop2: bool = False,
+    allow_approx_clip: bool = False,
     hbm_budget_gb: float | None = None,
     local_batch: int = 0,
     seq: int = 0,
+    offload_opt: bool = False,
 ) -> Plan:
     """Cost every candidate and rank by modeled collective time.
 
@@ -693,40 +765,65 @@ def rank_policies(
 
     ``hbm_budget_gb`` adds the memory planner's gate (core/memplan.py):
     every candidate is priced per device, the ``prefetch_carry='remat'``
-    mitigation joins the grid, infeasible candidates are excluded from
-    selection (they stay in the ranking, marked by their ``mem_bytes``),
-    and :class:`repro.core.memplan.MemoryBudgetError` is raised — never a
+    and ``carry_offload='host'`` mitigations join the grid, infeasible
+    candidates are excluded from selection (they stay in the ranking,
+    marked by their ``mem_bytes``), and
+    :class:`repro.core.memplan.MemoryBudgetError` is raised — never a
     silently empty plan — when nothing numerics-eligible fits.
     ``local_batch``/``seq`` size the activation terms (0 = model states +
     comm buffers only).
+
+    The approx clip joins the grid on every bucketed-boundary candidate
+    (``clip_mode`` column) but is selected only under
+    ``allow_approx_clip`` — like the lossy wires, it changes numerics
+    (one-bucket-stale clip factor) and must be opted into
+    (``MiCSConfig(clip_mode="approx")``).  ``offload_opt`` is a config
+    passthrough that shifts the m/v shards off-device in the footprint
+    pricing; it is not a ranked axis (it has no policy interaction).
     """
     profile = get_profile(profile)
-    carries = ("stored",) if hbm_budget_gb is None else ("stored", "remat")
+    carries = ("stored",) if hbm_budget_gb is None \
+        else ("stored", "remat", "host")
     cands = []
     for g, s in enumerate_candidates(topo, prefetch=prefetch, mode=mode):
         for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode):
-            for carry in carries:
-                if carry != "stored" and not (g.prefetch and mode == "train"):
-                    continue   # remat only differs where a backward exists
-                g2 = dataclasses.replace(g, prefetch_carry=carry)
-                c = cost_candidate(model, topo, profile, g2, s,
-                                   micro_steps=micro_steps, mode=mode,
-                                   boundary=boundary,
-                                   hop2_bucket_mb=bucket_mb)
-                mem = M.predict_footprint(
-                    model, topo, g2, s, micro_steps=micro_steps, mode=mode,
-                    local_batch=local_batch, seq=seq, boundary=boundary,
-                    hop2_bucket_mb=bucket_mb)
-                cands.append(dataclasses.replace(
-                    c, mem_bytes=mem.total_bytes))
+            clips = ("exact", "approx") if (
+                boundary == "bucketed" and mode == "train"
+                and topo.replication_degree > 1) else ("exact",)
+            for clip in clips:
+                for carry in carries:
+                    if carry != "stored" and not (
+                            g.prefetch and mode == "train"):
+                        continue   # carries only differ with a backward
+                    if carry == "host":
+                        g2 = dataclasses.replace(
+                            g, prefetch_carry="stored", carry_offload="host")
+                    else:
+                        g2 = dataclasses.replace(g, prefetch_carry=carry)
+                    c = cost_candidate(model, topo, profile, g2, s,
+                                       micro_steps=micro_steps, mode=mode,
+                                       boundary=boundary,
+                                       hop2_bucket_mb=bucket_mb,
+                                       clip_mode=clip)
+                    mem = M.predict_footprint(
+                        model, topo, g2, s, micro_steps=micro_steps,
+                        mode=mode, local_batch=local_batch, seq=seq,
+                        boundary=boundary, hop2_bucket_mb=bucket_mb,
+                        offload_opt=offload_opt and mode == "train")
+                    cands.append(dataclasses.replace(
+                        c, mem_bytes=mem.total_bytes))
     # modeled time first; among time-ties the smaller footprint wins (which
     # is what makes remat the tie-break choice at p=1, where the extra
-    # backward re-gather moves zero wire bytes).
+    # backward re-gather moves zero wire bytes).  Exact clip and the
+    # in-HBM carry sort before approx/host on full ties — reference
+    # numerics and no host traffic unless they buy something.
     cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
                               c.gather.wire_dtype, c.sync.hop1_wire_dtype,
                               c.sync.hop2_wire_dtype,
                               c.boundary, c.hop2_bucket_mb,
-                              c.mem_bytes, c.gather.prefetch_carry))
+                              c.clip_mode != "exact",
+                              c.mem_bytes, c.gather.prefetch_carry,
+                              c.gather.carry_offload != "none"))
 
     def hop2_ok(c: Candidate) -> bool:
         wire = c.sync.hop2_wire_dtype
@@ -742,7 +839,8 @@ def rank_policies(
     eligible = [c for c in cands
                 if (allow_int8 or not c.lossy_wire)
                 and hop2_ok(c)
-                and (allow_int8_hop1 or not c.lossy_hop1)]
+                and (allow_int8_hop1 or not c.lossy_hop1)
+                and (allow_approx_clip or c.clip_mode == "exact")]
     feasible = [c for c in eligible if fits(c)]
     if hbm_budget_gb is not None and eligible and not feasible:
         smallest = min(eligible, key=lambda c: c.mem_bytes)
@@ -793,8 +891,11 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         allow_bf16_hop2=mcfg.compress_hop2 in (True, "bf16", "int8"),
         allow_int8_hop2=mcfg.compress_hop2 == "int8",
         allow_int8_hop1=mcfg.hop1_wire_dtype == "int8",
+        # approx clip is an approximation permission like the lossy wires
+        allow_approx_clip=getattr(mcfg, "clip_mode", "exact") == "approx",
         hbm_budget_gb=getattr(mcfg, "hbm_budget_gb", None),
         local_batch=local_batch, seq=seq,
+        offload_opt=getattr(mcfg, "offload_opt", False),
     )
     g, s = plan.chosen.gather, plan.chosen.sync
     if g.wire_dtype == "fp32":
@@ -814,8 +915,10 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
                        if s.hop2_wire_dtype != "fp32" else False),
         hop1_wire_dtype=s.hop1_wire_dtype,
         prefetch_carry=g.prefetch_carry,
+        carry_offload=getattr(g, "carry_offload", "none"),
         boundary_schedule=plan.chosen.boundary,
         hop2_bucket_mb=plan.chosen.hop2_bucket_mb,
+        clip_mode=plan.chosen.clip_mode,
     )
     return resolved, plan
 
@@ -825,13 +928,17 @@ def resolve_scale(model, mcfg, *, data_extent: int, mode: str = "train",
                   extra_replication: int = 1):
     """The paper's §3.1 scale-aware partitioning rule for ``MiCSConfig``.
 
-    Returns ``(partition_size, prefetch_carry, mem_plan)`` — the *minimal*
+    Returns ``(partition_size, carry, mem_plan)`` — the *minimal*
     partition-group size over a data axis of ``data_extent`` whose
     predicted per-device footprint fits ``mcfg.hbm_budget_gb`` GiB, trying
-    the stored carry first and the remat mitigation second at every size
-    (a smaller group rescued by remat beats a larger stored one: smaller
-    groups keep collectives on faster tiers, which is the whole point of
-    scale-aware partitioning).  Raises
+    the stored carry first, the remat mitigation second and the
+    host-offloaded carry (``carry == "host"`` ->
+    ``MiCSConfig(carry_offload="host")``) third at every size (a smaller
+    group rescued by remat or host offload beats a larger stored one:
+    smaller groups keep collectives on faster tiers, which is the whole
+    point of scale-aware partitioning).  With ``mcfg.offload_opt`` the
+    m/v shards leave the footprint too, shrinking the minimal group
+    further.  Raises
     :class:`repro.core.memplan.MemoryBudgetError` when even the full data
     axis (ZeRO-3 scale) does not fit.  ``extra_replication`` covers the
     data-parallel axes the group cannot span (pods, the dp2 leftover of a
@@ -842,7 +949,7 @@ def resolve_scale(model, mcfg, *, data_extent: int, mode: str = "train",
     if getattr(mcfg, "hbm_budget_gb", None) is None:
         raise ValueError("resolve_scale needs MiCSConfig.hbm_budget_gb")
     gp, sp = policies_from_config(mcfg)
-    carries = ("stored", "remat") if gp.prefetch and mode == "train" \
+    carries = ("stored", "remat", "host") if gp.prefetch and mode == "train" \
         else ("stored",)
     return M.min_partition_size(
         model, data_extent=data_extent, hbm_budget_gb=mcfg.hbm_budget_gb,
@@ -850,4 +957,5 @@ def resolve_scale(model, mcfg, *, data_extent: int, mode: str = "train",
         local_batch=local_batch, seq=seq,
         boundary=mcfg.boundary_schedule,
         hop2_bucket_mb=mcfg.hop2_bucket_mb, carries=carries,
+        offload_opt=getattr(mcfg, "offload_opt", False) and mode == "train",
         extra_replication=extra_replication)

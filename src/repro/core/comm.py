@@ -47,6 +47,7 @@ from repro.core.topology import MODEL_AXIS, MiCSTopology, hierarchy_factors
 GATHER_TOPOLOGIES = ("flat", "inner_first", "outer_first")
 WIRE_DTYPES = ("fp32", "bf16", "int8")
 PREFETCH_CARRIES = ("stored", "remat")
+CARRY_OFFLOADS = ("none", "host")
 SYNC_MODES = ("2hop", "allreduce_slice")
 HOP1_WIRE_DTYPES = ("fp32", "bf16", "int8")
 HOP2_WIRE_DTYPES = ("fp32", "bf16", "int8")
@@ -67,6 +68,14 @@ class GatherPolicy:
     gather inside the backward instead (one extra all-gather per layer,
     O(layers x shard) HBM — the memory-planner mitigation knob,
     models/lm.py).
+
+    ``carry_offload='host'`` is the third residual strategy: keep the
+    stored carry's schedule (no backward re-gather) but stream each
+    layer's gathered buffer to host memory in the forward and back to
+    device in the backward (core/hostoffload.py) — O(layers x shard) HBM
+    like remat, priced as the link model's host tier instead of an extra
+    all-gather.  It composes with the *stored* carry only (it replaces
+    the stored residual's residency, not remat's re-gather).
     """
 
     topology: str = "inner_first"  # 'flat' | 'inner_first' | 'outer_first'
@@ -74,6 +83,7 @@ class GatherPolicy:
     inner: int | None = None       # intra-"node" factor for staged gathers
     prefetch: bool = True          # one-slot lookahead layer scan
     prefetch_carry: str = "stored"  # 'stored' | 'remat' backward residual
+    carry_offload: str = "none"    # 'none' | 'host' (d2h/h2d carry stream)
 
     def __post_init__(self):
         if self.topology not in GATHER_TOPOLOGIES:
@@ -84,6 +94,16 @@ class GatherPolicy:
             raise ValueError(
                 f"unknown prefetch_carry {self.prefetch_carry!r} "
                 f"(expected one of {PREFETCH_CARRIES})")
+        if self.carry_offload not in CARRY_OFFLOADS:
+            raise ValueError(
+                f"unknown carry_offload {self.carry_offload!r} "
+                f"(expected one of {CARRY_OFFLOADS})")
+        if self.carry_offload == "host" and not (
+                self.prefetch and self.prefetch_carry == "stored"):
+            raise ValueError(
+                "carry_offload='host' requires prefetch=True and "
+                "prefetch_carry='stored' (it offloads the stored carry's "
+                "residual; remat has no carried buffer to offload)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +164,7 @@ def policies_from_config(mcfg) -> tuple[GatherPolicy, SyncPolicy]:
         inner=mcfg.hierarchy_inner,
         prefetch=getattr(mcfg, "prefetch", True),
         prefetch_carry=getattr(mcfg, "prefetch_carry", "stored"),
+        carry_offload=getattr(mcfg, "carry_offload", "none"),
     )
     hop2 = mcfg.compress_hop2  # bool (legacy) or wire-dtype string
     if hop2 is True:
@@ -187,6 +208,8 @@ class CommEngine:
             quantized=False, seeded=True)
         self._quant_gather_vjp_seeded = self._build_gather_vjp(
             quantized=True, seeded=True)
+        self._host_stash = None     # lazy (hostoffload.HostStash)
+        self._carry_tags: dict = {}  # pool name -> stash tag
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -206,8 +229,41 @@ class CommEngine:
         return self.gather_policy.prefetch_carry
 
     @property
+    def carry_offload(self) -> str:
+        return self.gather_policy.carry_offload
+
+    @property
     def partition_size(self) -> int:
         return self.topo.partition_size
+
+    @property
+    def host_stash(self):
+        """Lazy host-memory stash bound to this topology's mesh — the
+        d2h/h2d stream backing ``carry_offload='host'`` and the offloaded
+        optimizer moments (core/hostoffload.py)."""
+        if self._host_stash is None:
+            from repro.core.hostoffload import HostStash
+
+            self._host_stash = HostStash(
+                tuple(zip(self.topo.mesh.axis_names,
+                          self.topo.mesh.devices.shape)))
+        return self._host_stash
+
+    def carry_tag(self, pool_name: str) -> int:
+        """Stable per-engine stash tag for a pool's offloaded carry."""
+        from repro.core.hostoffload import TAG_CARRY_BASE
+
+        if pool_name not in self._carry_tags:
+            self._carry_tags[pool_name] = TAG_CARRY_BASE + len(self._carry_tags)
+        return self._carry_tags[pool_name]
+
+    def gather_out_dtype(self):
+        """Dtype of :meth:`gather_flat`'s full buffer (the wire dtype for
+        float wires, the compute dtype for the int8 wire)."""
+        gp = self.gather_policy
+        if gp.wire_dtype == "int8":
+            return jnp.dtype(self.compute_dtype)
+        return jnp.dtype(_WIRE_JNP[gp.wire_dtype])
 
     def describe(self) -> dict:
         """Static policy record (dry-run artifacts, BENCH json)."""
@@ -372,6 +428,26 @@ class CommEngine:
 
     def gather(self, pool, row, *, seed=None) -> dict[str, jax.Array]:
         return self.unflatten(pool, self.gather_flat(row, seed=seed))
+
+    def gather_flat_adjoint(self, ct: jax.Array, *, seed=None) -> jax.Array:
+        """The standalone hop-1 adjoint of :meth:`gather_flat`: full-buffer
+        cotangent in, fp32 shard cotangent out.
+
+        Composes exactly what autodiff of ``gather_flat`` composes —
+        the custom-VJP backward (:meth:`_adjoint`, including the bf16/int8
+        hop-1 wire variants) plus the transpose of the outer wire-dtype
+        cast back to the fp32 row — *without* re-running the gather
+        forward.  The host-offload carry's hand-rolled backward
+        (models/lm.py) needs precisely this: it already holds the full
+        buffer (streamed back from the host), so ``jax.vjp`` of the gather
+        would re-issue the all-gather for nothing.
+        """
+        gp = self.gather_policy
+        if gp.wire_dtype == "int8":
+            if self.topo.partition_size == 1:   # forward was a pure cast
+                return ct.astype(jnp.float32)
+            return self._adjoint(ct.astype(jnp.float32), seed=seed)
+        return self._adjoint(ct, seed=seed).astype(jnp.float32)
 
     # -- gradient synchronization ------------------------------------------
     def hop1_reduce_scatter(self, g: jax.Array) -> jax.Array:

@@ -1,0 +1,171 @@
+"""Host-memory stash: the d2h/h2d leg of ``carry_offload="host"`` and
+``offload_opt=True`` (ROADMAP "Fully-overlapped step").
+
+MiCS §3.1 sizes the partition group from what must *reside* in HBM.  Two
+of the largest residents are pure between-use storage: the prefetch
+carry's gathered flat buffers (written in the forward, read once in the
+backward) and the AdamW ``m``/``v`` shards (read/written once per
+boundary).  Neither is touched by compute between those points, so both
+can live in host memory, streamed down/up around their single use — the
+memory planner (core/memplan.py) then subtracts them from the HBM
+footprint and ``autotune.resolve_scale`` can fit a larger model per
+device than remat alone.
+
+The stash is a host-side keyed store driven by **ordered
+``io_callback``s**: ``put`` copies a device array into a process-global
+dict, ``get`` streams it back (optionally popping, optionally
+zero-filling on miss — the lazy ``m``/``v`` init).  Keys are
+``(namespace, tag, slot, device_index)`` so concurrent engines, pools,
+layers and devices never collide; ``device_index`` is folded from the
+mesh axis indices *inside* shard_map, so each device owns its slice.
+``ordered=True`` serializes the callbacks within a step, which is what
+makes put-then-get across the forward/backward boundary well-defined.
+
+On an accelerator backend the same structure would be expressed with
+``jax.device_put`` to a ``pinned_host``-memory-kind sharding (zero-copy
+DMA streams); the CPU backend used by the harnesses exposes only
+``unpinned_host``, so the io_callback form is the portable mechanism —
+the *pricing* (the link model's host tier, core/linkmodel.py) is the
+same either way.
+
+Checkpointing: with ``offload_opt=True`` the optimizer moments live here,
+not in the on-device state dict — :func:`export_stash` /
+:func:`import_stash` round-trip them for save/restore.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import io_callback
+
+# process-global store: (namespace, tag, slot, device_index) -> np.ndarray
+_STASH: dict = {}
+_NAMESPACES = itertools.count()
+
+# well-known tags (slots are mode-defined: pool index, bucket index, layer)
+TAG_M = 1              # AdamW first moment shards (offload_opt)
+TAG_V = 2              # AdamW second moment shards (offload_opt)
+TAG_CARRY_BASE = 16    # + per-pool ordinal: prefetch-carry buffers
+
+# Restored-checkpoint sentinel namespace: live namespaces are a process-local
+# counter, so entries imported from a checkpoint land under -1 and ``get``
+# falls back to it on a miss (migrating the entry into the live key).  This
+# makes restore namespace-agnostic — no coordination between the
+# checkpointer and whichever CommEngine the restored step uses.
+CKPT_NAMESPACE = -1
+
+
+class HostStash:
+    """One namespace of the process-global host store, bound to a mesh.
+
+    ``mesh_axes`` is a tuple of ``(axis_name, size)`` pairs in mesh order;
+    :meth:`device_index` linearizes this device's coordinate from them
+    (must be called inside shard_map over that mesh).
+    """
+
+    def __init__(self, mesh_axes):
+        self.namespace = next(_NAMESPACES)
+        self.axes = tuple((str(n), int(s)) for n, s in mesh_axes)
+
+    def device_index(self) -> jax.Array:
+        idx = jnp.int32(0)
+        for name, size in self.axes:
+            idx = idx * jnp.int32(size) + lax.axis_index(name).astype(jnp.int32)
+        return idx
+
+    def _key(self, tag, slot) -> jax.Array:
+        return jnp.stack([
+            jnp.int32(self.namespace), jnp.int32(tag),
+            jnp.asarray(slot, jnp.int32), self.device_index(),
+        ])
+
+    def put(self, tag: int, slot, x: jax.Array, *,
+            ordered: bool = True) -> jax.Array:
+        """Store ``x`` at (tag, slot) for this device (the d2h stream).
+
+        Returns an int32 token.  ``ordered=True`` sequences the call on
+        the per-device effect token — required when a later ``get`` has no
+        data dependency on this put (the carry path's forward-put /
+        backward-get pair).  Pass ``ordered=False`` when dataflow already
+        orders the pair (the boundary's get -> update -> put chain):
+        ordered callbacks serialize against the step's collectives and can
+        rendezvous-deadlock the multi-device CPU runtime when interleaved
+        with psums at the boundary.
+        """
+
+        def cb(key, val):
+            # Store WITHOUT forcing materialization: jax's io_callback impl
+            # hands ``val`` over as a (possibly still-pending) CPU-device
+            # array, and ``np.asarray`` here would wait for it *inside* the
+            # callback — on a thread-starved host runtime that wait
+            # deadlocks against the step's collective rendezvous (every
+            # other device is parked in ITS put callback).  Conversion
+            # happens at get/export time, when the value has long
+            # materialized.
+            _STASH[tuple(int(k) for k in np.asarray(key))] = val
+            return np.int32(0)
+
+        return io_callback(cb, jax.ShapeDtypeStruct((), jnp.int32),
+                           self._key(tag, slot), x, ordered=ordered)
+
+    def get(self, tag: int, slot, shape, dtype, *, or_zeros: bool = False,
+            pop: bool = True, ordered: bool = True) -> jax.Array:
+        """Fetch the array at (tag, slot) back to device (the h2d stream).
+
+        ``pop=True`` releases the host copy (single-use carries);
+        ``or_zeros=True`` returns zeros on a missing key — the lazy
+        zero-init of offloaded optimizer moments on step 0.  See
+        :meth:`put` for the ``ordered`` contract.
+        """
+        shape = tuple(int(d) for d in shape)
+        np_dtype = np.dtype(jnp.dtype(dtype).name)
+
+        def cb(key):
+            k = tuple(int(v) for v in np.asarray(key))
+            val = _STASH.pop(k, None) if pop else _STASH.get(k)
+            if val is None:        # checkpoint-restored entry?
+                kk = (CKPT_NAMESPACE,) + k[1:]
+                val = _STASH.pop(kk, None) if pop else _STASH.get(kk)
+            if val is None:
+                if or_zeros:
+                    return np.zeros(shape, np_dtype)
+                raise KeyError(f"host stash miss: {k}")
+            return np.asarray(val)    # materializes lazily-stored puts
+
+        return io_callback(cb, jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
+                           self._key(tag, slot), ordered=ordered)
+
+
+# ---------------------------------------------------------------------------
+# host-side management (tests, checkpointing)
+# ---------------------------------------------------------------------------
+
+def stash_size() -> int:
+    return len(_STASH)
+
+def stash_clear() -> None:
+    _STASH.clear()
+
+
+def export_stash(namespace: int | None = None) -> dict:
+    """Snapshot (a namespace of) the stash — the offloaded-moment half of a
+    checkpoint when ``offload_opt=True``."""
+    return {k: np.asarray(v).copy() for k, v in _STASH.items()
+            if namespace is None or k[0] == namespace}
+
+
+def import_stash(entries: dict, *, as_checkpoint: bool = False) -> None:
+    """Load entries back into the stash.  ``as_checkpoint=True`` rewrites
+    every key's namespace to :data:`CKPT_NAMESPACE` so the restored step's
+    engine finds them through ``get``'s fallback regardless of which live
+    namespace it was assigned."""
+    for k, v in entries.items():
+        k = tuple(int(x) for x in k)
+        if as_checkpoint:
+            k = (CKPT_NAMESPACE,) + k[1:]
+        _STASH[k] = np.asarray(v).copy()

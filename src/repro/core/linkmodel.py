@@ -23,6 +23,14 @@ the paper's analysis uses (§2.3, Fig 2) and enough to reproduce its
 flat-vs-hierarchical crossovers; finer hierarchies can be expressed by
 registering custom profiles per pool.
 
+A third, non-network tier prices the device<->host link (PCIe / DMA): the
+``host`` Link costs the d2h/h2d streams of ``carry_offload='host'`` and
+``offload_opt=True`` (core/hostoffload.py) in the same α-β units, so the
+autotuner can weigh "offload the carry and shrink the partition group"
+against the network cost of the bigger group — the §3.1 scale-aware trade
+extended to host memory.  Host transfers are point-to-point, not rings:
+cost one stream of n bytes as ``alpha + n / bandwidth`` (``xfer_time``).
+
 This module is dependency-free (no jax) so every layer of the tree can
 import it without cycles.
 
@@ -76,11 +84,16 @@ class LinkProfile:
     hbm_bw: float
     hbm_bytes: int
     description: str = ""
+    # device<->host (PCIe/DMA) tier; None falls back to DEFAULT_HOST_LINK so
+    # profiles predating the host tier keep working unchanged.
+    host: Link | None = None
 
     def __post_init__(self):
         if self.node_size < 1:
             raise ValueError(f"node_size must be >= 1, got {self.node_size}")
-        for tier in (self.intra, self.inter):
+        tiers = (self.intra, self.inter) + (
+            (self.host,) if self.host is not None else ())
+        for tier in tiers:
             if tier.bandwidth <= 0:
                 raise ValueError(f"{self.name}: non-positive bandwidth")
 
@@ -90,6 +103,8 @@ class LinkProfile:
             return self.intra
         if tier == "inter":
             return self.inter
+        if tier == "host":
+            return self.host if self.host is not None else DEFAULT_HOST_LINK
         raise ValueError(f"unknown tier {tier!r}")
 
     def group_tier(self, positions) -> str:
@@ -116,6 +131,15 @@ class LinkProfile:
         """Device-local copy (the paper's Fig-5 chunk-reorder stage)."""
         return nbytes / self.local_copy_bw
 
+    def xfer_time(self, tier: str, nbytes: float, events: int = 1) -> float:
+        """Point-to-point stream time: ``events`` transfers totalling
+        ``nbytes`` over ``tier`` — the host-tier unit (one α per d2h/h2d
+        issue, no ring factor; each device owns its own PCIe lane)."""
+        if nbytes <= 0 and events <= 0:
+            return 0.0
+        link = self.link(tier)
+        return events * link.alpha + nbytes / link.bandwidth
+
     def hbm_time(self, nbytes: float) -> float:
         """Time to stream ``nbytes`` through HBM — the unit the cost model
         prices memory-bound boundary compute in: the hop-2 pipeline's
@@ -128,6 +152,10 @@ class LinkProfile:
 # ---------------------------------------------------------------------------
 # named profiles
 # ---------------------------------------------------------------------------
+
+# Fallback device<->host link for profiles that do not pin one: one PCIe3
+# x16-class lane per device (~16 GB/s sustained), ~5 µs per DMA issue.
+DEFAULT_HOST_LINK = Link(bandwidth=16 * GB, alpha=5e-6)
 
 # TPU v5e: 50 GB/s ICI per link within a pod; the inter-pod DCI modeled as a
 # scarce 6.25 GB/s link per pod boundary (assignment constants, previously
@@ -142,6 +170,7 @@ V5E = LinkProfile(
     hbm_bw=819 * GB,
     hbm_bytes=16 * GIB,
     description="TPU v5e pod: 50 GB/s ICI per link, 6.25 GB/s DCI per pod hop",
+    host=Link(bandwidth=32 * GB, alpha=5e-6),   # PCIe4-class host DMA
 )
 
 # AWS p3dn.24xlarge (the paper's measured cluster): 8 V100s per node on
@@ -157,6 +186,7 @@ EFA_100G = LinkProfile(
     hbm_bw=900 * GB,
     hbm_bytes=32 * GIB,
     description="AWS p3dn: 8xV100 NVLink nodes, 100 Gbps EFA (paper anchor)",
+    host=Link(bandwidth=16 * GB, alpha=5e-6),   # PCIe3 x16 per GPU
 )
 
 # AWS p4d.24xlarge-style follow-on: same node shape, 400 Gbps EFA.
@@ -170,6 +200,7 @@ EFA_400G = LinkProfile(
     hbm_bw=1555 * GB,
     hbm_bytes=40 * GIB,
     description="AWS p4d-style: NVLink nodes, 400 Gbps EFA",
+    host=Link(bandwidth=32 * GB, alpha=5e-6),   # PCIe4 x16 per GPU
 )
 
 PROFILES: dict[str, LinkProfile] = {
@@ -204,6 +235,8 @@ def custom_profile(
     node_size: int,
     alpha_intra: float = 1e-6,
     alpha_inter: float = 10e-6,
+    host_bw: float | None = None,
+    alpha_host: float = 5e-6,
     local_copy_bw: float = 819 * GB,
     peak_flops: float = V5E.peak_flops,
     hbm_bw: float = V5E.hbm_bw,
@@ -217,6 +250,8 @@ def custom_profile(
         name=name,
         intra=Link(bandwidth=intra_bw, alpha=alpha_intra),
         inter=Link(bandwidth=inter_bw, alpha=alpha_inter),
+        host=(Link(bandwidth=host_bw, alpha=alpha_host)
+              if host_bw is not None else None),
         node_size=node_size,
         local_copy_bw=local_copy_bw,
         peak_flops=peak_flops,

@@ -131,6 +131,7 @@ def predict_footprint(
     seq: int = 0,
     boundary: str = "bucketed",
     hop2_bucket_mb: float = 32.0,
+    offload_opt: bool = False,
 ) -> MemPlan:
     """Per-device HBM footprint of one training/serving step.
 
@@ -139,6 +140,16 @@ def predict_footprint(
     activation-checkpoint and logits terms; pass 0 to price model states
     and communication buffers only (what ``resolve_config`` does — the
     dry-run passes the real shapes).  All byte counts are per device.
+
+    Host offload shifts bytes out of this budget: with
+    ``gather.carry_offload='host'`` the stored prefetch carry's
+    O(stack x flat_len) residual leaves HBM (only the rotated shard copy
+    and a transient full buffer remain, same as remat), and with
+    ``offload_opt=True`` the fp32 ``m``/``v`` shards leave the donated
+    arguments entirely (2 x state shard bytes), replaced by a transient
+    staging term for the shards streamed back during the boundary.  The
+    *time* cost of those streams is priced by the autotuner against the
+    link model's ``host`` tier — this module only accounts bytes.
     """
     p = max(int(topo.partition_size), 1)
     repl = max(int(getattr(topo, "replication_degree", 1)), 1)
@@ -151,8 +162,10 @@ def predict_footprint(
               for name, (stack, _tp, flat_len) in shapes.items()}
     s4 = float(sum(shard4.values()))          # one fp32 state copy / device
 
-    # -- arguments (exact): fp32 params + m + v shards, step scalar, batch --
-    args = 3.0 * s4 + 4.0 if train else s4
+    # -- arguments (exact): fp32 params (+ m + v unless host-offloaded)
+    # shards, step scalar, batch --
+    state_copies = 1.0 if offload_opt else 3.0
+    args = state_copies * s4 + 4.0 if train else s4
     if train and local_batch and seq:
         # tokens + targets (int32) + mask (f32), stacked over micro-steps
         args += micro_steps * local_batch * seq * 12.0
@@ -200,15 +213,19 @@ def predict_footprint(
     # output and fall back to the stored carry even under remat (a custom
     # VJP may not close over a gradient-carrying enc_out), so they are
     # priced as stored — the budget gate must not under-predict them.
+    # Host offload ('carry_offload') prices like remat — the stacked
+    # residual streams to host memory, leaving the rolled shard copy and
+    # one transient full buffer — and shares remat's enc-dec fallback
+    # (decoder pools keep the stored carry, models/lm.py routing).
     cfg = getattr(model, "cfg", None)
     family = getattr(cfg, "family", None)
+    offload_carry = getattr(gather, "carry_offload", "none") == "host"
     for name, (stack, _tp, flat_len) in shapes.items():
         if not (prefetching and name in scanned and stack > 1):
             continue
         rolled = stack * math.ceil(flat_len / p) * 4
-        remat = (gather.prefetch_carry == "remat"
-                 and not (family == "encdec" and not name.startswith("enc")))
-        if remat:
+        eligible = not (family == "encdec" and not name.startswith("enc"))
+        if eligible and (gather.prefetch_carry == "remat" or offload_carry):
             add("prefetch_carry", rolled + flat_len * cb)
         else:
             add("prefetch_carry", stack * flat_len * 4 + rolled)
@@ -235,6 +252,17 @@ def predict_footprint(
     # -- qgZ hop-1 scratch --------------------------------------------------
     if sync.hop1_wire_dtype == "int8" and p > 1:
         add("qgz_scratch", max_flat * QGZ_SCRATCH_BYTES_PER_ELEM)
+
+    # -- host-offloaded optimizer staging ----------------------------------
+    # The m/v shards of the pool being updated stream back for the AdamW
+    # update (core/schedule.py fetches per pool under the exact clip, per
+    # bucket under approx).  They add NO temp bytes: the fetched moments
+    # land after the boundary's reduced-gradient buffers retire, and XLA's
+    # buffer assigner reuses those slots (verified against
+    # memory_analysis() in tests/memplan_harness.py::offload_lowers_peak —
+    # pricing a 2x-max-shard staging term there overshoots the compiled
+    # temps by exactly that amount), so offload_opt only shrinks the
+    # argument bytes above.
 
     return MemPlan(components=comp, args_bytes=args, mode=mode)
 
@@ -265,17 +293,21 @@ def min_partition_size(
     boundary: str = "bucketed",
     hop2_bucket_mb: float = 32.0,
     carries: tuple = ("stored",),
+    offload_opt: bool = False,
     extra_replication: int = 1,
 ) -> tuple[int, str, MemPlan]:
     """The paper's scale-aware partitioning rule, analytically.
 
     Walks partition-group sizes ascending (divisors of ``data_extent`` —
     the mesh axis the partition group is carved from) and returns the
-    first ``(p, prefetch_carry, plan)`` whose predicted per-device
-    footprint fits ``hbm_budget_gb`` GiB — the *minimal* group that fits,
-    trying each entry of ``carries`` in order at every size (pass
-    ``("stored", "remat")`` to let the remat mitigation rescue a smaller
-    group before growing it).  ``extra_replication`` multiplies the
+    first ``(p, carry, plan)`` whose predicted per-device footprint fits
+    ``hbm_budget_gb`` GiB — the *minimal* group that fits, trying each
+    entry of ``carries`` in order at every size (pass
+    ``("stored", "remat", "host")`` to let the remat and host-offload
+    mitigations rescue a smaller group before growing it; ``"host"``
+    means the stored carry streamed to host memory,
+    ``GatherPolicy.carry_offload='host'``, and is skipped when the gather
+    policy does not prefetch).  ``extra_replication`` multiplies the
     replication degree for data-parallel axes the group cannot span (the
     pod axis of a multi-pod mesh, the dp2 leftover of tp < model axis) so
     hop-2 staging is priced even when p == data_extent.  Raises
@@ -289,11 +321,18 @@ def min_partition_size(
             partition_size=p,
             replication_degree=(data_extent // p) * max(extra_replication, 1))
         for carry in carries:
-            g2 = dataclasses.replace(gather, prefetch_carry=carry)
+            if carry == "host":
+                if not gather.prefetch:
+                    continue
+                g2 = dataclasses.replace(
+                    gather, prefetch_carry="stored", carry_offload="host")
+            else:
+                g2 = dataclasses.replace(
+                    gather, prefetch_carry=carry, carry_offload="none")
             plan = predict_footprint(
                 model, grid, g2, sync, micro_steps=micro_steps, mode=mode,
                 local_batch=local_batch, seq=seq, boundary=boundary,
-                hop2_bucket_mb=hop2_bucket_mb)
+                hop2_bucket_mb=hop2_bucket_mb, offload_opt=offload_opt)
             if best is None or plan.total_bytes < best[2].total_bytes:
                 best = (p, carry, plan)
             if plan.total_bytes <= budget:

@@ -41,7 +41,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.autotune import resolve_config
 from repro.core.comm import CommEngine
-from repro.core.schedule import BOUNDARY_SCHEDULES, apply_boundary, plan_boundary
+from repro.core.schedule import (
+    BOUNDARY_SCHEDULES, CLIP_MODES, apply_boundary, plan_boundary,
+)
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.models import layers as L
 from repro.models import lm
@@ -87,13 +89,18 @@ class MiCSConfig:
     link_profile: Any = "v5e"           # profile name or LinkProfile instance
     boundary_schedule: str = "bucketed"  # 'serial' (reference) | 'bucketed'
     hop2_bucket_mb: float = 32.0        # fixed-byte hop-2 pipeline bucket
+    clip_mode: str = "exact"            # 'exact' global-norm barrier |
+    #                                     'approx' one-bucket-stale pipeline
+    carry_offload: str = "none"         # 'none' | 'host' prefetch-carry
+    #                                     d2h/h2d stream (core/hostoffload.py)
+    offload_opt: bool = False           # AdamW m/v shards live in host memory
     hbm_budget_gb: float | None = None  # per-device HBM budget (GiB) the
     #                                     memory planner gates policies on
 
     def __post_init__(self):
         from repro.core.comm import (
-            GRAD_ROUNDINGS, HOP1_WIRE_DTYPES, HOP2_WIRE_DTYPES,
-            PREFETCH_CARRIES,
+            CARRY_OFFLOADS, GRAD_ROUNDINGS, HOP1_WIRE_DTYPES,
+            HOP2_WIRE_DTYPES, PREFETCH_CARRIES,
         )
 
         if self.policy not in ("manual", "auto"):
@@ -106,6 +113,22 @@ class MiCSConfig:
         if self.hop2_bucket_mb <= 0:
             raise ValueError(
                 f"hop2_bucket_mb must be > 0, got {self.hop2_bucket_mb}")
+        if self.clip_mode not in CLIP_MODES:
+            raise ValueError(f"unknown clip_mode {self.clip_mode!r} "
+                             f"(expected one of {CLIP_MODES})")
+        if self.clip_mode == "approx" and self.boundary_schedule != "bucketed":
+            raise ValueError(
+                "clip_mode='approx' requires boundary_schedule='bucketed' "
+                "(the approximate clip is a property of the bucket pipeline)")
+        if self.carry_offload not in CARRY_OFFLOADS:
+            raise ValueError(
+                f"unknown carry_offload {self.carry_offload!r} "
+                f"(expected one of {CARRY_OFFLOADS})")
+        if self.carry_offload == "host" and not (
+                self.prefetch and self.prefetch_carry == "stored"):
+            raise ValueError(
+                "carry_offload='host' requires prefetch=True and "
+                "prefetch_carry='stored' (it offloads the stored carry)")
         if self.prefetch_carry not in PREFETCH_CARRIES:
             raise ValueError(
                 f"unknown prefetch_carry {self.prefetch_carry!r} "
@@ -132,31 +155,42 @@ class MiCSConfig:
 # state containers + shardings
 # ---------------------------------------------------------------------------
 
-def init_state_shapes(model: ModelDef) -> dict[str, Any]:
-    """Global ShapeDtypeStructs for params/m/v/step (no allocation)."""
+def init_state_shapes(model: ModelDef, *,
+                      offload_opt: bool = False) -> dict[str, Any]:
+    """Global ShapeDtypeStructs for params/m/v/step (no allocation).
+
+    With ``offload_opt=True`` the AdamW moments live in the host stash
+    (core/hostoffload.py), not the device state: ``m``/``v`` are absent.
+    """
     shapes = model.global_flat_shapes()
     flat = {
         name: jax.ShapeDtypeStruct(shape, jnp.float32)
         for name, shape in shapes.items()
     }
-    return {
+    out = {
         "params": flat,
-        "m": dict(flat),
-        "v": dict(flat),
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
+    if not offload_opt:
+        out["m"], out["v"] = dict(flat), dict(flat)
+    return out
 
 
-def state_pspecs(model: ModelDef, topo: MiCSTopology) -> dict[str, Any]:
+def state_pspecs(model: ModelDef, topo: MiCSTopology, *,
+                 offload_opt: bool = False) -> dict[str, Any]:
     pool_spec = P(None, MODEL_AXIS, topo.partition_axes)
     flat = {name: pool_spec for name in model.global_flat_shapes()}
-    return {"params": flat, "m": dict(flat), "v": dict(flat), "step": P()}
+    out = {"params": flat, "step": P()}
+    if not offload_opt:
+        out["m"], out["v"] = dict(flat), dict(flat)
+    return out
 
 
-def state_shardings(model: ModelDef, topo: MiCSTopology):
+def state_shardings(model: ModelDef, topo: MiCSTopology, *,
+                    offload_opt: bool = False):
     return jax.tree.map(
         lambda spec: NamedSharding(topo.mesh, spec),
-        state_pspecs(model, topo),
+        state_pspecs(model, topo, offload_opt=offload_opt),
         is_leaf=lambda x: isinstance(x, P),
     )
 
@@ -176,7 +210,8 @@ def batch_pspecs(model: ModelDef, topo: MiCSTopology, *, micro: bool = True):
     return base
 
 
-def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
+def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0, *,
+               offload_opt: bool = False):
     """Materialize sharded fp32 state (for runnable-scale models).
 
     The init is computed on a single device and distributed with
@@ -188,7 +223,7 @@ def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
     initial state a pure function of (model, seed), independent of topology.
     """
     shapes = model.global_flat_shapes()
-    shardings = state_shardings(model, topo)
+    shardings = state_shardings(model, topo, offload_opt=offload_opt)
 
     def _init(key):
         import zlib
@@ -201,13 +236,13 @@ def init_state(model: ModelDef, topo: MiCSTopology, seed: int = 0):
             keys = jax.random.split(pool_key, stack * tp).reshape(stack, tp)
             rows = jax.vmap(jax.vmap(pool.layout.init_flat))(keys)
             flat[pool.name] = rows
-        zeros = jax.tree.map(jnp.zeros_like, flat)
-        return {
-            "params": flat,
-            "m": zeros,
-            "v": jax.tree.map(jnp.zeros_like, flat),
-            "step": jnp.int32(0),
-        }
+        out = {"params": flat, "step": jnp.int32(0)}
+        if not offload_opt:
+            # Offloaded moments zero-init lazily in the host stash instead
+            # (HostStash.get(..., or_zeros=True) on first boundary).
+            out["m"] = jax.tree.map(jnp.zeros_like, flat)
+            out["v"] = jax.tree.map(jnp.zeros_like, flat)
+        return out
 
     state = jax.jit(_init)(jax.random.key(seed))
     return jax.device_put(state, shardings)
@@ -235,7 +270,8 @@ def build_train_step(
     mcfg, _ = resolve_config(mcfg, model, topo, mode="train")
     comm = CommEngine.from_config(topo, mcfg)
     boundary = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
-                             bucket_mb=mcfg.hop2_bucket_mb)
+                             bucket_mb=mcfg.hop2_bucket_mb,
+                             clip_mode=mcfg.clip_mode)
     ctx = L.Ctx(mode="train", tp=topo.model_size, tp_axis=MODEL_AXIS,
                 compute_dtype=jnp.dtype(mcfg.gather_dtype),
                 scores_bf16=mcfg.scores_bf16, mlstm_chunk=mcfg.mlstm_chunk)
@@ -270,7 +306,7 @@ def build_train_step(
         # identical either way (tests/schedule_harness.py).
         new_params, new_m, new_v, gnorm = apply_boundary(
             boundary, comm, model, topo, oc, state, grads, denom,
-            seed=state["step"])
+            seed=state["step"], offload_opt=mcfg.offload_opt)
         step = state["step"]
 
         metrics = {
@@ -278,12 +314,12 @@ def build_train_step(
             "aux": lax.pmean(aux_sum / s, topo.data_axes),
             "grad_norm": gnorm,
         }
-        new_state = {
-            "params": new_params, "m": new_m, "v": new_v, "step": step + 1,
-        }
+        new_state = {"params": new_params, "step": step + 1}
+        if not mcfg.offload_opt:
+            new_state["m"], new_state["v"] = new_m, new_v
         return new_state, metrics
 
-    st_specs = state_pspecs(model, topo)
+    st_specs = state_pspecs(model, topo, offload_opt=mcfg.offload_opt)
     b_specs = batch_pspecs(model, topo)
     sharded = shard_map(
         sharded_step, mesh=topo.mesh,

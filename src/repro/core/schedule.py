@@ -34,6 +34,48 @@ The denominator (``micro_steps * data_parallel``) and the clip factor are
 folded into one ``grad_scale`` passed to ``adamw_shard_update`` — no
 standalone full-gradient-tree division pass on either schedule.
 
+**The approximate-clip pipeline** (``clip_mode="approx"``).  The exact
+clip's single barrier — no update before the complete norm — is the last
+serially-exposed dependency of the boundary.  Approx mode removes it:
+bucket *k*'s AdamW shard update runs under bucket *k+1*'s in-flight hop-2
+using the **running** squared norm through bucket *k−1* (a one-bucket-
+stale clip factor), so the whole boundary becomes one software pipeline
+``issue hop-2(k) → AdamW(k−1, stale norm) → fold psum(k−1)`` with no
+global barrier.  The drain step folds the final bucket's partial *first*,
+so the last bucket (and the reported ``grad_norm`` metric) sees the
+complete norm.  Degenerate guarantees: a one-bucket plan's only update is
+the drain's complete-norm update — the exact schedule's ordering; and
+whenever the clip is inactive (``gnorm <= clip_norm`` at every prefix —
+e.g. a huge ``clip_norm``), every prefix factor is exactly 1.0 and the
+update arithmetic is element-for-element the exact path's: the loss and
+``grad_norm`` trajectories are bitwise identical at any bucket count, and
+parameters agree to the final ulp (the pipelined program fuses the
+elementwise AdamW chain differently, so XLA may round its last op
+differently — tests/schedule_harness.py pins the tolerance).
+
+*Divergence bound.*  The running norm is a prefix of the full sum, so
+``gnorm_k <= gnorm`` and the stale factor ``c_k = min(1, C/gnorm_k)``
+over-estimates the exact ``c = min(1, C/gnorm)``: each bucket's applied
+gradient is the exact one scaled by ``c_k/c ∈ [1, gnorm/gnorm_k]`` — the
+update direction per bucket is unchanged, only under-clipped, and the
+applied step magnitude stays bounded by the Adam trust region (the
+update is ``lr``-bounded elementwise regardless of ``grad_scale``).  The
+discrepancy is largest for bucket 0 (factor ``min(1, C/gnorm)^-1``,
+clamped to 1 whenever clipping is inactive) and vanishes as the prefix
+grows; a tiny-LM convergence smoke (tests/schedule_harness.py) bounds the
+end-to-end effect — final loss within ``APPROX_CLIP_LOSS_RTOL`` of the
+exact reference with clipping engaged.
+
+**Host-offloaded optimizer shards** (``offload_opt=True``).  The AdamW
+``m``/``v`` shards are touched exactly once per boundary, so both
+schedules can stream them from host memory around the update
+(core/hostoffload.py: ordered-io_callback d2h/h2d stash, lazily
+zero-initialized) instead of keeping them HBM-resident — the state dict
+then carries only ``params``/``step`` and the memory planner subtracts
+``2 × 4`` bytes/element from the per-device footprint.  The params
+trajectory is bitwise unchanged (the fetched moments are bitwise the
+stored ones).
+
 **The int8 decompress leg** (qgZ follow-on).  With
 ``SyncPolicy.hop2_wire_dtype='int8'`` each hop-2 payload runs as a
 block-quantized all-reduce (``collectives.quantized_all_reduce``: int8 +
@@ -54,10 +96,17 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.flat_param import partition_buckets
+from repro.core.hostoffload import TAG_M, TAG_V
 from repro.core.topology import MODEL_AXIS, MiCSTopology
 from repro.optim.adamw import OptConfig, adamw_shard_update
 
 BOUNDARY_SCHEDULES = ("serial", "bucketed")
+CLIP_MODES = ("exact", "approx")
+
+# Convergence-smoke tolerance of the approx clip: the tiny-LM final loss
+# must sit within this relative tolerance of the exact reference
+# (tests/schedule_harness.py::approx_convergence — the documented bound).
+APPROX_CLIP_LOSS_RTOL = 0.05
 
 # fp32 gradient accumulator bytes per element — what a bucket's byte budget
 # is measured in (the wire payload may be narrower under bf16 hop-2).
@@ -86,11 +135,20 @@ class BoundaryPlan:
     bucket_mb: float
     shard_elems: dict                  # pool -> local grad elements
     buckets: tuple                     # BucketRef, canonical order
+    clip_mode: str = "exact"           # 'exact' barrier | 'approx' pipeline
 
     def __post_init__(self):
         if self.mode not in BOUNDARY_SCHEDULES:
             raise ValueError(f"unknown boundary schedule {self.mode!r} "
                              f"(expected one of {BOUNDARY_SCHEDULES})")
+        if self.clip_mode not in CLIP_MODES:
+            raise ValueError(f"unknown clip_mode {self.clip_mode!r} "
+                             f"(expected one of {CLIP_MODES})")
+        if self.clip_mode == "approx" and self.mode != "bucketed":
+            raise ValueError(
+                "clip_mode='approx' requires the bucketed boundary schedule "
+                "(the serial reference has no bucket pipeline to hide the "
+                "optimizer under)")
 
     @property
     def n_buckets(self) -> int:
@@ -121,6 +179,7 @@ class BoundaryPlan:
             per_pool[b.pool] = per_pool.get(b.pool, 0) + 1
         return {
             "mode": self.mode,
+            "clip_mode": self.clip_mode,
             "bucket_mb": self.bucket_mb,
             "n_buckets": self.n_buckets,
             "n_hop2_collectives": self.n_hop2_collectives,
@@ -131,13 +190,15 @@ class BoundaryPlan:
 
 
 def plan_boundary(model, topo: MiCSTopology, *, mode: str,
-                  bucket_mb: float) -> BoundaryPlan:
+                  bucket_mb: float, clip_mode: str = "exact") -> BoundaryPlan:
     """Bucketize every pool's local gradient shard into fixed-byte buckets.
 
     The same plan backs both schedules: the serial reference uses it only
     to order the squared-norm partials (so it stays bitwise comparable to
     the bucketed pipeline at any bucket size), the bucketed schedule
-    additionally issues one hop-2 collective per bucket.
+    additionally issues one hop-2 collective per bucket.  ``clip_mode``
+    selects the exact global-norm-clip barrier (the reference) or the
+    approximate one-bucket-stale clip pipeline (module docstring).
     """
     p = topo.partition_size
     shard_elems = {}
@@ -149,7 +210,8 @@ def plan_boundary(model, topo: MiCSTopology, *, mode: str,
         for lo, hi in partition_buckets(n, bucket_mb, GRAD_ITEMSIZE):
             buckets.append(BucketRef(pool.name, lo, hi))
     return BoundaryPlan(mode=mode, bucket_mb=float(bucket_mb),
-                        shard_elems=shard_elems, buckets=tuple(buckets))
+                        shard_elems=shard_elems, buckets=tuple(buckets),
+                        clip_mode=clip_mode)
 
 
 def _sq(bucket: jax.Array) -> jax.Array:
@@ -207,6 +269,139 @@ def _reduce_bucketed(plan: BoundaryPlan, comm, flat_grads: dict, seed=None):
     return reduced, sq_parts
 
 
+def _bucket_masks(pool, ref: BucketRef, shard_coord, shard_len: int):
+    """Decay/padding masks for one bucket of a pool's flattened shard.
+
+    The flattened ``[stack * shard_len]`` buffer broadcasts the per-shard
+    layout masks over stack rows, so flat index ``f`` maps to layout
+    position ``shard_coord*shard_len + (f % shard_len)`` — these are
+    exactly slices of ``decay_mask_for_shard``/``padding_mask_for_shard``,
+    which keeps the per-bucket AdamW bitwise equal to the sliced full-shard
+    update.
+    """
+    local = (ref.lo + jnp.arange(ref.elems, dtype=jnp.int32)) % shard_len
+    gidx = shard_coord * shard_len + local
+    dm = jnp.ones((ref.elems,), jnp.float32)
+    for lo, hi in pool.layout.nodecay_ranges():
+        if lo >= hi:
+            continue
+        dm = jnp.where((gidx >= lo) & (gidx < hi), 0.0, dm)
+    pm = (gidx < pool.layout.raw_len).astype(jnp.float32)
+    return dm, pm
+
+
+def _apply_boundary_approx(plan, comm, model, topo, oc, state, grads,
+                           denom, seed, offload_opt):
+    """The approximate-clip software pipeline (module docstring).
+
+    Per plan-order bucket *i*: issue bucket *i*'s hop-2, then (while it is
+    in flight) run bucket *i−1*'s AdamW with the clip factor from the
+    running squared norm through bucket *i−2*, then fold bucket *i−1*'s
+    psum into the running norm.  The drain folds the final bucket's psum
+    *before* its update, so the last bucket uses the complete norm, and a
+    one-bucket plan reduces to the exact path's ordering.  The returned
+    ``grad_norm`` metric is accumulated by the exact path's canonical
+    local left-fold + single psum, so the metric is bitwise identical to
+    the exact schedule's at any bucket count — only the *applied* clip
+    factors are stale.
+    """
+    flat_grads = {name: grads[name].reshape(-1) for name in plan.shard_elems}
+    shard_coord = comm.partition_coord()
+    pools = {p.name: p for p in model.all_pools()}
+    norm_axes = topo.partition_axes + (MODEL_AXIS,)
+    stash = comm.host_stash if offload_opt else None
+
+    flat_state = {}
+    for name in plan.shard_elems:
+        flat_state[name] = {
+            "p": state["params"][name].reshape(-1),
+            "m": None if offload_opt else state["m"][name].reshape(-1),
+            "v": None if offload_opt else state["v"][name].reshape(-1),
+            "shard_len": grads[name].shape[-1],
+        }
+    out = {name: {"p": [], "m": [], "v": []} for name in plan.shard_elems}
+
+    def update(i, ref, g_bucket, running_sq):
+        """Bucket ``ref``'s AdamW with the clip factor from ``running_sq``
+        (the stale prefix norm — or the complete one at the drain)."""
+        fs = flat_state[ref.pool]
+        gnorm_i = jnp.sqrt(running_sq) / denom
+        clip = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm_i, 1e-12))
+        grad_scale = clip / denom
+        p_in = lax.slice_in_dim(fs["p"], ref.lo, ref.hi, axis=0)
+        if offload_opt:
+            m_in = stash.get(TAG_M, i, (ref.elems,), jnp.float32,
+                             or_zeros=True, ordered=False)
+            v_in = stash.get(TAG_V, i, (ref.elems,), jnp.float32,
+                             or_zeros=True, ordered=False)
+        else:
+            m_in = lax.slice_in_dim(fs["m"], ref.lo, ref.hi, axis=0)
+            v_in = lax.slice_in_dim(fs["v"], ref.lo, ref.hi, axis=0)
+        dm, pm = _bucket_masks(pools[ref.pool], ref, shard_coord,
+                               fs["shard_len"])
+        p_new, m_new, v_new = adamw_shard_update(
+            p_in, g_bucket, m_in, v_in, state["step"], oc,
+            decay_mask=dm, pad_mask=pm, grad_scale=grad_scale)
+        out[ref.pool]["p"].append(p_new)
+        if offload_opt:
+            # Unordered: the put operand depends on the get via the AdamW
+            # update, so dataflow already sequences the pair; ordered
+            # callbacks here deadlock against the hop-2 psum rendezvous on
+            # the multi-device CPU runtime.  The tokens MUST reach the
+            # computation's outputs (folded into gnorm below): a put whose
+            # token is dropped stalls the runtime the same way.
+            put_toks.append(stash.put(TAG_M, i, m_new, ordered=False))
+            put_toks.append(stash.put(TAG_V, i, v_new, ordered=False))
+        else:
+            out[ref.pool]["m"].append(m_new)
+            out[ref.pool]["v"].append(v_new)
+
+    running_sq = jnp.float32(0.0)
+    sq_local = jnp.float32(0.0)   # exact path's canonical left-fold — the
+    #                               returned metric is bitwise identical to
+    #                               the exact schedule's grad_norm
+    put_toks = []
+    pending = None  # (bucket index, BucketRef, in-flight reduced bucket)
+    for i, ref in enumerate(plan.buckets):
+        raw = lax.slice_in_dim(flat_grads[ref.pool], ref.lo, ref.hi, axis=0)
+        in_flight = comm.hop2_bucketed(raw, salt=i, seed=seed)
+        if pending is not None:
+            j, pref, pbucket = pending
+            update(j, pref, pbucket, running_sq)   # stale: through bucket j-1
+            running_sq = running_sq + lax.psum(_sq(pbucket), norm_axes)
+            sq_local = sq_local + _sq(pbucket)
+        pending = (i, ref, in_flight)
+    if pending is not None:  # drain: complete norm for the final bucket
+        j, pref, pbucket = pending
+        running_sq = running_sq + lax.psum(_sq(pbucket), norm_axes)
+        sq_local = sq_local + _sq(pbucket)
+        update(j, pref, pbucket, running_sq)
+
+    gnorm = jnp.sqrt(lax.psum(sq_local, norm_axes)) / denom
+    if put_toks:    # keep the d2h puts live (value is always 0)
+        gnorm = gnorm + sum(put_toks).astype(jnp.float32) * 0.0
+
+    new_params, new_m, new_v = {}, {}, {}
+    for name in plan.shard_elems:
+        shape = grads[name].shape
+
+        def cat(bufs, shape=shape):
+            return (jnp.concatenate(bufs) if len(bufs) > 1
+                    else bufs[0]).reshape(shape)
+
+        if not out[name]["p"]:         # empty pool: nothing to update
+            new_params[name] = state["params"][name]
+            if not offload_opt:
+                new_m[name] = state["m"][name]
+                new_v[name] = state["v"][name]
+            continue
+        new_params[name] = cat(out[name]["p"])
+        if not offload_opt:
+            new_m[name] = cat(out[name]["m"])
+            new_v[name] = cat(out[name]["v"])
+    return new_params, new_m, new_v, gnorm
+
+
 def apply_boundary(
     plan: BoundaryPlan,
     comm,
@@ -217,18 +412,27 @@ def apply_boundary(
     grads: dict,
     denom: float,
     seed=None,
+    offload_opt: bool = False,
 ):
     """Run one gradient-accumulation boundary under ``plan``.
 
     ``grads`` holds per-pool fp32 accumulated gradient *sums* (local shards,
     ``[stack, 1, shard_len]``); ``denom`` is the mean divisor
     (``micro_steps * data_parallel``).  Returns
-    ``(new_params, new_m, new_v, grad_norm)`` with the global-norm clip
-    applied exactly — the norm is reduced from every bucket's partial
-    before any shard update issues.  ``seed`` (the traced step counter)
-    feeds the int8 hop-2 wire's stochastic-rounding dither; float wires
-    ignore it.
+    ``(new_params, new_m, new_v, grad_norm)``.  Under
+    ``plan.clip_mode='exact'`` the global-norm clip is a barrier — the norm
+    is reduced from every bucket's partial before any shard update issues;
+    ``'approx'`` pipelines each bucket's update under the next bucket's
+    hop-2 with a one-bucket-stale clip factor (module docstring).  ``seed``
+    (the traced step counter) feeds the int8 hop-2 wire's stochastic-
+    rounding dither; float wires ignore it.  ``offload_opt=True`` streams
+    the AdamW ``m``/``v`` shards through the host stash (lazy zero-init)
+    instead of the state dict — ``new_m``/``new_v`` come back empty and the
+    params trajectory is bitwise unchanged.
     """
+    if plan.mode == "bucketed" and plan.clip_mode == "approx":
+        return _apply_boundary_approx(plan, comm, model, topo, oc, state,
+                                      grads, denom, seed, offload_opt)
     flat_grads = {
         name: grads[name].reshape(-1) for name in plan.shard_elems
     }
@@ -248,17 +452,35 @@ def apply_boundary(
 
     # ---- AdamW on fp32 shards, clip scale folded in -----------------------
     shard_coord = comm.partition_coord()
+    stash = comm.host_stash if offload_opt else None
     new_params, new_m, new_v = {}, {}, {}
-    for pool in model.all_pools():
+    put_toks = []
+    for pool_idx, pool in enumerate(model.all_pools()):
         name = pool.name
         g = reduced[name].reshape(grads[name].shape)
         shard_len = g.shape[-1]
         start = shard_coord * shard_len
         dm = pool.layout.decay_mask_for_shard(start, shard_len)
         pm = pool.layout.padding_mask_for_shard(start, shard_len)
+        if offload_opt:
+            m_in = stash.get(TAG_M, pool_idx, g.shape, jnp.float32,
+                             or_zeros=True, ordered=False)
+            v_in = stash.get(TAG_V, pool_idx, g.shape, jnp.float32,
+                             or_zeros=True, ordered=False)
+        else:
+            m_in, v_in = state["m"][name], state["v"][name]
         p, m, v = adamw_shard_update(
-            state["params"][name], g, state["m"][name], state["v"][name],
+            state["params"][name], g, m_in, v_in,
             state["step"], oc, decay_mask=dm, pad_mask=pm,
             grad_scale=grad_scale)
-        new_params[name], new_m[name], new_v[name] = p, m, v
+        new_params[name] = p
+        if offload_opt:
+            # Unordered: dataflow (get -> AdamW -> put) sequences the pair;
+            # tokens fold into gnorm to stay live (_apply_boundary_approx).
+            put_toks.append(stash.put(TAG_M, pool_idx, m, ordered=False))
+            put_toks.append(stash.put(TAG_V, pool_idx, v, ordered=False))
+        else:
+            new_m[name], new_v[name] = m, v
+    if put_toks:
+        gnorm = gnorm + sum(put_toks).astype(jnp.float32) * 0.0
     return new_params, new_m, new_v, gnorm

@@ -131,8 +131,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
             sizing_model, mcfg, data_extent=16,
             mode="train" if spec["kind"] == "train" else "serve",
             extra_replication=extra_repl)
-        mcfg = dataclasses.replace(mcfg, prefetch_carry=carry)
-        print(f"memplan: p={partition_size} prefetch_carry={carry} "
+        if carry == "host":   # third strategy: stored carry streamed to host
+            mcfg = dataclasses.replace(mcfg, prefetch_carry="stored",
+                                       carry_offload="host")
+        else:
+            mcfg = dataclasses.replace(mcfg, prefetch_carry=carry)
+        print(f"memplan: p={partition_size} carry={carry} "
               f"({scale_plan.total_gb:.2f} GiB predicted vs budget "
               f"{mcfg.hbm_budget_gb:g} GiB)", flush=True)
     topo = make_mics_topology(
@@ -175,13 +179,15 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
     # hidden-vs-exposed hop-2 time for it (core/schedule.py, autotune).
     if spec["kind"] == "train":
         bplan = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
-                              bucket_mb=mcfg.hop2_bucket_mb)
+                              bucket_mb=mcfg.hop2_bucket_mb,
+                              clip_mode=mcfg.clip_mode)
         profile = get_profile(mcfg.link_profile)  # name or instance
         record["boundary"] = bplan.describe() | {
             "predicted": cost_hop2_schedule(
                 model, topo, profile, engine.sync_policy,
                 boundary=mcfg.boundary_schedule,
-                bucket_mb=mcfg.hop2_bucket_mb),
+                bucket_mb=mcfg.hop2_bucket_mb,
+                clip_mode=mcfg.clip_mode),
             "link_profile": profile.name,
         }
 
@@ -208,7 +214,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
     if spec["kind"] == "train":
         step = build_train_step(model, topo, mcfg,
                                 OptConfig(total_steps=1000))
-        state = init_state_shapes(model)
+        state = init_state_shapes(model, offload_opt=mcfg.offload_opt)
         batch = mics_train_inputs(model, spec["seq"], spec["global_batch"])
         lowered = step.lower(state, batch)
     elif spec["kind"] == "prefill":
@@ -250,7 +256,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
         mode="train" if spec["kind"] == "train" else "serve",
         local_batch=lb, seq=spec["seq"],
         boundary=mcfg.boundary_schedule,
-        hop2_bucket_mb=mcfg.hop2_bucket_mb)
+        hop2_bucket_mb=mcfg.hop2_bucket_mb,
+        offload_opt=mcfg.offload_opt)
     record["memplan"] = mem_plan.describe()
     record["memplan"]["hbm_budget_gb"] = mcfg.hbm_budget_gb
     if scale_plan is not None:
@@ -364,6 +371,24 @@ def main():
                          "re-issues the gather in the backward (one extra "
                          "all-gather per layer, O(layers x shard) HBM — the "
                          "memory planner's mitigation knob)")
+    ap.add_argument("--carry-offload", default="none",
+                    choices=["none", "host"],
+                    help="third residual strategy: stream the stored carry "
+                         "through host memory over the link model's host "
+                         "tier (d2h forward / h2d backward, "
+                         "core/hostoffload.py) — no backward re-gather and "
+                         "no O(layers x flat_len) HBM residency")
+    ap.add_argument("--offload-opt", action="store_true",
+                    help="host-offload the AdamW m/v shards around the "
+                         "boundary update: the on-device state keeps only "
+                         "params+step (memplan subtracts 8 bytes/element)")
+    ap.add_argument("--clip-mode", default="exact",
+                    choices=["exact", "approx"],
+                    help="boundary clip: 'exact' = barriered global-norm "
+                         "reference, 'approx' = bucket k's AdamW pipelined "
+                         "under bucket k+1's hop-2 with a one-bucket-stale "
+                         "clip factor (bucketed schedule only; under "
+                         "--policy auto this permits rather than forces)")
     ap.add_argument("--hbm-budget-gb", type=float, default=0,
                     help="per-device HBM budget in GiB for the memory "
                          "planner (core/memplan.py): picks the minimal "
@@ -402,6 +427,9 @@ def main():
                        else args.compress_hop2),
         prefetch=bool(args.prefetch),
         prefetch_carry=args.prefetch_carry,
+        carry_offload=args.carry_offload,
+        offload_opt=args.offload_opt,
+        clip_mode=args.clip_mode,
         policy=args.policy,
         link_profile=args.link_profile,
         boundary_schedule=args.boundary_schedule,

@@ -84,6 +84,26 @@ def main():
                          "'remat' re-gathers in the backward — one extra "
                          "all-gather per layer buys the residual down to "
                          "O(layers x shard); core/memplan.py prices both")
+    ap.add_argument("--carry-offload", default="none",
+                    choices=["none", "host"],
+                    help="third residual strategy: stream the stored carry "
+                         "through host memory (d2h in the forward, h2d in "
+                         "the backward, core/hostoffload.py) — no backward "
+                         "re-gather AND no O(layers x flat_len) HBM; priced "
+                         "on the link model's host tier")
+    ap.add_argument("--offload-opt", action="store_true",
+                    help="host-offload the AdamW m/v shards: the state dict "
+                         "keeps only params+step, moments stream through "
+                         "the host stash around the boundary update "
+                         "(bitwise-identical params trajectory)")
+    ap.add_argument("--clip-mode", default="exact",
+                    choices=["exact", "approx"],
+                    help="boundary global-norm clip: 'exact' is the "
+                         "barriered reference; 'approx' pipelines each "
+                         "bucket's AdamW under the next bucket's hop-2 "
+                         "with a one-bucket-stale clip factor "
+                         "(core/schedule.py; under --policy auto this "
+                         "permits rather than forces approx)")
     ap.add_argument("--hbm-budget-gb", type=float, default=0,
                     help="per-device HBM budget in GiB: the memory planner "
                          "gates --policy auto candidates on it and falls "
@@ -114,6 +134,9 @@ def main():
                       hop1_wire_dtype=args.hop1_wire_dtype,
                       prefetch=bool(args.prefetch),
                       prefetch_carry=args.prefetch_carry,
+                      carry_offload=args.carry_offload,
+                      offload_opt=args.offload_opt,
+                      clip_mode=args.clip_mode,
                       policy=args.policy,
                       link_profile=args.link_profile,
                       boundary_schedule=args.boundary_schedule,
@@ -123,15 +146,17 @@ def main():
     if plan is not None:
         print(plan.table())
     bplan = plan_boundary(model, topo, mode=mcfg.boundary_schedule,
-                          bucket_mb=mcfg.hop2_bucket_mb)
+                          bucket_mb=mcfg.hop2_bucket_mb,
+                          clip_mode=mcfg.clip_mode)
     profile = get_profile(mcfg.link_profile)  # name or instance
     hop2 = cost_hop2_schedule(
         model, topo, profile,
         CommEngine.from_config(topo, mcfg).sync_policy,
-        boundary=mcfg.boundary_schedule, bucket_mb=mcfg.hop2_bucket_mb)
+        boundary=mcfg.boundary_schedule, bucket_mb=mcfg.hop2_bucket_mb,
+        clip_mode=mcfg.clip_mode)
     print(f"boundary: {mcfg.boundary_schedule} x {bplan.n_buckets} buckets "
-          f"({mcfg.hop2_bucket_mb:g} MB) — modeled hop-2 "
-          f"{hop2['t_exposed_s']*1e6:.0f}us exposed / "
+          f"({mcfg.hop2_bucket_mb:g} MB, clip={bplan.clip_mode}) — "
+          f"modeled hop-2 {hop2['t_exposed_s']*1e6:.0f}us exposed / "
           f"{hop2['t_total_s']*1e6:.0f}us total on {profile.name}")
     gp, sp = policies_from_config(mcfg)
     lb = max((args.global_batch // args.micro_steps)
@@ -139,9 +164,11 @@ def main():
     mem = memplan.predict_footprint(
         model, topo, gp, sp, micro_steps=args.micro_steps, mode="train",
         local_batch=lb, seq=args.seq, boundary=mcfg.boundary_schedule,
-        hop2_bucket_mb=mcfg.hop2_bucket_mb)
+        hop2_bucket_mb=mcfg.hop2_bucket_mb, offload_opt=mcfg.offload_opt)
     print(f"memplan: {mem.total_gb:.3f} GiB predicted per device "
-          f"(prefetch_carry={mcfg.prefetch_carry})")
+          f"(prefetch_carry={mcfg.prefetch_carry}, "
+          f"carry_offload={mcfg.carry_offload}, "
+          f"offload_opt={mcfg.offload_opt})")
     oc = OptConfig(lr_max=args.lr, total_steps=args.steps,
                    warmup_steps=max(args.steps // 20, 1))
     dc = DataConfig(vocab=cfg.vocab, seq=args.seq,

@@ -69,11 +69,12 @@ def train(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
 
     start = ckpt.latest_step()
     if start is not None:
-        state, meta = ckpt.restore(model, topo)
+        state, meta = ckpt.restore(model, topo, offload_opt=mcfg.offload_opt)
         cursor = meta["data_cursor"]
         log.info("resumed from step %d", start)
     else:
-        state = init_state(model, topo, seed=lc.seed)
+        state = init_state(model, topo, seed=lc.seed,
+                           offload_opt=mcfg.offload_opt)
         cursor = 0
 
     stats = LoopStats([], [], [], 0)
@@ -97,11 +98,13 @@ def train(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
             log.warning("step %d failed (%s); rolling back", step, e)
             prev = ckpt.latest_step()
             if prev is not None:
-                state, meta = ckpt.restore(model, topo)
+                state, meta = ckpt.restore(model, topo,
+                                           offload_opt=mcfg.offload_opt)
                 cursor = meta["data_cursor"]
                 step = int(np.asarray(state["step"]))
             else:
-                state = init_state(model, topo, seed=lc.seed)
+                state = init_state(model, topo, seed=lc.seed,
+                                   offload_opt=mcfg.offload_opt)
                 cursor = 0
                 step = 0
             continue
@@ -120,10 +123,20 @@ def train(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
             log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
         if lc.checkpoint_every and step % lc.checkpoint_every == 0:
             ckpt.save(state, step, topo=topo, data_cursor=cursor,
-                      blocking=False)
+                      blocking=False, host_stash=_stash_snapshot(mcfg))
     ckpt.wait()
-    ckpt.save(state, step, topo=topo, data_cursor=cursor, blocking=True)
+    ckpt.save(state, step, topo=topo, data_cursor=cursor, blocking=True,
+              host_stash=_stash_snapshot(mcfg))
     return stats
+
+
+def _stash_snapshot(mcfg: MiCSConfig):
+    """The offloaded-moment half of the state when ``offload_opt=True``."""
+    if not mcfg.offload_opt:
+        return None
+    from repro.core.hostoffload import export_stash
+
+    return export_stash()
 
 
 def elastic_restart(checkpoint_dir: str, cfg, new_topo: MiCSTopology,
@@ -134,6 +147,7 @@ def elastic_restart(checkpoint_dir: str, cfg, new_topo: MiCSTopology,
     """
     model = build_model(cfg, tp=new_topo.model_size)
     ckpt = Checkpointer(checkpoint_dir)
-    state, meta = ckpt.restore(model, new_topo)
+    state, meta = ckpt.restore(model, new_topo,
+                               offload_opt=mcfg.offload_opt)
     step_fn = build_train_step(model, new_topo, mcfg, oc)
     return model, state, step_fn, meta

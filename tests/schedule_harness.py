@@ -20,6 +20,31 @@ Checks:
                        max payload <= bucket bytes) interleaved with
                        norm/optimizer compute; the serial reference keeps
                        pool-granular hop-2 ops
+  approx_clip_inactive clip_mode='approx' with the clip never engaging:
+                       loss/grad_norm trajectories bitwise identical to
+                       exact across bucket sizes (incl. the one-bucket-
+                       per-pool degenerate case); params agree to the
+                       final ulp (identical update arithmetic, different
+                       XLA fusion of the elementwise AdamW chain)
+  approx_zero_grad     all-zero grads (zero loss mask): gnorm 0, guarded
+                       clip division — approx == exact bitwise, finite
+  approx_clip_active_bounded
+                       clip engaged: approx's one-bucket-stale factor may
+                       drift, bounded by APPROX_CLIP_LOSS_RTOL on the
+                       final loss of a short convergence run (loss must
+                       also actually decrease under both clips)
+  approx_int8_hop2     approx clip composes with the int8-compressed
+                       hop-2 wire (finite metrics over 2 steps)
+  approx_census_interleave
+                       the compiled approx step still shows bucket-granular
+                       hop-2, and strictly MORE compute between hop-2 ops
+                       than the exact bucketed step — the AdamW updates
+                       pipelined into the gaps
+  offload_host_bitwise carry_offload='host' (and + offload_opt) leaves the
+                       training numerics bitwise identical to the in-HBM
+                       bucketed run; the carry stash drains every step and
+                       the moment stash persists exactly 2 entries per
+                       pool per device
 """
 
 import os
@@ -42,7 +67,10 @@ from repro.core.mics import (
     MiCSConfig, build_train_step, init_state, init_state_shapes,
     make_batch_shapes,
 )
-from repro.core.schedule import GRAD_ITEMSIZE, plan_boundary
+from repro.core.hostoffload import stash_clear, stash_size
+from repro.core.schedule import (
+    APPROX_CLIP_LOSS_RTOL, GRAD_ITEMSIZE, plan_boundary,
+)
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.models.build import build_model
 from repro.optim.adamw import OptConfig
@@ -92,16 +120,24 @@ def _setup():
 CFG, TOPO, MODEL, BATCH = _setup()
 
 
-def _run(mcfg, steps=STEPS, seed=1):
-    state = init_state(MODEL, TOPO, seed=seed)
+def _run(mcfg, steps=STEPS, seed=1, oc=None, batch=None):
+    batch = BATCH if batch is None else batch
+    state = init_state(MODEL, TOPO, seed=seed, offload_opt=mcfg.offload_opt)
     step = build_train_step(MODEL, TOPO, mcfg,
-                            OptConfig(total_steps=50, warmup_steps=0,
-                                      lr_max=3e-3))
+                            oc or OptConfig(total_steps=50, warmup_steps=0,
+                                            lr_max=3e-3))
     metrics = []
     for _ in range(steps):
-        state, m = step(state, BATCH)
+        state, m = step(state, batch)
         metrics.append((float(m["loss"]), float(m["grad_norm"])))
     return metrics, jax.tree.map(np.asarray, state)
+
+
+def _assert_state_equal(a_state, b_state, tag):
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(a_state)[0],
+            jax.tree_util.tree_flatten_with_path(b_state)[0]):
+        assert np.array_equal(a, b), f"{tag}: state leaf {path} diverged"
 
 
 def _assert_bitwise(mcfg_kw, tag):
@@ -111,10 +147,7 @@ def _assert_bitwise(mcfg_kw, tag):
     assert all(np.isfinite(v) for row in serial for v in row), serial
     assert serial == bucketed, \
         f"{tag}: metrics diverged {serial} vs {bucketed}"
-    for (path, a), (_, b) in zip(
-            jax.tree_util.tree_flatten_with_path(s_state)[0],
-            jax.tree_util.tree_flatten_with_path(b_state)[0]):
-        assert np.array_equal(a, b), f"{tag}: state leaf {path} diverged"
+    _assert_state_equal(s_state, b_state, tag)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +248,130 @@ def _census_interleave():
     assert bkt["interleaved"] and bkt["compute_between_hop2"] > 0, census
     assert bkt["hop2_wire_bytes"] == ser["hop2_wire_bytes"], census
     RESULTS["census_interleave_detail"] = census
+
+
+# ---------------------------------------------------------------------------
+def _bucketed(clip="exact", mb=TINY_MB, **kw):
+    return MiCSConfig(boundary_schedule="bucketed", micro_steps=MICRO,
+                      hop2_bucket_mb=mb, clip_mode=clip, **kw)
+
+
+@check("approx_clip_inactive")
+def _approx_clip_inactive():
+    # with the clip never engaging, the stale factor and the exact factor
+    # are the same 1.0 — metrics must be bitwise identical at any bucket
+    # count (incl. one bucket per pool: HUGE_MB) and params must agree to
+    # the final ulp (same arithmetic, different XLA fusion)
+    oc = OptConfig(total_steps=50, warmup_steps=0, lr_max=3e-3,
+                   clip_norm=1e9)
+    for mb in (TINY_MB, 0.2, HUGE_MB):
+        exact, e_state = _run(_bucketed(mb=mb), oc=oc)
+        approx, a_state = _run(_bucketed("approx", mb=mb), oc=oc)
+        assert all(np.isfinite(v) for row in exact for v in row), exact
+        assert exact == approx, f"mb={mb}: {exact} vs {approx}"
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(e_state)[0],
+                jax.tree_util.tree_flatten_with_path(a_state)[0]):
+            assert np.allclose(a, b, rtol=0, atol=1e-6), \
+                f"mb={mb}: state leaf {path} off by " \
+                f"{np.max(np.abs(np.float64(a) - np.float64(b)))}"
+
+
+@check("approx_zero_grad")
+def _approx_zero_grad():
+    # all-zero loss mask: zero grads in every bucket, gnorm 0, and the
+    # clip factor hits its guarded 0-norm branch in both modes
+    zb = dict(BATCH, mask=jnp.zeros_like(BATCH["mask"]))
+    exact, e_state = _run(_bucketed(), batch=zb)
+    approx, a_state = _run(_bucketed("approx"), batch=zb)
+    assert all(np.isfinite(v) for row in approx for v in row), approx
+    assert all(g == 0.0 for _, g in exact), exact
+    assert exact == approx, f"{exact} vs {approx}"
+    _assert_state_equal(e_state, a_state, "zero_grad")
+
+
+@check("approx_clip_active_bounded")
+def _approx_clip_active():
+    # convergence smoke with the clip engaged (smoke-model gnorm ~15 >>
+    # clip_norm=1.0): the stale factor drifts the trajectory, but the
+    # final loss stays within APPROX_CLIP_LOSS_RTOL of exact and both
+    # runs actually learn
+    steps = 12
+    oc = OptConfig(total_steps=steps, warmup_steps=0, lr_max=3e-3,
+                   clip_norm=1.0)
+    exact, _ = _run(_bucketed(), steps=steps, oc=oc)
+    approx, _ = _run(_bucketed("approx"), steps=steps, oc=oc)
+    assert all(np.isfinite(v) for row in approx for v in row), approx
+    # identical params at step 0 => identical first loss, drift after
+    assert approx[0][0] == exact[0][0], (approx[0], exact[0])
+    assert exact[-1][0] < exact[0][0], exact
+    assert approx[-1][0] < approx[0][0], approx
+    rtol = abs(approx[-1][0] - exact[-1][0]) / abs(exact[-1][0])
+    assert rtol <= APPROX_CLIP_LOSS_RTOL, (rtol, exact[-1], approx[-1])
+    RESULTS["approx_convergence_detail"] = {
+        "steps": steps, "final_exact": exact[-1][0],
+        "final_approx": approx[-1][0], "rtol": rtol}
+
+
+@check("approx_int8_hop2")
+def _approx_int8_hop2():
+    # the approx pipeline folds per-bucket psums from the *dequantized*
+    # int8 hop-2 wire — composition must stay finite
+    approx, _ = _run(_bucketed("approx", compress_hop2="int8"))
+    assert all(np.isfinite(v) for row in approx for v in row), approx
+
+
+@check("approx_census_interleave")
+def _approx_census_interleave():
+    mesh_shape = dict(zip(TOPO.mesh.axis_names, TOPO.mesh.devices.shape))
+    plan = plan_boundary(MODEL, TOPO, mode="bucketed", bucket_mb=TINY_MB)
+    census = {}
+    for clip in ("exact", "approx"):
+        step = build_train_step(MODEL, TOPO, _bucketed(clip),
+                                OptConfig(total_steps=10))
+        stats = analyze(
+            step.lower(init_state_shapes(MODEL),
+                       make_batch_shapes(MODEL, MICRO * 8, 32, MICRO))
+                .compile().as_text(),
+            mesh_shape,
+            partition_axes=TOPO.partition_axes,
+            replication_axes=TOPO.replication_axes)
+        census[clip] = stats["boundary"]
+    for clip in ("exact", "approx"):
+        assert census[clip]["hop2_ops"] == plan.n_buckets, census
+        assert census[clip]["interleaved"], census
+    # the pipeline's signature: the AdamW updates land in the gaps
+    # between hop-2 collectives, so the approx step has strictly more
+    # compute there than the exact bucketed step (whose optimizer runs
+    # after the last hop-2)
+    assert census["approx"]["compute_between_hop2"] \
+        > census["exact"]["compute_between_hop2"], census
+    RESULTS["approx_census_detail"] = census
+
+
+@check("offload_host_bitwise")
+def _offload_host_bitwise():
+    stash_clear()
+    ref, ref_state = _run(_bucketed())
+    carry, c_state = _run(_bucketed(carry_offload="host"))
+    assert ref == carry, f"carry: {ref} vs {carry}"
+    _assert_state_equal(ref_state, c_state, "carry_offload")
+    assert stash_size() == 0, "carry stash must drain every step"
+    both, b_state = _run(_bucketed(carry_offload="host", offload_opt=True))
+    assert ref == both, f"offload_opt: {ref} vs {both}"
+    # the moment leaves now live in the host stash: compare what remains
+    ref_leaves = {
+        "/".join(str(getattr(p, "key", p)) for p in path): a
+        for path, a in jax.tree_util.tree_flatten_with_path(ref_state)[0]}
+    for path, a in jax.tree_util.tree_flatten_with_path(b_state)[0]:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        assert np.array_equal(a, ref_leaves[key]), \
+            f"offload_opt: state leaf {key} diverged"
+    # m + v per pool per device persist across steps
+    expected = 2 * len(MODEL.all_pools()) * len(jax.devices())
+    assert stash_size() == expected, (stash_size(), expected)
+    stash_clear()
+    RESULTS["offload_detail"] = {"stash_entries": expected}
 
 
 print(json.dumps(RESULTS, indent=1, default=str))

@@ -267,6 +267,71 @@ def test_plan_table_and_describe_serializable():
     json.dumps(plan.describe())
 
 
+def test_clip_and_carry_axes_ranked():
+    """The approx-clip and host-carry axes join the ranked grid: approx
+    rows on every bucketed train candidate (repl > 1), remat/host carry
+    rows whenever a budget prices the grid — and neither outranks the
+    reference numerics without its opt-in."""
+    prof = custom_profile("axes-slow", intra_bw=100e9, inter_bw=1e9,
+                          node_size=8)
+    kw = dict(micro_steps=2, prefetch=True, hbm_budget_gb=64.0)
+    plan = rank_policies(StubModel(), topo_single(p=8, repl=2), prof, **kw)
+    assert {c.clip_mode for c in plan.candidates} == {"exact", "approx"}
+    assert all(c.boundary == "bucketed" for c in plan.candidates
+               if c.clip_mode == "approx")
+    carries = {(c.gather.prefetch_carry, c.gather.carry_offload)
+               for c in plan.candidates}
+    assert {("stored", "none"), ("remat", "none"),
+            ("stored", "host")} <= carries
+    # pairing each bucketed candidate with its approx twin: pipelining
+    # AdamW under hop-2 can only shrink the exposed time, and does shrink
+    # it somewhere in the grid
+    by_key = {}
+    for c in plan.candidates:
+        key = (c.gather, c.sync, c.boundary, c.hop2_bucket_mb)
+        by_key.setdefault(key, {})[c.clip_mode] = c
+    paired = [v for v in by_key.values() if len(v) == 2]
+    assert paired
+    for v in paired:
+        assert v["approx"].t_hop2_exposed_s \
+            <= v["exact"].t_hop2_exposed_s + 1e-18
+    assert any(v["approx"].t_hop2_exposed_s < v["exact"].t_hop2_exposed_s
+               for v in paired)
+    # approx changes numerics: ranked, but chosen only under the opt-in
+    assert plan.chosen.clip_mode == "exact"
+    assert not plan.chosen.gather.carry_offload == "host"
+    # both axes are visible columns in the ranked table
+    txt = plan.table(top=None)
+    head = txt.splitlines()[1]
+    assert "clip" in head and "carry" in head and "off" in head
+    assert "approx" in txt and "host" in txt and "remat" in txt
+
+
+def test_resolve_roundtrips_clip_and_offload():
+    """clip_mode='approx' on an auto config is the approximation opt-in;
+    the resolved config carries the chosen clip/carry/offload fields and
+    revalidates (approx only rides the bucket pipeline)."""
+    prof = custom_profile("rt-axes", intra_bw=100e9, inter_bw=1e9,
+                          node_size=8)
+    mcfg = MiCSConfig(micro_steps=2, policy="auto", link_profile=prof,
+                      clip_mode="approx", boundary_schedule="bucketed",
+                      hbm_budget_gb=64.0)
+    resolved, plan = resolve_config(mcfg, StubModel(),
+                                    topo_single(p=8, repl=2))
+    assert resolved.policy == "manual"
+    assert resolved.clip_mode == plan.chosen.clip_mode
+    assert resolved.carry_offload == plan.chosen.gather.carry_offload
+    assert resolved.prefetch_carry == plan.chosen.gather.prefetch_carry
+    assert resolved.boundary_schedule == plan.chosen.boundary
+    if resolved.clip_mode == "approx":
+        assert resolved.boundary_schedule == "bucketed"
+    # an exact-clip config through the same grid never resolves to approx
+    mcfg_e = dataclasses.replace(mcfg, clip_mode="exact")
+    resolved_e, _ = resolve_config(mcfg_e, StubModel(),
+                                   topo_single(p=8, repl=2))
+    assert resolved_e.clip_mode == "exact"
+
+
 # ---------------------------------------------------------------------------
 # config resolution
 # ---------------------------------------------------------------------------

@@ -17,8 +17,8 @@ from fit_profile import (  # noqa: E402
 )
 
 # ground truth for the synthetic ledgers
-ALPHA = {"intra": 2e-6, "inter": 20e-6}
-BW = {"intra": 40e9, "inter": 5e9}
+ALPHA = {"intra": 2e-6, "inter": 20e-6, "host": 5e-6}
+BW = {"intra": 40e9, "inter": 5e9, "host": 12e9}
 T0 = 3e-3
 
 
@@ -121,6 +121,39 @@ def test_snippet_fallback_for_unconstrained_tier():
     ns: dict = {}
     exec(code, ns)
     assert ns["profile"].inter.bandwidth == get_profile("v5e").inter.bandwidth
+
+
+def test_fit_recovers_host_tier():
+    """A ledger whose policies exercise carry_offload='host' stages (the
+    ``tier='host'`` fit rows benchmarks/comm_bench.py emits) constrains the
+    device<->host (α, β) alongside the network tiers."""
+    fit = fit_tiers(_synthetic(10, tiers=("intra", "inter", "host")))
+    tf = fit.tiers["host"]
+    assert tf.constrained and not tf.clamped
+    assert tf.alpha == pytest.approx(ALPHA["host"], rel=1e-4)
+    assert tf.bandwidth == pytest.approx(BW["host"], rel=1e-4)
+    assert fit.residual_rms_s < 1e-9
+
+
+def test_snippet_emits_host_tier_only_when_constrained():
+    fit = fit_tiers(_synthetic(10, tiers=("intra", "inter", "host")))
+    code = emit_snippet(fit, name="fitted-host-table", node_size=4)
+    assert "host_bw" in code and "alpha_host" in code
+    ns: dict = {}
+    exec(code, ns)
+    prof = ns["profile"]
+    assert prof.link("host").bandwidth == pytest.approx(BW["host"], rel=1e-4)
+    assert prof.link("host").alpha == pytest.approx(ALPHA["host"], rel=1e-4)
+    # no host stages in the ledger -> the kwargs are omitted and the
+    # profile falls back to DEFAULT_HOST_LINK
+    from repro.core.linkmodel import DEFAULT_HOST_LINK
+
+    code2 = emit_snippet(fit_tiers(_synthetic(8)), name="fitted-no-host",
+                         node_size=4)
+    assert "host_bw" not in code2
+    ns2: dict = {}
+    exec(code2, ns2)
+    assert ns2["profile"].link("host") is DEFAULT_HOST_LINK
 
 
 def test_observations_from_bench_shape():

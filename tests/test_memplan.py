@@ -353,7 +353,7 @@ def harness_results():
 
 CHECKS = [
     "footprint_match", "footprint_degenerate", "remat_lowers_peak",
-    "census_match_remat", "carried_buffer_census",
+    "census_match_remat", "carried_buffer_census", "offload_lowers_peak",
 ]
 
 
@@ -384,3 +384,17 @@ def test_remat_saving_is_the_carry(harness_results):
                   - det["inner_first/remat"]["components"]["prefetch_carry"])
     assert saving > 0
     assert abs(pred_delta - saving) <= 0.5 * saving
+
+
+def test_offload_peak_accounting(harness_results):
+    """carry_offload='host' + offload_opt shrink the compiled peak the way
+    the planner predicts: temps lose the carry residual, args lose the
+    fp32 m/v shards (2/3 of the 3x-fp32 state), args stay exact."""
+    det = harness_results["offload_lowers_peak_detail"]
+    s, hc, ho = det["stored"], det["host_carry"], det["host_carry_opt"]
+    for row in (s, hc, ho):
+        assert row["predicted_args_bytes"] == row["measured_args_bytes"]
+    assert hc["measured_temp_bytes"] < s["measured_temp_bytes"]
+    # m/v leave the donated args: the drop is ~2/3 of the state bytes
+    drop = s["measured_args_bytes"] - ho["measured_args_bytes"]
+    assert drop > 0.5 * s["measured_args_bytes"], det

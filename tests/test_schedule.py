@@ -2,8 +2,11 @@
 8-virtual-device harness (tests/schedule_harness.py) asserting bitwise
 serial==bucketed equivalence across bucket sizes (incl. one-bucket and
 bucket>total-bytes degenerate cases), gather topologies and wire dtypes,
-and the HLO-census evidence that hop-2 runs at bucket granularity
-interleaved with boundary compute."""
+the HLO-census evidence that hop-2 runs at bucket granularity interleaved
+with boundary compute, the approximate-clip pipeline's degenerate/bounded
+-divergence guarantees (clip-inactive equivalence, zero-grad, int8 hop-2
+composition, convergence within APPROX_CLIP_LOSS_RTOL, AdamW census
+interleave), and the host-offload cells' bitwise equivalence."""
 
 import pathlib
 
@@ -37,6 +40,27 @@ def test_boundary_config_validated():
         MiCSConfig(hop2_bucket_mb=0.0)
     with pytest.raises(ValueError):
         BoundaryPlan(mode="eager", bucket_mb=1.0, shard_elems={}, buckets=())
+
+
+def test_clip_offload_config_validated():
+    with pytest.raises(ValueError):
+        MiCSConfig(clip_mode="running")
+    with pytest.raises(ValueError):   # approx needs the bucket pipeline
+        MiCSConfig(clip_mode="approx", boundary_schedule="serial")
+    MiCSConfig(clip_mode="approx", boundary_schedule="bucketed")
+    with pytest.raises(ValueError):
+        MiCSConfig(carry_offload="nvme")
+    with pytest.raises(ValueError):   # host carry offloads the stored carry
+        MiCSConfig(carry_offload="host", prefetch=False)
+    with pytest.raises(ValueError):
+        MiCSConfig(carry_offload="host", prefetch_carry="remat")
+    MiCSConfig(carry_offload="host", prefetch=True, prefetch_carry="stored")
+    with pytest.raises(ValueError):
+        BoundaryPlan(mode="bucketed", bucket_mb=1.0, shard_elems={},
+                     buckets=(), clip_mode="stale")
+    with pytest.raises(ValueError):   # serial has no pipeline to hide under
+        BoundaryPlan(mode="serial", bucket_mb=1.0, shard_elems={},
+                     buckets=(), clip_mode="approx")
 
 
 def test_plan_boundary_static_structure(topo1):
@@ -103,6 +127,9 @@ def harness_results():
 CHECKS = [
     "bucket_plan", "bitwise_bucket_sizes", "bitwise_topologies",
     "bitwise_compress", "census_interleave",
+    "approx_clip_inactive", "approx_zero_grad",
+    "approx_clip_active_bounded", "approx_int8_hop2",
+    "approx_census_interleave", "offload_host_bitwise",
 ]
 
 
@@ -120,3 +147,29 @@ def test_census_interleave_counts(harness_results):
     assert detail["bucketed"]["interleaved"]
     assert detail["bucketed"]["hop2_wire_bytes"] \
         == detail["serial"]["hop2_wire_bytes"]
+
+
+def test_approx_census_counts(harness_results):
+    """The approx pipeline's census signature: same bucket-granular hop-2,
+    strictly more compute between the hop-2 ops (the pipelined AdamW)."""
+    detail = harness_results.get("approx_census_detail")
+    assert detail is not None
+    assert detail["approx"]["hop2_ops"] == detail["exact"]["hop2_ops"]
+    assert detail["approx"]["compute_between_hop2"] \
+        > detail["exact"]["compute_between_hop2"]
+
+
+def test_approx_convergence_bound(harness_results):
+    from repro.core.schedule import APPROX_CLIP_LOSS_RTOL
+
+    detail = harness_results.get("approx_convergence_detail")
+    assert detail is not None
+    assert detail["rtol"] <= APPROX_CLIP_LOSS_RTOL
+    assert detail["final_approx"] < 6.0  # it actually learned
+
+
+def test_offload_stash_accounting(harness_results):
+    detail = harness_results.get("offload_detail")
+    assert detail is not None
+    assert detail["stash_entries"] > 0
+    assert detail["stash_entries"] % 2 == 0  # an m and a v per slot

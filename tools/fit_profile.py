@@ -15,6 +15,14 @@ that system per tier and emits a ready-to-paste
 ``BENCH_comm.json`` from real hardware into a registered link table the
 autotuner can rank policies over.
 
+The ``host`` tier (device<->host DMA, core/linkmodel.py) joins the same
+solve: the bench's offload cells ledger their d2h/h2d stream as
+``tier='host'`` stages (one α-event per transfer, point-to-point bytes),
+so a ledger that exercises ``carry_offload='host'`` or ``offload_opt``
+constrains the host (α, β) alongside the network tiers.  Ledgers without
+offload cells leave it unconstrained — the snippet then omits
+``host_bw`` and the profile falls back to ``DEFAULT_HOST_LINK``.
+
 Usage:
   PYTHONPATH=src python tools/fit_profile.py artifacts/benchmarks/BENCH_comm.json \
       [--name fitted-cluster] [--node-size 8]
@@ -36,7 +44,7 @@ import sys
 
 import numpy as np
 
-TIERS = ("intra", "inter")
+TIERS = ("intra", "inter", "host")
 
 # Fit floors: α ≥ 0 s, bandwidth ≤ 10 TB/s (inv_bw floor).  Compute-bound
 # ledgers can drive either coefficient negative; clamping keeps the emitted
@@ -93,8 +101,8 @@ def observations_from_bench(bench: dict) -> list[Observation]:
 
 
 def _design(observations: list[Observation]):
-    """Rows: one per observation.  Columns: [α_intra, α_inter, inv_bw_intra,
-    inv_bw_inter, t0]."""
+    """Rows: one per observation.  Columns: [α per tier..., inv_bw per
+    tier..., t0] in ``TIERS`` order (intra, inter, host)."""
     a = np.zeros((len(observations), 2 * len(TIERS) + 1))
     y = np.zeros(len(observations))
     for i, obs in enumerate(observations):
@@ -171,15 +179,18 @@ def emit_snippet(fit: FitResult, *, name: str, node_size: int,
                  fallback: str = "v5e") -> str:
     """A ready-to-paste ``custom_profile(...)`` call for the fitted table.
 
-    Unconstrained tiers fall back to the named profile's values (flagged in
-    the comment) so the snippet always constructs a valid LinkProfile.
+    Unconstrained *network* tiers fall back to the named profile's values
+    (flagged in the comment) so the snippet always constructs a valid
+    LinkProfile; an unconstrained host tier is simply omitted —
+    ``custom_profile`` then leaves ``host=None`` and the profile falls back
+    to ``DEFAULT_HOST_LINK``.
     """
     from repro.core.linkmodel import get_profile
 
     fb = get_profile(fallback)
     vals = {}
     notes = []
-    for tier in TIERS:
+    for tier in ("intra", "inter"):
         tf = fit.tiers[tier]
         if tf.constrained:
             vals[f"{tier}_bw"] = tf.bandwidth
@@ -192,21 +203,34 @@ def emit_snippet(fit: FitResult, *, name: str, node_size: int,
             vals[f"alpha_{tier}"] = link.alpha
             notes.append(f"{tier} tier unconstrained; copied from "
                          f"{fallback!r}")
+    host = fit.tiers["host"]
+    if host.constrained:
+        vals["host_bw"] = host.bandwidth
+        vals["alpha_host"] = host.alpha
+        if host.clamped:
+            notes.append("host tier hit a fit floor (clamped)")
+    else:
+        notes.append("host tier unconstrained; DEFAULT_HOST_LINK applies")
     note = ("\n# NOTE: " + "; ".join(notes)) if notes else ""
+    lines = [
+        f"    {name!r},",
+        f"    intra_bw={vals['intra_bw']:.6g},",
+        f"    inter_bw={vals['inter_bw']:.6g},",
+        f"    node_size={node_size},",
+        f"    alpha_intra={vals['alpha_intra']:.6g},",
+        f"    alpha_inter={vals['alpha_inter']:.6g},",
+    ]
+    if "host_bw" in vals:
+        lines += [f"    host_bw={vals['host_bw']:.6g},",
+                  f"    alpha_host={vals['alpha_host']:.6g},"]
+    lines += ["    description='fitted from BENCH_comm.json',",
+              "    register=True,"]
+    body = "\n".join(lines)
     return (
         f"# fitted from {fit.n_observations} measured policies, "
         f"residual rms {fit.residual_rms_s:.3e} s{note}\n"
         f"from repro.core.linkmodel import custom_profile\n\n"
-        f"profile = custom_profile(\n"
-        f"    {name!r},\n"
-        f"    intra_bw={vals['intra_bw']:.6g},\n"
-        f"    inter_bw={vals['inter_bw']:.6g},\n"
-        f"    node_size={node_size},\n"
-        f"    alpha_intra={vals['alpha_intra']:.6g},\n"
-        f"    alpha_inter={vals['alpha_inter']:.6g},\n"
-        f"    description='fitted from BENCH_comm.json',\n"
-        f"    register=True,\n"
-        f")\n"
+        f"profile = custom_profile(\n{body}\n)\n"
     )
 
 
