@@ -1,8 +1,13 @@
-"""Elastic-scaling demo: train on one topology, lose half the "cluster", and
-resume from the checkpoint on a different mesh — partition groups, TP degree
-and data parallelism all change; the flat model states reshard untouched.
+"""Elastic-scaling demo: survive a mid-run pod preemption IN the train loop.
 
-Runs on 8 virtual CPU devices (set before jax import, like the dry-run).
+An 8-virtual-device "cluster" (pod=2, p=2, tp=2) trains under a scripted
+fault timeline (core/faults.FaultPlan): at step 8 one pod (4 devices) is
+lost abruptly — no preemption notice.  The elastic loop rolls back to the
+newest complete checkpoint, re-picks the partition-group size for the
+survivors (autotune.resolve_world), rebuilds the mesh + step function, and
+keeps training on 4 devices; at step 16 the capacity returns and the loop
+grows back to 8.  The world-change ledger and a cold cross-topology
+restore close the demo.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -11,50 +16,49 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import jax.numpy as jnp
+import json
 
-from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, smoke_variant
-from repro.core.mics import MiCSConfig, build_train_step, init_state
+from repro.core.faults import FaultPlan
+from repro.core.mics import MiCSConfig
 from repro.core.topology import MiCSTopology, make_host_mesh
-from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.data.pipeline import DataConfig
 from repro.models.build import build_model
 from repro.optim.adamw import OptConfig
-from repro.runtime.train_loop import elastic_restart
+from repro.runtime.train_loop import (
+    ElasticConfig, LoopConfig, elastic_restart, resize_for_world, train,
+)
 
 cfg = smoke_variant(get_config("llama3.2-1b"))
 dc = DataConfig(vocab=cfg.vocab, seq=32, global_batch=8, micro_steps=2)
-data = SyntheticLM(dc)
+mcfg = MiCSConfig(micro_steps=2)
 oc = OptConfig(lr_max=1e-3, total_steps=40, warmup_steps=0)
-ckpt_dir = "checkpoints/elastic_demo"
+lc = LoopConfig(total_steps=24, checkpoint_every=4, log_every=4,
+                checkpoint_dir="checkpoints/elastic_demo")
 
-# --- phase 1: "8-chip cluster": pod=2, p=2, tp=2 ---------------------------
-topo8 = MiCSTopology(make_host_mesh(2, 1, 2, 2),
-                     partition_axes=("shard",),
-                     replication_axes=("pod", "repl"))
-model8 = build_model(cfg, tp=2)
-state = init_state(model8, topo8, seed=0)
-step8 = build_train_step(model8, topo8, MiCSConfig(micro_steps=2), oc)
-for i in range(6):
-    batch = {k: jnp.asarray(v) for k, v in data.global_step_batch(i).items()}
-    state, metrics = step8(state, batch)
-    print(f"[8 devices, p=2, tp=2] step {i} loss {float(metrics['loss']):.4f}")
+# the scripted failure timeline: abrupt pod loss, later grow-back
+plan = (FaultPlan()
+        .preempt(8, devices=4, notice=False)   # pod dies, no warning
+        .grow(16, devices=4))                  # capacity comes back
 
-ck = Checkpointer(ckpt_dir)
-ck.save(state, step=6, topo=topo8, data_cursor=6)
-print("checkpoint written; simulating loss of one pod ...")
+topo8 = MiCSTopology(make_host_mesh(2, 1, 2, 2))   # pod=2, p=2, tp=2
+model = build_model(cfg, tp=2)
 
-# --- phase 2: resume on the surviving pod (4 chips): p=2, no replication ---
-# TP degree is fixed across restores (flat layouts are TP-local); pods,
-# partition groups and replication degree all reshard freely.
-topo4 = MiCSTopology(make_host_mesh(1, 1, 2, 2),
-                     partition_axes=("shard",),
-                     replication_axes=())
-model4, state4, step4, meta = elastic_restart(
-    ckpt_dir, cfg, topo4, MiCSConfig(micro_steps=2), oc)
-cursor = meta["data_cursor"]
-for i in range(cursor, cursor + 6):
-    batch = {k: jnp.asarray(v) for k, v in data.global_step_batch(i).items()}
-    state4, metrics = step4(state4, batch)
-    print(f"[4 devices, p=2, tp=2] step {i} loss {float(metrics['loss']):.4f}")
-print("resumed seamlessly on the degraded mesh — loss curve continues")
+print("training on 8 devices with a scripted pod loss at step 8 ...")
+stats = train(model, topo8, mcfg, oc, dc, lc,
+              fault_injector=plan, elastic=ElasticConfig())
+
+print(f"\nsurvived {len(stats.world_changes)} world change(s), "
+      f"{stats.restarts} restart(s); ledger:")
+print(json.dumps(stats.world_changes, indent=1))
+print(f"final loss {stats.losses[-1]:.4f} after {len(stats.losses)} "
+      f"computed steps (includes the recomputed rollback span)")
+
+# a cold restart resumes the same checkpoint through the same rebuild path
+# the loop used (resize_for_world), on whatever world is available now:
+topo4, mcfg4, info = resize_for_world(model, mcfg, 4, tp=2, partition_size=2)
+_, state, step_fn, meta = elastic_restart(
+    lc.checkpoint_dir, cfg, topo4, mcfg4, oc)
+print(f"\ncold restore onto 4 devices: step {meta['step']}, "
+      f"data cursor {meta['data_cursor']}, p={info['partition_size']} "
+      f"({info['rule']} rule) — trajectory would continue bitwise")

@@ -959,3 +959,49 @@ def resolve_scale(model, mcfg, *, data_extent: int, mode: str = "train",
         hop2_bucket_mb=mcfg.hop2_bucket_mb, carries=carries,
         offload_opt=getattr(mcfg, "offload_opt", False) and mode == "train",
         extra_replication=extra_replication)
+
+
+def resolve_world(model, mcfg, *, n_devices: int, tp: int = 1,
+                  partition_size: int | None = None, mode: str = "train",
+                  local_batch: int = 0, seq: int = 0):
+    """Re-pick partition-group size + carry for an ``n_devices`` world.
+
+    The elastic train loop's policy half (runtime/train_loop.py calls this
+    on every :class:`repro.core.faults.WorldChangeError` — pod loss or
+    grow-back — before rebuilding the mesh): with ``mcfg.hbm_budget_gb``
+    set it re-runs :func:`resolve_scale` so the degraded/grown world gets
+    the paper's §3.1 minimal-fitting group (and the carry mitigation that
+    rescued it); without a budget it keeps the previous ``partition_size``
+    where it still divides the new data extent, else the largest divisor
+    below it.  Everything here is analytic and deterministic, which is what
+    makes an in-loop resume bitwise-reproducible by a cold restore with the
+    same arguments (the kill-a-device contract, tests/elastic_harness.py).
+
+    Returns ``(partition_size, mcfg2, info)`` where ``mcfg2`` carries the
+    chosen carry/offload fields and ``info`` is a ledger-friendly dict.
+    """
+    if n_devices <= 0 or n_devices % max(tp, 1):
+        raise ValueError(
+            f"world of {n_devices} devices cannot carry tp={tp} "
+            f"(flat layouts are TP-local: tp must divide the world)")
+    data_extent = n_devices // max(tp, 1)
+    if getattr(mcfg, "hbm_budget_gb", None) is not None:
+        p, carry, mem_plan = resolve_scale(
+            model, mcfg, data_extent=data_extent, mode=mode,
+            local_batch=local_batch, seq=seq)
+        if carry == "host":
+            mcfg2 = dataclasses.replace(
+                mcfg, prefetch_carry="stored", carry_offload="host")
+        else:
+            mcfg2 = dataclasses.replace(
+                mcfg, prefetch_carry=carry, carry_offload="none")
+        info = {"rule": "resolve_scale", "carry": carry,
+                "hbm_budget_gb": mcfg.hbm_budget_gb,
+                "mem_gib": mem_plan.total_bytes / GIB}
+    else:
+        prefer = min(partition_size or data_extent, data_extent)
+        p = max(d for d in range(1, prefer + 1) if data_extent % d == 0)
+        mcfg2, info = mcfg, {"rule": "keep", "carry": mcfg.prefetch_carry}
+    info.update(partition_size=p, data_extent=data_extent, tp=tp,
+                n_devices=n_devices)
+    return p, mcfg2, info

@@ -152,6 +152,13 @@ def stash_clear() -> None:
     _STASH.clear()
 
 
+def clear_namespace(namespace: int) -> None:
+    """Drop every entry of one namespace (e.g. stale CKPT_NAMESPACE imports
+    before a cross-topology restore declines to re-import)."""
+    for k in [k for k in _STASH if k[0] == namespace]:
+        del _STASH[k]
+
+
 def export_stash(namespace: int | None = None) -> dict:
     """Snapshot (a namespace of) the stash — the offloaded-moment half of a
     checkpoint when ``offload_opt=True``."""

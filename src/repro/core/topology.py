@@ -103,6 +103,32 @@ def make_host_mesh(
     return mesh_from_devices(devs, MICS_AXES, axis_types=_auto(5))
 
 
+def elastic_host_topology(n_devices: int, partition_size: int,
+                          tp: int = 1) -> MiCSTopology:
+    """MiCSTopology over the first ``n_devices`` surviving (virtual) devices.
+
+    The elastic train loop's mesh half (the policy half is
+    ``autotune.resolve_world``): after a world change the survivors are
+    re-factored as ``(pod=1, repl=n/(p·tp), shard=p, dp2=1, model=tp)`` —
+    partition groups stay contiguous runs (the paper's consecutive-rank
+    rule), the TP degree is pinned (flat layouts are TP-local, the
+    checkpointer's one resharding invariant), and everything else reshards
+    freely on restore.
+    """
+    if n_devices <= 0:
+        raise ValueError(f"need at least one device, got {n_devices}")
+    if n_devices % (partition_size * tp):
+        raise ValueError(
+            f"world of {n_devices} devices does not factor as "
+            f"partition_size={partition_size} x tp={tp}")
+    if n_devices > len(jax.devices()):
+        raise ValueError(
+            f"world of {n_devices} devices exceeds the {len(jax.devices())} "
+            f"available")
+    repl = n_devices // (partition_size * tp)
+    return MiCSTopology(make_host_mesh(1, repl, partition_size, tp))
+
+
 @dataclasses.dataclass(frozen=True)
 class MiCSTopology:
     """Static description of how model states map onto a MiCS mesh.

@@ -5,6 +5,8 @@ set their own device count.  Locally the ambient set is one CPU device; CI
 exports --xla_force_host_platform_device_count=8, and the suite is verified
 to pass under both (no test may assume an exact ambient device count)."""
 
+import pathlib
+
 import pytest
 
 from repro.core.topology import MiCSTopology, make_host_mesh
@@ -14,3 +16,13 @@ from repro.core.topology import MiCSTopology, make_host_mesh
 def topo1():
     """Single-device 4-axis MiCS topology (all axes size 1)."""
     return MiCSTopology(make_host_mesh(1, 1, 1, 1))
+
+
+@pytest.fixture(scope="session")
+def elastic_results():
+    """Parsed JSON of the elastic preemption harness, run once per session
+    (tests/test_elastic.py asserts every check; tests/test_checkpoint.py
+    pins the cross-topology save/restore satellites from the same run)."""
+    from harness_util import run_harness
+
+    return run_harness(pathlib.Path(__file__).parent / "elastic_harness.py")
