@@ -1,0 +1,525 @@
+"""Closed-loop continuous-batching serving bench on the 8-device host mesh.
+
+Two engines over the same seeded request trace:
+
+* **paged** — the continuous-batching engine (runtime/batching.py scheduler
+  over runtime/paged.py block-pool KV): chunked prefill interleaved with
+  decode, FIFO admission under the free-block budget, per-request seeded
+  sampling;
+* **fixed** — the static baseline (runtime/serving.build_serve_steps):
+  requests grouped in arrival order into full batches, prompts padded to
+  the global max, the whole group decoded to its longest request
+  (head-of-line blocking + padding waste — what continuous batching
+  exists to beat).
+
+Both engines get the SAME per-rank KV memory budget: the fixed cache
+reserves ``FIXED_ROWS_LOCAL * CAP`` token slots per rank, the paged pool
+``(NB_LOCAL - 1) * BLOCK_SIZE`` — equal by construction.  Because real
+sequences never fill CAP, block-granular allocation turns that budget
+into more resident requests (6 slots/rank vs 4 rows/rank under full
+reservation), which is the whole vLLM-style argument: fragmentation
+becomes throughput.  On top of that, continuous batching retires each
+request the tick it finishes, while the static baseline decodes every
+group to its longest member (head-of-line padding waste).
+
+The arrival-rate sweep offers ``rate`` requests per scheduler tick; the
+tick -> wall-clock mapping comes from the measured engine steps, so each
+cell reports real p50/p99 TTFT + end-to-end latency seconds and generated
+tokens/s, plus the link-model predicted decode-step time
+(``core/autotune.cost_decode_step``) against the measured mean.
+
+Two correctness/overhead sections ride along:
+
+* ``equivalence`` replays the paged-vs-contiguous bitwise check (fp32 KV,
+  block-straddling prompts, GQA head-slot replication) — the engine
+  property every throughput number rests on;
+* ``step_overhead`` times every step kind both engines issue with
+  alternating interleaved reps (same-process back-to-back, so JIT and
+  machine-drift bias cancels).  The regression gate is the per-ROW decode
+  ratio — the paged step pushes 1.5x the rows per call, so raw step
+  times are not directly comparable.  The same controlled prices feed the
+  ``normalized`` tokens/s in every sweep cell: wall clocks on this
+  oversubscribed CPU harness drift 2-3x between cells, but the scheduler
+  tick/step counts are deterministic, so pricing them with interleaved
+  timings is the noise-immune throughput comparison.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--check]
+
+``--check`` (the ci.yml bench gate) fails on any paged-vs-contiguous
+mismatch or when the interleaved per-row decode overhead exceeds
+``STEP_REGRESSION_FACTOR``; the full run must additionally show paged
+normalized tokens/s beating the baseline in the saturation cell
+(``rate=inf`` — every request offered at tick 0, the highest swept
+arrival rate).  Output JSON is saved as BENCH_serve.json
+(BENCH_serve_smoke.json in CI).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.autotune import cost_decode_step
+from repro.core.comm import policies_from_config
+from repro.core.linkmodel import get_profile
+from repro.core.mics import MiCSConfig, init_state
+from repro.core.topology import MiCSTopology, make_host_mesh
+from repro.models.build import build_model
+from repro.runtime import paged as PG
+from repro.runtime.batching import ContinuousBatcher, Request
+from repro.runtime.serving import build_serve_steps, global_cache_shapes
+
+BLOCK_SIZE = 8
+MAX_BLOCKS = 4
+CAP = BLOCK_SIZE * MAX_BLOCKS          # positions per request (both engines)
+FIXED_ROWS_LOCAL = 4                   # baseline batch rows per data rank
+SLOTS_LOCAL = 6                        # paged slots per rank (1.5x the rows:
+#   what the shared block budget sustains for the chat-shaped trace)
+CHUNK = 8                              # prefill tokens per tick (>= max plen)
+# equal KV budget: usable pool slots/rank == the fixed cache's token slots
+NB_LOCAL = FIXED_ROWS_LOCAL * CAP // BLOCK_SIZE + 1  # +1: garbage block 0
+# offered requests per tick; inf = the saturation cell (all at tick 0)
+RATES = (0.25, 0.5, 1.0, 2.0, float("inf"))
+SMOKE_RATES = (0.5, float("inf"))
+N_REQUESTS = 32
+SMOKE_REQUESTS = 10
+STEP_REGRESSION_FACTOR = 1.2
+PROFILE = "v5e"
+
+
+def make_trace(n: int, vocab: int, rng: np.random.Generator) -> list[Request]:
+    """Seeded decode-dominated workload (chat-shaped: short prompts, long
+    variable generations); positions always fit CAP."""
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 9))
+        max_new = int(rng.integers(4, 25))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(1, vocab, plen).astype(int).tolist(),
+            max_new_tokens=max_new,
+            temperature=0.7,
+            seed=1000 + i,
+        ))
+    return reqs
+
+
+def build_engines(model, topo, mcfg):
+    """Two paged steps share one pool: a chunked one for ticks with prefill
+    rows in flight and a chunk=1 decode-only fast path for steady state
+    (most ticks — paying chunk x compute on pure-decode ticks is what made
+    naive chunked prefill lose to the static baseline)."""
+    step_chunk = PG.build_paged_step(
+        model, topo, mcfg, max_blocks=MAX_BLOCKS, block_size=BLOCK_SIZE,
+        chunk=CHUNK, top_k=8)
+    step_one = PG.build_paged_step(
+        model, topo, mcfg, max_blocks=MAX_BLOCKS, block_size=BLOCK_SIZE,
+        chunk=1, top_k=8)
+    prefill_fn, decode_fn = build_serve_steps(
+        model, topo, mcfg, cache_len=CAP, top_k=8)
+    return step_chunk, step_one, prefill_fn, decode_fn
+
+
+def run_continuous(model, topo, mcfg, step_chunk, step_one, reqs,
+                   arrival_ticks):
+    """One closed-loop paged cell.  Returns the stats + wall timeline."""
+    dp = topo.data_parallel_size
+    batcher = ContinuousBatcher(
+        dp=dp, slots_local=SLOTS_LOCAL, nb_local=NB_LOCAL,
+        block_size=BLOCK_SIZE, max_blocks=MAX_BLOCKS, chunk=CHUNK,
+        reserve="full")
+    caches, _ = PG.init_paged_caches(
+        model, topo, NB_LOCAL, BLOCK_SIZE, mcfg.kv_dtype)
+    state = init_state(model, topo, seed=7)
+    params = state["params"]
+
+    # warm both compile caches outside the timed loop (donation: rebuild)
+    B = batcher.batch
+    zero = lambda shape, dt: jnp.zeros(shape, dt)
+    for step, c in ((step_chunk, CHUNK), (step_one, 1)):
+        out = step(params, caches, zero((B, c), jnp.int32),
+                   zero((B,), jnp.int32), zero((B,), jnp.int32),
+                   zero((B, MAX_BLOCKS), jnp.int32),
+                   zero((B,), jnp.int32), zero((B,), jnp.float32))
+        jax.block_until_ready(out[0])
+        caches = out[2]
+    caches, _ = PG.init_paged_caches(
+        model, topo, NB_LOCAL, BLOCK_SIZE, mcfg.kv_dtype)
+
+    pending = sorted(zip(arrival_ticks, reqs), key=lambda p: (p[0], p[1].rid))
+    wall = [0.0]
+    step_times = []
+    decode_step_times = []
+    resident_rows = []
+    while pending or not batcher.idle:
+        while pending and pending[0][0] <= batcher.tick:
+            _, req = pending.pop(0)
+            req.arrival = batcher.tick
+            batcher.submit(req)
+        plan = batcher.plan_step()
+        if plan.active_rows == 0:
+            # nothing resident yet: an idle tick costs no wall time
+            batcher.commit(plan, np.zeros(batcher.batch, np.int64))
+            wall.append(wall[-1])
+            continue
+        decode_only = int(plan.n_new.max()) <= 1
+        step = step_one if decode_only else step_chunk
+        tokens = plan.tokens[:, :1] if decode_only else plan.tokens
+        t0 = time.perf_counter()
+        tok, _logits, caches = step(
+            params, caches,
+            jnp.asarray(tokens), jnp.asarray(plan.pos),
+            jnp.asarray(plan.n_new), jnp.asarray(plan.tables),
+            jnp.asarray(plan.seeds), jnp.asarray(plan.temps))
+        tok = np.asarray(tok)
+        dt = time.perf_counter() - t0
+        step_times.append(dt)
+        if decode_only:
+            decode_step_times.append(dt)
+        resident_rows.append(plan.active_rows)
+        wall.append(wall[-1] + dt)
+        batcher.commit(plan, tok)
+
+    ttft, lat = [], []
+    for r in batcher.finished:
+        ttft.append(wall[min(r.first_token_tick + 1, len(wall) - 1)]
+                    - wall[r.arrival])
+        lat.append(wall[min(r.finish_tick + 1, len(wall) - 1)]
+                   - wall[r.arrival])
+    tokens = sum(len(r.generated) for r in batcher.finished)
+    stats = batcher.stats()
+    stats.update(
+        wall_s=wall[-1],
+        tokens_per_s=tokens / wall[-1] if wall[-1] else 0.0,
+        ttft_s_p50=float(np.percentile(ttft, 50)) if ttft else 0.0,
+        ttft_s_p99=float(np.percentile(ttft, 99)) if ttft else 0.0,
+        latency_s_p50=float(np.percentile(lat, 50)) if lat else 0.0,
+        latency_s_p99=float(np.percentile(lat, 99)) if lat else 0.0,
+        measured_step_s_mean=float(np.mean(step_times)) if step_times else 0.0,
+        measured_decode_step_s_mean=float(np.mean(decode_step_times))
+        if decode_step_times else 0.0,
+        ticks_active=len(step_times),
+        decode_only_ticks=len(decode_step_times),
+        mean_resident_rows=float(np.mean(resident_rows))
+        if resident_rows else 0.0,
+    )
+    return stats
+
+
+def run_fixed(model, topo, mcfg, prefill_fn, decode_fn, reqs, arrival_s,
+              params, max_plen):
+    """Static baseline: arrival-order groups of B, padded, head-of-line."""
+    B = topo.data_parallel_size * FIXED_ROWS_LOCAL
+    groups = [reqs[i:i + B] for i in range(0, len(reqs), B)]
+    t_end = 0.0
+    step_times = []
+    lat, ttft = [], []
+    tokens = 0
+    decode_steps = 0
+    for gi, group in enumerate(groups):
+        idx = list(range(gi * B, gi * B + len(group)))
+        start = max([t_end] + [arrival_s[i] for i in idx])
+        toks = np.zeros((B, max_plen), np.int32)
+        temps = np.zeros(B, np.float32)
+        seeds = np.zeros(B, np.int32)
+        for j, r in enumerate(group):
+            toks[j, :len(r.prompt)] = r.prompt
+            temps[j] = r.temperature
+            seeds[j] = r.seed
+        t0 = time.perf_counter()
+        logits, caches = prefill_fn(params, {"tokens": jnp.asarray(toks)})
+        vocab = model.cfg.vocab
+        tok = jnp.argmax(jnp.asarray(logits[:, -1:, :vocab], jnp.float32),
+                         axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_pre = time.perf_counter() - t0
+        elapsed = t_pre
+        n_steps = max(r.max_new_tokens for r in group)
+        decode_steps += n_steps - 1
+        row_mask = jnp.arange(B) < len(group)
+        for i in range(n_steps - 1):
+            t0 = time.perf_counter()
+            _lg, tok, caches = decode_fn(
+                params, caches, tok, jnp.int32(max_plen + i),
+                jnp.asarray(seeds), jnp.asarray(temps), row_mask)
+            tok = jnp.asarray(np.asarray(tok))  # block; feed back
+            dt = time.perf_counter() - t0
+            if gi > 0 or i > 0:   # first decode step pays the compile
+                step_times.append(dt)
+            elapsed += dt
+        t_end = start + elapsed
+        for j, r in enumerate(group):
+            ttft.append(start + t_pre - arrival_s[idx[j]])
+            lat.append(t_end - arrival_s[idx[j]])
+            tokens += r.max_new_tokens
+    return {
+        "wall_s": t_end,
+        "tokens_per_s": tokens / t_end if t_end else 0.0,
+        "ttft_s_p50": float(np.percentile(ttft, 50)),
+        "ttft_s_p99": float(np.percentile(ttft, 99)),
+        "latency_s_p50": float(np.percentile(lat, 50)),
+        "latency_s_p99": float(np.percentile(lat, 99)),
+        "measured_step_s_mean": float(np.mean(step_times))
+        if step_times else 0.0,
+        "groups": len(groups),
+        "decode_steps": decode_steps,
+        "tokens": tokens,
+    }
+
+
+def step_overhead(model, topo, mcfg, step_chunk, step_one, prefill_fn,
+                  decode_fn, params, max_plen: int, reps: int = 20) -> dict:
+    """Interleaved timing of every step kind both engines issue.
+
+    All four step kinds run back-to-back inside each rep, so JIT/allocator
+    warmup and machine drift hit them equally — these are the controlled
+    per-step prices the normalized throughput gate uses.  The regression
+    gate is the per-ROW decode ratio: the paged step pushes
+    ``SLOTS_LOCAL/FIXED_ROWS_LOCAL`` times the rows per call, so raw step
+    times are not directly comparable.
+    """
+    dp = topo.data_parallel_size
+    Bp, Bf = dp * SLOTS_LOCAL, dp * FIXED_ROWS_LOCAL
+    pool, _ = PG.init_paged_caches(
+        model, topo, NB_LOCAL, BLOCK_SIZE, mcfg.kv_dtype)
+    tmpl, _ = global_cache_shapes(model, topo, Bf, CAP)
+    cc = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
+    tok1 = jnp.ones((Bp, 1), jnp.int32)
+    tokc = jnp.ones((Bp, CHUNK), jnp.int32)
+    tokf = jnp.ones((Bf, 1), jnp.int32)
+    pref_batch = {"tokens": jnp.ones((Bf, max_plen), jnp.int32)}
+    zp_i = jnp.zeros(Bp, jnp.int32)
+    one_p = jnp.ones(Bp, jnp.int32)
+    full_p = jnp.full((Bp,), CHUNK, jnp.int32)
+    tabs = jnp.ones((Bp, MAX_BLOCKS), jnp.int32)
+    zp_f = jnp.zeros(Bp, jnp.float32)
+    zf_i = jnp.zeros(Bf, jnp.int32)
+    zf_f = jnp.zeros(Bf, jnp.float32)
+    mask = jnp.ones(Bf, bool)
+    acc = {"paged_decode": [], "paged_chunk": [],
+           "fixed_decode": [], "fixed_prefill": []}
+    for i in range(reps + 2):
+        t0 = time.perf_counter()
+        t, _lg, pool = step_one(params, pool, tok1, zp_i, one_p, tabs,
+                                zp_i, zp_f)
+        jax.block_until_ready(t)
+        d_pd = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        t, _lg, pool = step_chunk(params, pool, tokc, zp_i, full_p, tabs,
+                                  zp_i, zp_f)
+        jax.block_until_ready(t)
+        d_pc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _lg, t2, cc = decode_fn(params, cc, tokf, jnp.int32(3),
+                                zf_i, zf_f, mask)
+        jax.block_until_ready(t2)
+        d_fd = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        lg, _caches = prefill_fn(params, pref_batch)
+        jax.block_until_ready(lg)
+        d_fp = time.perf_counter() - t0
+        if i >= 2:  # first interleaved rounds pay the compiles
+            acc["paged_decode"].append(d_pd)
+            acc["paged_chunk"].append(d_pc)
+            acc["fixed_decode"].append(d_fd)
+            acc["fixed_prefill"].append(d_fp)
+    out = {k + "_s": float(np.mean(v)) for k, v in acc.items()}
+    out.update(paged_rows=Bp, fixed_rows=Bf, reps=reps)
+    out["per_row_ratio"] = ((out["paged_decode_s"] / Bp)
+                            / (out["fixed_decode_s"] / Bf)
+                            if out["fixed_decode_s"] else float("inf"))
+    return out
+
+
+def normalized_throughput(cont: dict, fixed: dict, so: dict) -> dict:
+    """Price each engine's deterministic schedule with the controlled
+    interleaved step timings — raw wall clocks on the oversubscribed
+    8-virtual-device CPU harness drift 2-3x between cells, but the
+    scheduler's tick/step counts are exact, so this is the noise-immune
+    tokens/s comparison the gate uses."""
+    chunk_ticks = cont["ticks_active"] - cont["decode_only_ticks"]
+    pt = (cont["decode_only_ticks"] * so["paged_decode_s"]
+          + chunk_ticks * so["paged_chunk_s"])
+    ft = (fixed["decode_steps"] * so["fixed_decode_s"]
+          + fixed["groups"] * so["fixed_prefill_s"])
+    paged_tps = cont["tokens_generated"] / pt if pt else 0.0
+    fixed_tps = fixed["tokens"] / ft if ft else 0.0
+    return {"paged_compute_s": pt, "fixed_compute_s": ft,
+            "paged_tokens_per_s": paged_tps, "fixed_tokens_per_s": fixed_tps,
+            "ratio": paged_tps / fixed_tps if fixed_tps else float("inf")}
+
+
+def bitwise_equivalence(model, topo, params) -> dict:
+    """Paged decode vs the contiguous vector-position reference, bitwise.
+
+    fp32 KV, block size 4 (prompt 7 straddles a block boundary), greedy;
+    the mesh's tp=4 > n_kv_heads exercises GQA head-slot replication.
+    """
+    BS, MB = 4, 4
+    cap = BS * MB
+    prompt_lens = [3, 7, 5, 9]
+    B, steps = 4, 4
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype="fp32",
+                      kv_block_size=BS)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, model.cfg.vocab, (B, max(prompt_lens)))
+
+    prefill_fn, _ = build_serve_steps(model, topo, mcfg, cap)
+    tmpl, _specs = global_cache_shapes(model, topo, B, cap)
+    caches_ref = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), tmpl)
+    last_logits = np.zeros((B, model.vocab_padded), np.float32)
+    for b in range(B):
+        n = prompt_lens[b]
+        row = {"tokens": jnp.asarray(
+            np.broadcast_to(prompts[b:b + 1, :n], (B, n)).astype(np.int32))}
+        logits, caches_b = prefill_fn(params, row)
+
+        def put(dst, src):
+            return dst.at[:, b].set(
+                jnp.asarray(np.asarray(src)[:, b]).astype(dst.dtype))
+        caches_ref = jax.tree.map(put, caches_ref, caches_b)
+        last_logits[b] = np.asarray(logits)[b, -1]
+
+    step_ref = PG.build_contiguous_step(model, topo, mcfg, cap)
+    step_paged = PG.build_paged_step(model, topo, mcfg, max_blocks=MB,
+                                     block_size=BS, chunk=1, kv_dtype="fp32")
+    dp = topo.data_parallel_size
+    nbl = 16
+    allocs = [PG.PagedKVAllocator(nbl, BS) for _ in range(dp)]
+    tables = np.zeros((B, MB), np.int32)
+    for b in range(B):
+        blocks = allocs[b // (B // dp)].alloc(
+            PG.blocks_for(prompt_lens[b] + steps, BS))
+        tables[b, :len(blocks)] = blocks
+    pg_caches, _ = PG.init_paged_caches(model, topo, nbl, BS, "fp32")
+    pg_caches = PG.pages_from_contiguous(
+        model, topo, caches_ref, pg_caches, tables, prompt_lens,
+        block_size=BS, kv_dtype="fp32")
+
+    tok0 = np.argmax(last_logits[:, :model.cfg.vocab], -1).astype(np.int32)
+    pos = np.asarray(prompt_lens, np.int32)
+    seeds = np.arange(B, dtype=np.int32) * 101
+    temps = np.zeros(B, np.float32)
+    tok_r = tok_p = jnp.asarray(tok0[:, None])
+    ok_tok = ok_log = True
+    for s in range(steps):
+        p = jnp.asarray(pos + s)
+        tr, lr, caches_ref = step_ref(params, caches_ref, tok_r, p,
+                                      jnp.asarray(seeds), jnp.asarray(temps))
+        tp_, lp, pg_caches = step_paged(
+            params, pg_caches, tok_p, p, jnp.ones(B, jnp.int32),
+            jnp.asarray(tables), jnp.asarray(seeds), jnp.asarray(temps))
+        ok_tok &= bool(np.array_equal(np.asarray(tr), np.asarray(tp_)))
+        ok_log &= bool(np.array_equal(
+            np.asarray(lr).view(np.uint32), np.asarray(lp).view(np.uint32)))
+        tok_r = tr[:, None].astype(jnp.int32)
+        tok_p = tp_[:, None].astype(jnp.int32)
+    return {"tokens_bitwise": ok_tok, "logits_bitwise": ok_log,
+            "block_size": BS, "kv_dtype": "fp32", "steps": steps}
+
+
+def run(smoke: bool) -> dict:
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    # GQA path: tp=4 over 2 KV heads -> head-slot replication; dp=2
+    topo = MiCSTopology(make_host_mesh(1, 1, 2, 4))
+    model = build_model(cfg, tp=topo.model_size)
+    state = init_state(model, topo, seed=7)
+    params = state["params"]
+
+    mcfg = MiCSConfig(kv_dtype="bf16", kv_block_size=BLOCK_SIZE)
+    step_chunk, step_one, prefill_fn, decode_fn = build_engines(
+        model, topo, mcfg)
+
+    n = SMOKE_REQUESTS if smoke else N_REQUESTS
+    rates = SMOKE_RATES if smoke else RATES
+    vocab = model.cfg.vocab
+    trace = make_trace(n, vocab, np.random.default_rng(42))
+    max_plen = max(len(r.prompt) for r in trace)
+
+    gp, _sp = policies_from_config(mcfg)
+    profile = get_profile(PROFILE)
+    out = {"mesh": {"data": topo.data_parallel_size,
+                    "model": topo.model_size},
+           "block_size": BLOCK_SIZE, "max_blocks": MAX_BLOCKS,
+           "chunk": CHUNK, "slots": topo.data_parallel_size * SLOTS_LOCAL,
+           "fixed_rows": topo.data_parallel_size * FIXED_ROWS_LOCAL,
+           "kv_token_slots_per_rank": {
+               "paged": (NB_LOCAL - 1) * BLOCK_SIZE,
+               "fixed": FIXED_ROWS_LOCAL * CAP},
+           "n_requests": n, "kv_dtype": mcfg.kv_dtype,
+           "equivalence": bitwise_equivalence(model, topo, params),
+           "step_overhead": step_overhead(model, topo, mcfg, step_chunk,
+                                          step_one, prefill_fn, decode_fn,
+                                          params, max_plen),
+           "cells": {}}
+    for rate in rates:
+        arrival_ticks = [int(i / rate) for i in range(n)]
+        reqs = make_trace(n, vocab, np.random.default_rng(42))  # fresh state
+        cont = run_continuous(model, topo, mcfg, step_chunk, step_one, reqs,
+                              arrival_ticks)
+        # the offered-load timeline in seconds, shared by both engines
+        n_ticks = max(cont["ticks"], 1)
+        t_tick = cont["wall_s"] / n_ticks
+        arrival_s = [t * t_tick for t in arrival_ticks]
+        fixed = run_fixed(model, topo, mcfg, prefill_fn, decode_fn,
+                          make_trace(n, vocab, np.random.default_rng(42)),
+                          arrival_s, params, max_plen)
+        pred = cost_decode_step(
+            model, topo, profile, gp,
+            resident=SLOTS_LOCAL, ctx_len=CAP, kv_dtype=mcfg.kv_dtype,
+            chunk=1)
+        out["cells"][str(rate)] = {
+            "rate_req_per_tick": rate,
+            "paged": cont,
+            "fixed": fixed,
+            "normalized": normalized_throughput(cont, fixed,
+                                                out["step_overhead"]),
+            "tokens_per_s_ratio": (
+                cont["tokens_per_s"] / fixed["tokens_per_s"]
+                if fixed["tokens_per_s"] else float("inf")),
+            "predicted_decode_step_s": pred["t_step_s"],
+            "predicted_breakdown": pred,
+            "measured_decode_step_s": cont["measured_decode_step_s_mean"],
+        }
+    top = out["cells"][str(rates[-1])]   # the saturation cell
+    out["paged_beats_fixed_at_peak"] = top["normalized"]["ratio"] > 1.0
+    return out
+
+
+def check(out: dict, smoke: bool) -> None:
+    eq = out["equivalence"]
+    assert eq["tokens_bitwise"], "paged tokens diverge from contiguous"
+    assert eq["logits_bitwise"], "paged logits diverge from contiguous"
+    assert out["step_overhead"]["per_row_ratio"] <= STEP_REGRESSION_FACTOR, (
+        "paged decode step regressed vs fixed-batch baseline:",
+        out["step_overhead"])
+    for cell in out["cells"].values():
+        assert cell["paged"]["finished"] == out["n_requests"], cell
+        assert cell["predicted_decode_step_s"] > 0
+    if not smoke:
+        assert out["paged_beats_fixed_at_peak"], (
+            "continuous batching lost to the static baseline at peak load")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests and rates")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the gate invariants after printing JSON")
+    args = ap.parse_args()
+    result = run(args.smoke)
+    print(json.dumps(result, indent=1))
+    if args.check:
+        check(result, args.smoke)

@@ -512,6 +512,11 @@ class Candidate:
     t_hop2_total_s: float = 0.0          # full hop-2 ring time
     t_hop2_exposed_s: float = 0.0        # what actually serializes the step
     mem_bytes: float = 0.0               # memplan per-device footprint
+    # -- serve-mode decode pricing (mode="serve" only) --------------------
+    kv_dtype: str = "bf16"               # paged KV block dtype
+    resident_requests: int = 0           # predicted residents per device
+    t_decode_s: float = 0.0              # modeled decode-step seconds
+    tokens_per_s: float = 0.0            # modeled global decode throughput
 
     def describe(self) -> dict:
         return {
@@ -533,6 +538,10 @@ class Candidate:
             "t_hop2_hidden_s": self.t_hop2_total_s - self.t_hop2_exposed_s,
             "mem_bytes": self.mem_bytes,
             "mem_gib": self.mem_bytes / GIB,
+            "kv_dtype": self.kv_dtype,
+            "resident_requests": self.resident_requests,
+            "t_decode_s": self.t_decode_s,
+            "tokens_per_s": self.tokens_per_s,
         }
 
 
@@ -562,20 +571,37 @@ class Plan:
         prints)."""
         budget = "" if self.hbm_budget_gb is None \
             else f" hbm_budget={self.hbm_budget_gb:g}GiB"
-        rows = [f"autotune[{self.profile.name}] mode={self.mode}{budget} "
-                f"(chosen marked *):",
+        serve = self.mode == "serve"
+        head = (f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
+                f"{'pf':>3} {'kv':>5} {'res':>5} "
+                f"{'t_comm_ms':>10} {'t_dec_ms':>9} {'tok_s':>9} "
+                f"{'mem_GB':>7}") if serve else (
                 f"  {'rank':>4} {'topology':<12} {'inner':>5} {'wire':>5} "
                 f"{'hop1':>5} {'hop2':>5} {'sched':>6} {'bkt_MB':>6} "
                 f"{'clip':>6} {'carry':>6} {'off':>4} "
                 f"{'t_comm_ms':>10} {'h2_exp_ms':>9} {'inter_MB':>9} "
-                f"{'mem_GB':>7}"]
+                f"{'mem_GB':>7}")
+        rows = [f"autotune[{self.profile.name}] mode={self.mode}{budget} "
+                f"(chosen marked *):", head]
         cands = self.candidates[:top] if top else self.candidates
         for i, c in enumerate(cands):
             mark = "*" if c is self.chosen else " "
+            mem = f"{c.mem_bytes / GIB:.2f}" if c.mem_bytes else "-"
+            if serve:
+                rows.append(
+                    f" {mark}{i:>4} {c.gather.topology:<12} "
+                    f"{str(c.gather.inner or '-'):>5} "
+                    f"{c.gather.wire_dtype:>5} "
+                    f"{'y' if c.gather.prefetch else 'n':>3} "
+                    f"{c.kv_dtype:>5} {c.resident_requests:>5} "
+                    f"{c.t_comm_s * 1e3:>10.3f} "
+                    f"{c.t_decode_s * 1e3:>9.3f} "
+                    f"{c.tokens_per_s:>9.0f} "
+                    f"{mem:>7}")
+                continue
             sched = "bucket" if c.boundary == "bucketed" else "serial"
             bkt = f"{c.hop2_bucket_mb:g}" if c.boundary == "bucketed" else "-"
             off = "host" if c.gather.carry_offload == "host" else "-"
-            mem = f"{c.mem_bytes / GIB:.2f}" if c.mem_bytes else "-"
             rows.append(
                 f" {mark}{i:>4} {c.gather.topology:<12} "
                 f"{str(c.gather.inner or '-'):>5} {c.gather.wire_dtype:>5} "
@@ -686,6 +712,67 @@ def cost_candidate(
     )
 
 
+# kv_dtype permission ladder: MiCSConfig.kv_dtype is a numerics *ceiling*
+# — the serve tuner may pick any dtype at or below its lossiness, never a
+# lossier one the user did not opt into.
+KV_DTYPES = ("fp32", "bf16", "int8")
+_KV_LOSS = {d: i for i, d in enumerate(KV_DTYPES)}
+DEFAULT_SERVE_CTX = 2048
+
+
+def cost_decode_step(
+    model,
+    topo: MiCSTopology,
+    profile: str | LinkProfile,
+    gather: GatherPolicy,
+    *,
+    resident: int,
+    ctx_len: int,
+    kv_dtype: str = "bf16",
+    chunk: int = 1,
+    t_comm_s: float | None = None,
+) -> dict:
+    """Roofline model of one continuous-batching decode step.
+
+    Decode re-gathers every layer's weights each step, so the step time is
+    the interplay of a batch-independent weight stream and batch-dependent
+    attention/GEMM work:
+
+    * ``t_comm`` — the gather wire time (``cost_candidate`` serve mode);
+    * ``t_weights`` — streaming the gathered buffers out of HBM once;
+    * ``t_flops`` — ``2 * P_local * resident * chunk`` matmul FLOPs;
+    * ``t_kv`` — reading every resident request's block-rounded KV pages
+      (``memplan.kv_token_bytes``) for attention.
+
+    Under a prefetched gather the wire time overlaps the previous layer's
+    compute (``max``); a serial gather exposes it (``sum``).  ``resident``
+    is per-device rows; throughput scales by the data-parallel width.
+    """
+    profile = get_profile(profile)
+    weight_bytes = 0.0
+    n_params_local = 0.0
+    cb = M._COMPUTE_BYTES[gather.wire_dtype]
+    for _name, (stack, _tp, flat_len) in model.global_flat_shapes().items():
+        weight_bytes += stack * flat_len * cb
+        n_params_local += stack * flat_len
+    if t_comm_s is None:
+        t_comm_s = cost_candidate(model, topo, profile, gather,
+                                  SyncPolicy("2hop", "fp32", "fp32"),
+                                  mode="serve").t_comm_s
+    t_comm = t_comm_s
+    t_weights = profile.hbm_time(weight_bytes)
+    t_flops = 2.0 * n_params_local * resident * chunk / profile.peak_flops
+    kv_bytes = resident * ctx_len * M.kv_token_bytes(model, kv_dtype)
+    t_kv = profile.hbm_time(kv_bytes)
+    t_compute = t_weights + t_flops + t_kv
+    t_step = max(t_comm, t_compute) if gather.prefetch \
+        else t_comm + t_compute
+    dp = getattr(topo, "data_parallel_size", 1)
+    tok_s = resident * chunk * dp / t_step if t_step > 0 else 0.0
+    return {"t_step_s": t_step, "t_comm_s": t_comm, "t_weights_s": t_weights,
+            "t_flops_s": t_flops, "t_kv_s": t_kv, "tokens_per_s": tok_s}
+
+
 def enumerate_candidates(
     topo: MiCSTopology,
     *,
@@ -753,6 +840,11 @@ def rank_policies(
     local_batch: int = 0,
     seq: int = 0,
     offload_opt: bool = False,
+    kv_ceiling: str = "bf16",
+    kv_block_size: int = 16,
+    serve_ctx: int = 0,
+    max_resident: int = 0,
+    arrival_rate: float = 0.0,
 ) -> Plan:
     """Cost every candidate and rank by modeled collective time.
 
@@ -784,8 +876,13 @@ def rank_policies(
     profile = get_profile(profile)
     carries = ("stored",) if hbm_budget_gb is None \
         else ("stored", "remat", "host")
+    serve = mode == "serve"
+    # serving ranks the prefetch toggle itself (overlap vs serial gathers
+    # changes the decode roofline); training takes it as a caller input.
+    prefetches = (True, False) if serve else (prefetch,)
     cands = []
-    for g, s in enumerate_candidates(topo, prefetch=prefetch, mode=mode):
+    for pf in prefetches:
+      for g, s in enumerate_candidates(topo, prefetch=pf, mode=mode):
         for boundary, bucket_mb in enumerate_hop2_schedules(topo, mode):
             clips = ("exact", "approx") if (
                 boundary == "bucketed" and mode == "train"
@@ -805,6 +902,44 @@ def rank_policies(
                                        boundary=boundary,
                                        hop2_bucket_mb=bucket_mb,
                                        clip_mode=clip)
+                    if serve:
+                        if getattr(model, "cfg", None) is None:
+                            # duck-typed planner stubs carry no attention
+                            # dims: rank the gather axes alone, without
+                            # the KV/residency grid (defaults sort these
+                            # by t_comm_s, the pre-KV serve behavior)
+                            mem = M.predict_footprint(
+                                model, topo, g2, s, mode="serve")
+                            cands.append(dataclasses.replace(
+                                c, mem_bytes=mem.total_bytes))
+                            continue
+                        # KV-dtype axis: residency from the free HBM after
+                        # the base footprint, decode step from the roofline.
+                        ctx = serve_ctx or DEFAULT_SERVE_CTX
+                        cap_bytes = hbm_budget_gb * GIB if hbm_budget_gb \
+                            else float(profile.hbm_bytes)
+                        for kv in KV_DTYPES:
+                            res = M.max_resident_requests(
+                                model, topo, g2, s, hbm_bytes=cap_bytes,
+                                ctx_len=ctx, kv_block_size=kv_block_size,
+                                kv_dtype=kv)
+                            if max_resident:
+                                res = min(res, max_resident)
+                            dec = cost_decode_step(
+                                model, topo, profile, g2,
+                                resident=max(res, 1), ctx_len=ctx,
+                                kv_dtype=kv, t_comm_s=c.t_comm_s)
+                            blocks = -(-ctx // kv_block_size)
+                            mem_kv = M.predict_footprint(
+                                model, topo, g2, s, mode="serve",
+                                kv_pages_tokens=res * blocks * kv_block_size,
+                                kv_dtype=kv)
+                            cands.append(dataclasses.replace(
+                                c, mem_bytes=mem_kv.total_bytes,
+                                kv_dtype=kv, resident_requests=res,
+                                t_decode_s=dec["t_step_s"],
+                                tokens_per_s=dec["tokens_per_s"]))
+                        continue
                     mem = M.predict_footprint(
                         model, topo, g2, s, micro_steps=micro_steps,
                         mode=mode, local_batch=local_batch, seq=seq,
@@ -816,8 +951,15 @@ def rank_policies(
     # is what makes remat the tie-break choice at p=1, where the extra
     # backward re-gather moves zero wire bytes).  Exact clip and the
     # in-HBM carry sort before approx/host on full ties — reference
-    # numerics and no host traffic unless they buy something.
-    cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
+    # numerics and no host traffic unless they buy something.  Serving
+    # sorts by the decode roofline instead (throughput breaks ties).
+    if serve:
+        cands.sort(key=lambda c: (c.t_decode_s, -c.tokens_per_s,
+                                  c.t_comm_s, _KV_LOSS[c.kv_dtype],
+                                  c.gather.topology, c.gather.wire_dtype,
+                                  not c.gather.prefetch, c.mem_bytes))
+    else:
+        cands.sort(key=lambda c: (c.t_comm_s, c.gather.topology,
                               c.gather.wire_dtype, c.sync.hop1_wire_dtype,
                               c.sync.hop2_wire_dtype,
                               c.boundary, c.hop2_bucket_mb,
@@ -836,11 +978,13 @@ def rank_policies(
     def fits(c: Candidate) -> bool:
         return hbm_budget_gb is None \
             or c.mem_bytes <= hbm_budget_gb * GIB
+    kv_cap = _KV_LOSS.get(kv_ceiling, _KV_LOSS["bf16"])
     eligible = [c for c in cands
                 if (allow_int8 or not c.lossy_wire)
                 and hop2_ok(c)
                 and (allow_int8_hop1 or not c.lossy_hop1)
-                and (allow_approx_clip or c.clip_mode == "exact")]
+                and (allow_approx_clip or c.clip_mode == "exact")
+                and (not serve or _KV_LOSS[c.kv_dtype] <= kv_cap)]
     feasible = [c for c in eligible if fits(c)]
     if hbm_budget_gb is not None and eligible and not feasible:
         smallest = min(eligible, key=lambda c: c.mem_bytes)
@@ -851,7 +995,12 @@ def rank_policies(
             f"prefetch_carry={smallest.gather.prefetch_carry!r}) needs "
             f"{smallest.mem_bytes / 1024**3:.3f} GiB per device; grow the "
             f"partition group (memplan.min_partition_size) or the budget")
-    chosen = (feasible or eligible or cands)[0]
+    pool = feasible or eligible or cands
+    # a target arrival rate prefers the lowest-latency candidate that still
+    # meets the demanded decode throughput; none meeting it -> fastest.
+    meeting = [c for c in pool
+               if not arrival_rate or c.tokens_per_s >= arrival_rate]
+    chosen = (meeting or pool)[0]
     return Plan(profile=profile, mode=mode, micro_steps=micro_steps,
                 candidates=tuple(cands), chosen=chosen,
                 hbm_budget_gb=hbm_budget_gb)
@@ -862,7 +1011,8 @@ def rank_policies(
 # ---------------------------------------------------------------------------
 
 def resolve_config(mcfg, model, topo: MiCSTopology, *,
-                   mode: str = "train", local_batch: int = 0, seq: int = 0):
+                   mode: str = "train", local_batch: int = 0, seq: int = 0,
+                   arrival_rate: float = 0.0):
     """Resolve ``MiCSConfig(policy="auto")`` into concrete policy fields.
 
     Returns ``(resolved_config, plan)``; manual configs pass through with
@@ -896,6 +1046,13 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         hbm_budget_gb=getattr(mcfg, "hbm_budget_gb", None),
         local_batch=local_batch, seq=seq,
         offload_opt=getattr(mcfg, "offload_opt", False),
+        # serve axes: the configured kv_dtype is the numerics ceiling, the
+        # configured residency (0 = planner-derived) caps the pool sizing
+        kv_ceiling=getattr(mcfg, "kv_dtype", "bf16"),
+        kv_block_size=getattr(mcfg, "kv_block_size", 16),
+        serve_ctx=seq,
+        max_resident=getattr(mcfg, "max_resident_requests", 0),
+        arrival_rate=arrival_rate,
     )
     g, s = plan.chosen.gather, plan.chosen.sync
     if g.wire_dtype == "fp32":
@@ -920,6 +1077,16 @@ def resolve_config(mcfg, model, topo: MiCSTopology, *,
         hop2_bucket_mb=plan.chosen.hop2_bucket_mb,
         clip_mode=plan.chosen.clip_mode,
     )
+    if mode == "serve":
+        # decode-policy round-trip: the winning KV dtype, prefetch toggle
+        # and planner-derived residency land back on the config so the
+        # paged engine (runtime/paged.py) builds exactly what was ranked.
+        resolved = dataclasses.replace(
+            resolved,
+            prefetch=g.prefetch,
+            kv_dtype=plan.chosen.kv_dtype,
+            max_resident_requests=plan.chosen.resident_requests,
+        )
     return resolved, plan
 
 

@@ -74,6 +74,56 @@ class MemoryBudgetError(ValueError):
     """No candidate fits the HBM budget (raised instead of an empty plan)."""
 
 
+# KV-cache element bytes per kv_dtype (int8 adds f32 scales separately).
+_KV_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def kv_token_bytes(model, kv_dtype: str = "bf16") -> float:
+    """Per-device HBM bytes one cached token costs across all layers.
+
+    Prices the paged KV pool (runtime/paged.py): k + v at ``kv_dtype``
+    over the rank-local KV head slots, plus the per-(token, head,
+    128-block) f32 scale pages of the int8 layout.  Analytic and jax-free
+    — the same ``attn_dims`` the model builds its caches from.
+    """
+    from repro.models.dims import attn_dims
+
+    cfg = model.cfg
+    tp = max(int(getattr(model, "tp", 1)), 1)
+    ad = attn_dims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                   cfg.resolved_head_dim, tp)
+    per_layer = 2.0 * ad.hkv_local * ad.head_dim * _KV_BYTES[kv_dtype]
+    if kv_dtype == "int8":
+        per_layer += 2.0 * ad.hkv_local * math.ceil(ad.head_dim / BLOCK) * 4.0
+    return per_layer * cfg.n_layers
+
+
+def max_resident_requests(
+    model,
+    topo,
+    gather: GatherPolicy,
+    sync: SyncPolicy,
+    *,
+    hbm_bytes: float,
+    ctx_len: int,
+    kv_block_size: int = 16,
+    kv_dtype: str = "bf16",
+) -> int:
+    """How many requests of ``ctx_len`` positions fit per device.
+
+    Free HBM after the serve-mode base footprint (param shards + gather
+    buffers), divided by one request's block-rounded KV bytes.  This is
+    what sizes the paged pool (``MiCSConfig.max_resident_requests == 0``)
+    and what the serve harness verifies against the compiled
+    ``memory_analysis()`` (same discipline as the training planner).
+    """
+    base = predict_footprint(model, topo, gather, sync, mode="serve")
+    free = float(hbm_bytes) - base.total_bytes
+    blocks = math.ceil(max(ctx_len, 1) / kv_block_size)
+    per_req = blocks * kv_block_size * kv_token_bytes(model, kv_dtype)
+    return max(int(free // per_req), 0)
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceGrid:
     """The three sizes the footprint model needs — duck-types MiCSTopology
@@ -132,6 +182,12 @@ def predict_footprint(
     boundary: str = "bucketed",
     hop2_bucket_mb: float = 32.0,
     offload_opt: bool = False,
+    kv_pages_tokens: int = 0,
+    kv_dtype: str = "bf16",
+    decode_batch: int = 0,
+    decode_ctx: int = 0,
+    decode_chunk: int = 0,
+    kv_max_blocks: int = 0,
 ) -> MemPlan:
     """Per-device HBM footprint of one training/serving step.
 
@@ -195,6 +251,42 @@ def predict_footprint(
                 if name in scanned and getattr(model, "cfg", None):
                     add("activation_ckpt",
                         stack * local_batch * seq * model.cfg.d_model * cb)
+        # paged-KV serving (runtime/paged.py): the block pool is a donated
+        # argument like the param shards, exact by construction; the decode
+        # step's transients are the per-layer gathered [b, MB*bs, h, dh]
+        # k/v views plus the sampling logits workspace.
+        if kv_pages_tokens:
+            pool = kv_pages_tokens * kv_token_bytes(model, kv_dtype)
+            args += pool
+            # the decode scan double-buffers the donated pool carry; pools
+            # stored narrower than fp32 additionally stage their f32
+            # upcast during the write/read fusion (observed on the XLA
+            # buffer ledger, held to MEM_RTOL by the serve harness)
+            add("kv_pool_update", pool)
+            if kv_dtype != "fp32":
+                add("kv_pool_update",
+                    kv_pages_tokens * kv_token_bytes(model, "fp32"))
+        if decode_batch and decode_chunk:
+            # the scheduler's fixed-shape plan rows (runtime/batching
+            # StepPlan): tokens [b, chunk] + block table [b, max_blocks]
+            # + pos/n_new/seeds (int32) + temps (f32) — donated-arg peers
+            # of the KV pool, 4 bytes each.
+            args += decode_batch * (decode_chunk + kv_max_blocks + 4) * 4.0
+        if decode_batch and decode_ctx and getattr(model, "cfg", None):
+            from repro.models.dims import attn_dims
+
+            mcfg_ = model.cfg
+            tp = max(int(getattr(model, "tp", 1)), 1)
+            ad = attn_dims(mcfg_.d_model, mcfg_.n_heads, mcfg_.n_kv_heads,
+                           mcfg_.resolved_head_dim, tp)
+            view = 2.0 * decode_batch * decode_ctx * ad.hkv_local \
+                * ad.head_dim * cb
+            if kv_dtype == "int8":   # dequantize reads q + f32 scales too
+                view += 2.0 * decode_batch * decode_ctx * ad.hkv_local \
+                    * (ad.head_dim + math.ceil(ad.head_dim / BLOCK) * 4)
+            add("kv_gather_view", view)
+            vocab = int(getattr(model, "vocab_padded", mcfg_.vocab))
+            add("decode_logits", decode_batch * (vocab // tp) * 8)
         return MemPlan(components=comp, args_bytes=args, mode=mode)
 
     # -- gradient accumulator + its micro-loop double buffer ---------------

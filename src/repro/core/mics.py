@@ -96,6 +96,12 @@ class MiCSConfig:
     offload_opt: bool = False           # AdamW m/v shards live in host memory
     hbm_budget_gb: float | None = None  # per-device HBM budget (GiB) the
     #                                     memory planner gates policies on
+    kv_dtype: str = "bf16"              # paged-KV block dtype: 'fp32' | 'bf16'
+    #                                     | 'int8' (core/quant.py block scales;
+    #                                     a permission under policy='auto')
+    kv_block_size: int = 16             # tokens per paged-KV block
+    max_resident_requests: int = 0      # serving residency cap per device;
+    #                                     0 = derive from the memory planner
 
     def __post_init__(self):
         from repro.core.comm import (
@@ -149,6 +155,17 @@ class MiCSConfig:
             raise ValueError(
                 f"compress_hop2 must be a bool or one of {HOP2_WIRE_DTYPES}, "
                 f"got {self.compress_hop2!r}")
+        if self.kv_dtype not in ("fp32", "bf16", "int8"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r} "
+                "(expected 'fp32', 'bf16' or 'int8')")
+        if self.kv_block_size < 1:
+            raise ValueError(
+                f"kv_block_size must be >= 1, got {self.kv_block_size}")
+        if self.max_resident_requests < 0:
+            raise ValueError(
+                "max_resident_requests must be >= 0 (0 = planner-derived), "
+                f"got {self.max_resident_requests}")
 
 
 # ---------------------------------------------------------------------------

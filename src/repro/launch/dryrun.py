@@ -106,6 +106,9 @@ def serve_decode_inputs(model, topo, seq, gb):
         "tokens": sds((gb, 1), jnp.int32),
         "pos": sds((), jnp.int32),
         "caches": caches,
+        "seeds": sds((gb,), jnp.int32),
+        "temps": sds((gb,), jnp.float32),
+        "row_mask": sds((gb,), jnp.bool_),
     }
 
 
@@ -230,7 +233,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, mcfg: MiCSConfig,
             model, topo, mcfg, cache_len=spec["seq"], batch_axes=baxes)
         inp = serve_decode_inputs(model, topo, spec["seq"], spec["global_batch"])
         lowered = decode_fn.lower(
-            serve_params, inp["caches"], inp["tokens"], inp["pos"])
+            serve_params, inp["caches"], inp["tokens"], inp["pos"],
+            inp["seeds"], inp["temps"], inp["row_mask"])
 
     record["lower_s"] = round(time.time() - t0, 1)
     t1 = time.time()

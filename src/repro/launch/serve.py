@@ -4,11 +4,14 @@ Weight gathers run through the same CommEngine as training (decode
 re-gathers every layer each step); ``--policy auto`` lets the link-model
 autotuner pick the gather topology/wire dtype for ``--link-profile``
 (serving mode: forward gathers only, so int8 wire wins once
-``--quant-gather`` permits it).
+``--quant-gather`` permits it) and prints the ranked serve table —
+candidates now carry the decode axes too: KV dtype (up to the
+``--kv-dtype`` numerics ceiling), block size and planner-derived
+residency, priced by ``cost_decode_step`` at ``--arrival-rate``.
 
 Runnable on this host with reduced configs:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --prompt-len 16 --decode-tokens 8
+      --prompt-len 16 --decode-tokens 8 --policy auto --arrival-rate 0.5
 """
 
 from __future__ import annotations
@@ -43,6 +46,19 @@ def main():
                          "auto)")
     ap.add_argument("--prefetch", type=int, default=1,
                     help="1 = double-buffered lookahead gathers, 0 = serial")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="offered load (requests/s/replica) the serve "
+                         "autotuner prices decode policies against; 0 = "
+                         "throughput-saturated")
+    ap.add_argument("--kv-dtype", choices=["fp32", "bf16", "int8"],
+                    default="bf16",
+                    help="KV-cache storage dtype; under --policy auto this "
+                         "is the numerics ceiling the planner may narrow to")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="paged-KV block size in token positions")
+    ap.add_argument("--max-resident-requests", type=int, default=0,
+                    help="cap on concurrently resident requests per "
+                         "replica; 0 = planner-derived from the HBM budget")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,10 +72,18 @@ def main():
     cache_len = args.prompt_len + args.decode_tokens
     mcfg = MiCSConfig(policy=args.policy, link_profile=args.link_profile,
                       quant_gather=args.quant_gather,
-                      prefetch=bool(args.prefetch))
-    mcfg, plan = resolve_config(mcfg, model, topo, mode="serve")
+                      prefetch=bool(args.prefetch),
+                      kv_dtype=args.kv_dtype,
+                      kv_block_size=args.kv_block_size,
+                      max_resident_requests=args.max_resident_requests)
+    mcfg, plan = resolve_config(mcfg, model, topo, mode="serve",
+                                seq=cache_len,
+                                arrival_rate=args.arrival_rate)
     if plan is not None:
         print(plan.table())
+        print(f"serve policy: kv_dtype={mcfg.kv_dtype} "
+              f"kv_block_size={mcfg.kv_block_size} "
+              f"max_resident_requests={mcfg.max_resident_requests}")
     if mcfg.quant_gather:  # deployment-time int8 conversion (quant.py)
         params = quantize_state(params)
     prefill_fn, decode_fn = build_serve_steps(

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
+from repro.core import quant as Q
 from repro.core.flat_param import LayoutBuilder
 from repro.models import layers as L
 from repro.models.dims import AttnDims, attn_dims, shard_dim
@@ -84,6 +85,62 @@ def attn_out(t, attn: jax.Array, ad: AttnDims, ctx: L.Ctx, prefix: str, *, bias:
     return out
 
 
+def _paged_kv_write(cache, pages, k, v, absp, valid_tok):
+    """Scatter this tick's k/v token rows into the paged block pool.
+
+    cache: {"k","v"[,"ks","vs"]} with k/v [n_blocks, block_size, h, dh]
+    (int8 pools add f32 scale pages [n_blocks, block_size, n_scale]);
+    k/v [b, tq, h, dh]; absp [b, tq] absolute positions; valid_tok [b, tq].
+    Padding rows are redirected out of range and dropped (``mode="drop"``),
+    so a chunk never corrupts blocks it does not own.  Int8 pools quantize
+    each token row against its own per-128-block absmax (the qgZ scheme) —
+    blocks are only ever written incrementally, never re-quantized.
+    """
+    nb, bs_blk = cache["k"].shape[:2]
+    bidx = jnp.arange(absp.shape[0])[:, None]
+    blk = pages.block_tables[bidx, absp // bs_blk]
+    blk = jnp.where(valid_tok, blk, nb)  # out-of-range -> dropped
+    off = absp % bs_blk
+    new = dict(cache)
+    if "ks" in cache:
+        # Scales are per (token, head, 128-block of head_dim) so the scale
+        # pages shard over the model axis exactly like the k/v pages.
+        qk, sk = Q.quantize_flat(k.astype(jnp.float32))
+        qv, sv = Q.quantize_flat(v.astype(jnp.float32))
+        new["k"] = cache["k"].at[blk, off].set(qk, mode="drop")
+        new["v"] = cache["v"].at[blk, off].set(qv, mode="drop")
+        new["ks"] = cache["ks"].at[blk, off].set(sk, mode="drop")
+        new["vs"] = cache["vs"].at[blk, off].set(sv, mode="drop")
+    else:
+        new["k"] = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype), mode="drop")
+        new["v"] = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype), mode="drop")
+    return new
+
+
+def _paged_kv_read(cache, pages, compute_dtype):
+    """Gather the block pool into a contiguous [b, max_blocks*bs, h, dh] view.
+
+    The view has the same key-axis length as a contiguous cache of capacity
+    ``max_blocks * block_size``, and unwritten tail entries are masked by
+    ``kv_valid_len`` — masked lanes underflow to exactly 0.0 in the fp32
+    softmax, which is what makes paged decode bitwise-equal to the
+    contiguous reference.
+    """
+    tables = pages.block_tables
+    b, mb = tables.shape
+    nb, bs_blk, h, dh = cache["k"].shape
+
+    def view(name):
+        pagev = cache[name][tables]  # [b, mb, bs, ...]
+        return pagev.reshape(b, mb * bs_blk, *pagev.shape[3:])
+
+    k, v = view("k"), view("v")
+    if "ks" in cache:
+        k = Q.dequantize_flat(k, view("ks"), dtype=compute_dtype)
+        v = Q.dequantize_flat(v, view("vs"), dtype=compute_dtype)
+    return k, v
+
+
 def self_attention(
     t, x, ctx: L.Ctx, ad: AttnDims, cfg: ArchConfig, *,
     prefix: str = "attn.", causal: bool = True, window: int = 0,
@@ -96,6 +153,41 @@ def self_attention(
     """
     bsz, tq, _ = x.shape
     q, k, v = attn_qkv(t, x, x, ad, ctx, prefix, bias=bias)
+
+    if ctx.mode == "decode" and (ctx.pages is not None or getattr(ctx.pos, "ndim", 0)):
+        # Continuous batching: per-request positions [b] (ragged batch),
+        # optionally over a paged block pool.  tq > 1 means a chunk of
+        # tokens per slot (chunked prefill interleaved with decode); rows
+        # at or beyond a slot's n_new are padding whose writes are dropped
+        # and whose outputs the scheduler ignores.
+        if window:
+            raise NotImplementedError("paged/vector-position decode needs window == 0")
+        pos, pages = ctx.pos, ctx.pages
+        absp = pos[:, None] + jnp.arange(tq)[None, :]  # [b, tq]
+        if use_rope:
+            q = _rope5(q, absp, cfg.rope_theta)
+            k = L.rotary(k, absp, cfg.rope_theta)
+        n_new = getattr(pages, "n_new", None) if pages is not None else None
+        valid_tok = (jnp.arange(tq)[None, :] < n_new[:, None]) if n_new is not None \
+            else jnp.ones((bsz, tq), bool)
+        if pages is not None:
+            new_cache = _paged_kv_write(cache, pages, k, v, absp, valid_tok)
+            k_all, v_all = _paged_kv_read(new_cache, pages, ctx.compute_dtype)
+        else:
+            cap = cache["k"].shape[1]
+            bidx = jnp.arange(bsz)[:, None]
+            slot = jnp.where(valid_tok, absp, cap)  # out-of-range -> dropped
+            k_all = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype), mode="drop")
+            v_all = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k_all, "v": v_all}
+        out = L.attention(
+            q, k_all, v_all, causal=False, window=0,
+            kv_valid_len=absp + 1, scores_dtype=ctx.scores_dtype,
+        )
+        # a cache dtype wider than the compute dtype (fp32 KV under bf16
+        # compute) must not leak into the residual stream's scan carry
+        out = out.astype(x.dtype)
+        return attn_out(t, out, ad, ctx, prefix, bias=bias), new_cache
 
     if ctx.mode == "decode":
         pos = ctx.pos

@@ -41,6 +41,9 @@ class Ctx:
     scores_bf16: bool = False      # bf16 attention scores (§Perf)
     mlstm_chunk: int = 0           # chunkwise-parallel mLSTM (§Perf; 0=scan)
     step_seed: Any = None          # traced step counter (qgZ dither seed)
+    pages: Any = None              # paged-KV state (runtime/paged.PageState):
+    #                                block_tables [b, max_blocks] + block_size;
+    #                                None = contiguous cache (the default)
 
     @property
     def scores_dtype(self):
@@ -104,8 +107,14 @@ def _gqa_scores(q: jax.Array, k: jax.Array, dtype=jnp.float32) -> jax.Array:
 def _masked_softmax(s: jax.Array, bias: jax.Array) -> jax.Array:
     """Numerically-stable softmax in the score dtype; the row-max and the
     normalizer are kept in fp32 (flash-kernel-style) so bf16 scores only
-    halve the HBM traffic of the [tq, tk] tensors, not the statistics."""
-    s = s + bias[None, None, None].astype(s.dtype)
+    halve the HBM traffic of the [tq, tk] tensors, not the statistics.
+
+    ``bias`` is [tq, tk] (shared across the batch) or [b, tq, tk]
+    (per-request masks for continuous batching)."""
+    if bias.ndim == 3:
+        s = s + bias[:, None, None].astype(s.dtype)
+    else:
+        s = s + bias[None, None, None].astype(s.dtype)
     m = lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m)
     denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
@@ -160,15 +169,23 @@ def attention(
     scale = 1.0 / math.sqrt(dh)
     qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
 
+    # Per-request valid lengths ([b] or [b, tq]) produce a [b, tq, tk] bias;
+    # a scalar kv_valid_len keeps the exact legacy [tq, tk] code path.
+    batched_valid = kv_valid_len is not None and getattr(kv_valid_len, "ndim", 0) >= 1
+
     def direct(qc, q_pos):
         bias = _mask_bias(
             q_pos, k_offset + jnp.arange(tk), causal=causal, window=window,
-            kv_valid_len=kv_valid_len,
+            kv_valid_len=None if batched_valid else kv_valid_len,
         )
+        if batched_valid:
+            kvl = kv_valid_len if kv_valid_len.ndim == 2 else kv_valid_len[:, None]
+            invalid = (k_offset + jnp.arange(tk))[None, None, :] >= kvl[:, :, None]
+            bias = bias[None] + jnp.where(invalid, NEG_INF, 0.0)
         p = _masked_softmax(_gqa_scores(qc, k, scores_dtype), bias)
         return _gqa_out(p, v)
 
-    if tq <= max(chunk_q, 1) or tq % chunk_q != 0:
+    if batched_valid or tq <= max(chunk_q, 1) or tq % chunk_q != 0:
         return direct(qs, q_offset + jnp.arange(tq))
 
     nq = tq // chunk_q

@@ -388,10 +388,13 @@ def embed_tokens(model: ModelDef, t_embed, tokens, ctx: L.Ctx, *, pos=None):
     cfg = model.cfg
     x = L.embed_lookup(t_embed["emb.table"], tokens, ctx)
     if "emb.pos" in t_embed:
-        positions = (
-            jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
-            if pos is None else jnp.broadcast_to(pos, tokens.shape)
-        )
+        if pos is None:
+            positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        elif getattr(pos, "ndim", 0) == 1:
+            # per-request positions [b] (continuous batching)
+            positions = pos[:, None] + jnp.arange(tokens.shape[1])[None, :]
+        else:
+            positions = jnp.broadcast_to(pos, tokens.shape)
         pe = L.embed_lookup(t_embed["emb.pos"], positions, ctx)
         x = x + pe
     return x.astype(ctx.compute_dtype)
@@ -506,11 +509,13 @@ def decode_step(
     flat: dict[str, jax.Array],
     comm,
     ctx: L.Ctx,
-    tokens: jax.Array,          # [b, 1] current token ids
-    pos: jax.Array,             # scalar absolute position
+    tokens: jax.Array,          # [b, tq] current token ids (tq=1 rectangular)
+    pos: jax.Array,             # scalar absolute position, or [b] per-request
     caches: dict,
+    *,
+    pages=None,                 # runtime/paged.PageState for paged KV caches
 ):
-    ctx = dataclasses.replace(ctx, mode="decode", pos=pos)
+    ctx = dataclasses.replace(ctx, mode="decode", pos=pos, pages=pages)
     batch = {"tokens": tokens}
     hidden, _, new_caches, t_head = forward(
         model, flat, comm, ctx, batch, caches)
@@ -543,6 +548,59 @@ def greedy_sample(logits_local: jax.Array, ctx: L.Ctx, vocab_real: int) -> jax.A
     lg = jnp.where(col[None, None, :] < vocab_real, lg, L.NEG_INF)
     local_max = jnp.max(lg, axis=-1)
     local_arg = jnp.argmax(lg, axis=-1) + start
+    if ctx.tp == 1:
+        return local_arg
+    gmax = lax.pmax(local_max, ctx.tp_axis)
+    cand = jnp.where(local_max >= gmax, local_arg, jnp.iinfo(jnp.int32).max)
+    return lax.pmin(cand, ctx.tp_axis)
+
+
+def sample_tokens(
+    logits_local: jax.Array,    # [b, V/tp] vocab-parallel logits
+    ctx: L.Ctx,
+    vocab_real: int,
+    *,
+    seed: jax.Array,            # [b] int32 per-request seeds
+    pos: jax.Array,             # [b] int32 position of the sampled token
+    temperature: jax.Array,     # [b] f32; 0.0 = greedy
+    top_k: int = 0,             # static; 0 = full vocab
+) -> jax.Array:
+    """Seeded categorical sampler over vocab-parallel logits -> [b] ids.
+
+    Exact Gumbel-max: argmax(logits/T + G) with G ~ Gumbel(0, 1) drawn from
+    a key folded over (request seed, token position, tp shard index) — the
+    same step-varying fold-in discipline as the qgZ dither seed, so decoding
+    is reproducible per (seed, position) and distinct across both.  Rows
+    with ``temperature == 0`` take the noiseless argmax (== greedy_sample).
+    Under tp > 1 each shard draws noise for its own vocab columns and the
+    global argmax uses the pmax/pmin index trick; ``top_k`` is applied
+    per shard, i.e. the union of per-shard top-k — a superset of the true
+    top-k (exact when tp == 1).
+    """
+    b, vl = logits_local.shape
+    lg = logits_local.astype(jnp.float32)
+    start = ctx.tp_index() * vl
+    col = start + jnp.arange(vl)
+    lg = jnp.where(col[None, :] < vocab_real, lg, L.NEG_INF)
+    if top_k:
+        thr = lax.top_k(lg, min(top_k, vl))[0][:, -1]
+        lg = jnp.where(lg < thr[:, None], L.NEG_INF, lg)
+
+    tpi = ctx.tp_index()
+
+    def noise_row(s, p):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(
+                jax.random.PRNGKey(0), s), p), tpi)
+        return jax.random.gumbel(key, (vl,), jnp.float32)
+
+    g = jax.vmap(noise_row)(seed.astype(jnp.int32), pos.astype(jnp.int32))
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    # masked lanes stay masked: NEG_INF/T + G is still < any real score
+    scores = jnp.where(temperature[:, None] > 0.0, lg / t + g, lg)
+
+    local_max = jnp.max(scores, axis=-1)
+    local_arg = jnp.argmax(scores, axis=-1).astype(jnp.int32) + start
     if ctx.tp == 1:
         return local_arg
     gmax = lax.pmax(local_max, ctx.tp_axis)

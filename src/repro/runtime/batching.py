@@ -1,0 +1,323 @@
+"""Continuous-batching request scheduler for the paged serving engine.
+
+Host-side and jax-free: the :class:`ContinuousBatcher` owns one
+:class:`~repro.runtime.paged.PagedKVAllocator` per data rank and turns a
+ragged arrival queue into fixed-shape step plans for
+:func:`repro.runtime.paged.build_paged_step`.  Each *tick* produces one
+``StepPlan`` whose rows are the ``dp * slots_local`` resident request slots:
+
+- **prefill rows** feed up to ``chunk`` prompt tokens (``n_new > 1`` allowed),
+  so long prompts are streamed in chunks interleaved with decode traffic
+  instead of stalling the whole batch (bounded TTFT *and* bounded
+  tokens/s);
+- **decode rows** feed the previously sampled token (``n_new == 1``);
+- **idle rows** carry ``n_new == 0`` — the engine drops their cache writes
+  and the scheduler ignores their sampled token.
+
+Admission is FIFO, gated on a free slot *and* a free-block budget of
+``blocks_for(len(prompt) + 1)`` on the target rank.  Requests grow their
+block allocation lazily, one tick ahead of the write frontier; when a rank
+runs out of blocks the youngest resident request on that rank is evicted —
+its blocks are freed and it is requeued at the *front* of the waiting queue
+to restart from scratch (sampling is seeded per (seed, position), so a
+restarted request regenerates the same tokens).
+
+Tick counts double as the latency clock: the bench maps ticks to wall time
+after the fact, so the scheduler itself stays deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.runtime.paged import PagedKVAllocator, blocks_for
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its scheduler-side bookkeeping."""
+
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    eos: int | None = None
+    arrival: int = 0
+
+    # -- mutable scheduler state ------------------------------------------
+    generated: list[int] = dataclasses.field(default_factory=list)
+    prefill_done: int = 0
+    next_pos: int = 0          # cache positions written so far
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1             # global slot id, -1 while waiting
+    rank: int = -1
+    admit_tick: int = -1
+    first_token_tick: int = -1
+    finish_tick: int = -1
+    evictions: int = 0
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return self.eos is not None and self.eos in self.generated
+
+    def positions_needed(self) -> int:
+        # The final sampled token is returned but never written back.
+        return len(self.prompt) + self.max_new_tokens - 1
+
+    def reset(self) -> None:
+        self.generated = []
+        self.prefill_done = 0
+        self.next_pos = 0
+        self.blocks = []
+        self.slot = -1
+        self.rank = -1
+        self.first_token_tick = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """Fixed-shape arrays for one engine step plus the slot -> request map."""
+
+    tokens: np.ndarray       # [B, chunk] int32
+    pos: np.ndarray          # [B] int32 first-token positions
+    n_new: np.ndarray        # [B] int32 (0 = idle row)
+    tables: np.ndarray       # [B, max_blocks] int32 rank-local block ids
+    seeds: np.ndarray        # [B] int32
+    temps: np.ndarray        # [B] float32
+    requests: dict[int, Request]   # slot -> resident request this tick
+
+    @property
+    def active_rows(self) -> int:
+        return int((self.n_new > 0).sum())
+
+
+class ContinuousBatcher:
+    """FIFO admission + chunked-prefill/decode interleaving over paged KV.
+
+    Parameters mirror the engine: ``dp`` data ranks of ``slots_local``
+    resident slots each, ``nb_local`` KV blocks per rank (block 0 is the
+    engine's garbage block and never allocated), ``max_blocks`` table width
+    per request and ``chunk`` tokens fed per prefill row per tick.
+
+    ``reserve`` picks the admission discipline: ``"min"`` admits as soon
+    as the first prompt chunk fits (``blocks_for(len(prompt) + 1)``) and
+    relies on eviction + front-of-queue requeue when later growth finds
+    the rank exhausted — maximum occupancy, but under sustained overload
+    the evicted replays waste work; ``"full"`` admits only when the
+    request's worst-case block count fits after subtracting every
+    resident's unclaimed reservation, so growth can never fail and
+    nothing is ever evicted (vLLM's conservative watermark, the right
+    default for throughput benchmarks).
+    """
+
+    def __init__(self, *, dp: int, slots_local: int, nb_local: int,
+                 block_size: int, max_blocks: int, chunk: int = 1,
+                 reserve: str = "min"):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if reserve not in ("min", "full"):
+            raise ValueError("reserve must be 'min' or 'full'")
+        self.reserve = reserve
+        self.dp = dp
+        self.slots_local = slots_local
+        self.batch = dp * slots_local
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        self.chunk = chunk
+        self.allocators = [PagedKVAllocator(nb_local, block_size)
+                           for _ in range(dp)]
+        self.waiting: list[Request] = []
+        self.resident: dict[int, Request] = {}   # slot -> request
+        self.finished: list[Request] = []
+        self.tick = 0
+        self.evicted = 0
+
+    # -- queue management -------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = blocks_for(req.positions_needed(), self.block_size)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks > max_blocks="
+                f"{self.max_blocks}")
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        self.waiting.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.resident
+
+    def _free_slots(self, rank: int) -> list[int]:
+        lo = rank * self.slots_local
+        return [s for s in range(lo, lo + self.slots_local)
+                if s not in self.resident]
+
+    def _reserved_extra(self, rank: int) -> int:
+        """Blocks promised to residents on ``rank`` but not yet allocated."""
+        if self.reserve != "full":
+            return 0
+        return sum(
+            max(0, blocks_for(r.positions_needed(), self.block_size)
+                - len(r.blocks))
+            for r in self.resident.values() if r.rank == rank)
+
+    def _admit(self) -> None:
+        """FIFO-admit waiting requests into free slots under block budget."""
+        progress = True
+        while self.waiting and progress:
+            progress = False
+            req = self.waiting[0]
+            if self.reserve == "full":
+                budget = blocks_for(req.positions_needed(), self.block_size)
+            else:
+                budget = blocks_for(len(req.prompt) + 1, self.block_size)
+            for rank in range(self.dp):
+                slots = self._free_slots(rank)
+                avail = (self.allocators[rank].free_blocks
+                         - self._reserved_extra(rank))
+                if not slots or avail < budget:
+                    continue
+                req = self.waiting.pop(0)
+                req.slot, req.rank = slots[0], rank
+                req.admit_tick = self.tick
+                self.resident[req.slot] = req
+                progress = True
+                break
+
+    def _evict(self, rank: int, keep: Request | None) -> bool:
+        """Evict the youngest resident request on ``rank`` (not ``keep``)."""
+        victims = [r for r in self.resident.values()
+                   if r.rank == rank and r is not keep]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (r.admit_tick, r.slot))
+        self.allocators[rank].free(victim.blocks)
+        del self.resident[victim.slot]
+        victim.reset()
+        victim.evictions += 1
+        self.evicted += 1
+        self.waiting.insert(0, victim)
+        return True
+
+    def _ensure_blocks(self, req: Request, n_new: int) -> bool:
+        """Grow ``req.blocks`` to cover ``next_pos + n_new`` positions."""
+        need = blocks_for(req.next_pos + n_new, self.block_size)
+        while len(req.blocks) < need:
+            got = self.allocators[req.rank].alloc(need - len(req.blocks))
+            if got is not None:
+                req.blocks.extend(got)
+                return True
+            if not self._evict(req.rank, keep=req):
+                return False
+        return True
+
+    # -- planning / commit ------------------------------------------------
+
+    def plan_step(self) -> StepPlan:
+        self._admit()
+        B, C = self.batch, self.chunk
+        tokens = np.zeros((B, C), np.int32)
+        pos = np.zeros(B, np.int32)
+        n_new = np.zeros(B, np.int32)
+        tables = np.zeros((B, self.max_blocks), np.int32)
+        seeds = np.zeros(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        live: dict[int, Request] = {}
+        for slot in sorted(self.resident):
+            req = self.resident.get(slot)
+            if req is None:   # evicted earlier this same planning pass
+                continue
+            P = len(req.prompt)
+            if req.prefill_done < P:
+                n = min(C, P - req.prefill_done)
+                row = req.prompt[req.prefill_done:req.prefill_done + n]
+            else:
+                n = 1
+                row = [req.generated[-1] if req.generated
+                       else req.prompt[-1]]
+            if not self._ensure_blocks(req, n):
+                # rank exhausted and nothing else to evict: self-evict
+                self.allocators[req.rank].free(req.blocks)
+                del self.resident[slot]
+                req.reset()
+                req.evictions += 1
+                self.evicted += 1
+                self.waiting.insert(0, req)
+                continue
+            tokens[slot, :n] = row
+            pos[slot] = req.next_pos
+            n_new[slot] = n
+            tables[slot, :len(req.blocks)] = req.blocks
+            seeds[slot] = req.seed
+            temps[slot] = req.temperature
+            live[slot] = req
+        # A mid-pass eviction may have reclaimed the blocks of a request
+        # planned earlier in this same tick; idle such rows out so nothing
+        # writes into blocks it no longer owns.
+        for slot in list(live):
+            if self.resident.get(slot) is not live[slot]:
+                tokens[slot] = 0
+                pos[slot] = 0
+                n_new[slot] = 0
+                tables[slot] = 0
+                seeds[slot] = 0
+                temps[slot] = 0.0
+                del live[slot]
+        return StepPlan(tokens=tokens, pos=pos, n_new=n_new, tables=tables,
+                        seeds=seeds, temps=temps, requests=live)
+
+    def commit(self, plan: StepPlan, sampled: np.ndarray) -> list[Request]:
+        """Advance request state with the engine's sampled tokens.
+
+        Returns the requests that completed on this tick (their blocks and
+        slots are already released).
+        """
+        completed = []
+        for slot, req in plan.requests.items():
+            n = int(plan.n_new[slot])
+            if n == 0:
+                continue
+            req.next_pos += n
+            if req.prefill_done < len(req.prompt):
+                req.prefill_done += n
+                if req.prefill_done < len(req.prompt):
+                    continue           # mid-prefill: sampled token is noise
+                req.first_token_tick = self.tick
+            req.generated.append(int(sampled[slot]))
+            if req.done:
+                req.finish_tick = self.tick
+                self.allocators[req.rank].free(req.blocks)
+                req.blocks = []
+                del self.resident[req.slot]
+                req.slot = -1
+                self.finished.append(req)
+                completed.append(req)
+        self.tick += 1
+        return completed
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> dict[str, Any]:
+        done = self.finished
+        ttft = [r.first_token_tick - r.arrival for r in done
+                if r.first_token_tick >= 0]
+        lat = [r.finish_tick - r.arrival for r in done]
+        return {
+            "finished": len(done),
+            "waiting": len(self.waiting),
+            "resident": len(self.resident),
+            "evictions": self.evicted,
+            "ticks": self.tick,
+            "tokens_generated": sum(len(r.generated) for r in done),
+            "ttft_ticks_p50": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_ticks_p99": float(np.percentile(ttft, 99)) if ttft else 0.0,
+            "latency_ticks_p50": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_ticks_p99": float(np.percentile(lat, 99)) if lat else 0.0,
+        }

@@ -46,11 +46,34 @@ def _cache_pspec_for(leaf_path: str, leaf) -> P:
 
 
 def batch_axes_for(topo: MiCSTopology, global_batch: int):
-    """Data axes the batch can shard over; a single long-context stream
-    (global_batch < data-parallel size) runs replicated on the data axes."""
-    if global_batch % topo.data_parallel_size == 0:
-        return topo.data_axes
-    return ()
+    """Data axes the batch shards over.
+
+    Ragged batches (``global_batch`` not a multiple of the data-parallel
+    size) are padded up to the next multiple with masked dummy rows by
+    :func:`pad_ragged_batch` — they used to fall back to replicating the
+    whole batch on every data rank, which made a 5-row batch on dp=4 cost
+    as much as 20 rows.
+    """
+    del global_batch  # padding, not replication, handles raggedness now
+    return topo.data_axes
+
+
+def pad_ragged_batch(topo: MiCSTopology, batch: dict):
+    """Pad every batch leaf to the next multiple of dp with dummy rows.
+
+    Returns ``(padded_batch, row_mask)`` where ``row_mask`` is a bool [B]
+    marking real rows; dummy rows must be masked out of sampling (the
+    serve decode step emits token ``-1`` for them).
+    """
+    dp = topo.data_parallel_size
+    b = batch["tokens"].shape[0]
+    pad = (-b) % dp
+    mask = jnp.arange(b + pad) < b
+    if pad:
+        batch = {k: jnp.concatenate(
+            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+            for k, v in batch.items()}
+    return batch, mask
 
 
 def cache_pspecs(model: ModelDef, topo: MiCSTopology, batch_axes=None):
@@ -97,7 +120,7 @@ def global_cache_shapes(model: ModelDef, topo: MiCSTopology,
 
 
 def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
-                      cache_len: int, batch_axes=None):
+                      cache_len: int, batch_axes=None, *, top_k: int = 0):
     """Returns (prefill_fn, decode_fn) jitted for the topo's mesh.
 
     Weight gathers (bf16 or int8-quantized, serial or prefetched) run
@@ -105,6 +128,11 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
     layer each step, so the prefetch schedule matters most here.
     ``policy="auto"`` configs are resolved by the link-model autotuner
     first (serving mode: forward gathers only, no gradient sync).
+
+    ``decode_fn(params, caches, tokens, pos, seeds, temps, row_mask)``
+    samples with per-request seeded Gumbel noise (``lm.sample_tokens``):
+    ``temps == 0`` rows take the noiseless argmax (exact greedy), masked
+    rows (``row_mask`` False — :func:`pad_ragged_batch` padding) emit -1.
     """
     mcfg, _ = resolve_config(mcfg, model, topo, mode="serve")
     comm = CommEngine.from_config(topo, mcfg)
@@ -126,11 +154,16 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
         logits, caches = lm.prefill(model, params, comm, pctx, batch)
         return logits, caches
 
-    def sharded_decode(params, caches, tokens, pos):
+    def sharded_decode(params, caches, tokens, pos, seeds, temps, row_mask):
         logits, new_caches = lm.decode_step(
             model, params, comm, ctx, tokens, pos, caches)
-        next_tok = lm.greedy_sample(logits, ctx, model.cfg.vocab)
-        return logits, next_tok, new_caches
+        b = tokens.shape[0]
+        pos_b = jnp.broadcast_to(pos, (b,)).astype(jnp.int32)
+        nxt = lm.sample_tokens(logits[:, -1], ctx, model.cfg.vocab,
+                               seed=seeds, pos=pos_b + 1,
+                               temperature=temps, top_k=top_k)
+        nxt = jnp.where(row_mask, nxt, -1)
+        return logits, nxt[:, None], new_caches
 
     ns = lambda spec: jax.tree.map(
         lambda s_: NamedSharding(topo.mesh, s_), spec,
@@ -154,17 +187,33 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
         out_shardings=(ns(logit_spec), ns(c_specs)),
     )
 
+    row_spec = P(baxes)
     decode_sm = shard_map(
         sharded_decode, mesh=topo.mesh,
-        in_specs=(flat_specs, c_specs, tok_spec, P()),
+        in_specs=(flat_specs, c_specs, tok_spec, P(), row_spec, row_spec,
+                  row_spec),
         out_specs=(logit_spec, tok_spec, c_specs),
         check_vma=False,
     )
-    decode_fn = jax.jit(
+    decode_jit = jax.jit(
         decode_sm,
         in_shardings=(ns(flat_specs), ns(c_specs), ns(tok_spec),
-                      NamedSharding(topo.mesh, P())),
+                      NamedSharding(topo.mesh, P()), ns(row_spec),
+                      ns(row_spec), ns(row_spec)),
         out_shardings=(ns(logit_spec), ns(tok_spec), ns(c_specs)),
         donate_argnums=(1,),
     )
+
+    def decode_fn(params, caches, tokens, pos, seeds=None, temps=None,
+                  row_mask=None):
+        b = tokens.shape[0]
+        if seeds is None:
+            seeds = jnp.zeros((b,), jnp.int32)
+        if temps is None:
+            temps = jnp.zeros((b,), jnp.float32)  # greedy
+        if row_mask is None:
+            row_mask = jnp.ones((b,), bool)
+        return decode_jit(params, caches, tokens, pos, seeds, temps, row_mask)
+
+    decode_fn.lower = decode_jit.lower  # AOT path (launch/dryrun.py)
     return prefill_fn, decode_fn

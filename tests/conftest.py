@@ -19,6 +19,16 @@ def topo1():
 
 
 @pytest.fixture(scope="session")
+def serve_results():
+    """Parsed JSON of the serving-engine harness, run once per session
+    (tests/test_paged.py asserts every check: paged-vs-contiguous bitwise
+    equivalence, chunked prefill, int8 KV error, sampler, serve memplan)."""
+    from harness_util import run_harness
+
+    return run_harness(pathlib.Path(__file__).parent / "serve_harness.py")
+
+
+@pytest.fixture(scope="session")
 def elastic_results():
     """Parsed JSON of the elastic preemption harness, run once per session
     (tests/test_elastic.py asserts every check; tests/test_checkpoint.py

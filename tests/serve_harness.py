@@ -1,0 +1,458 @@
+"""Serving-engine verification harness, run in a subprocess with 8 virtual
+CPU devices (same pattern as memplan_harness.py).  Prints one JSON object
+with named check results; tests/test_paged.py asserts on them, and the CI
+``bench`` job runs ``benchmarks/serve_bench.py --smoke --check`` as the
+closed-loop smoke gate.
+
+The property under test is the tentpole contract of runtime/paged.py: a
+request decoded through the paged block-pool engine is BITWISE identical
+to the contiguous vector-position reference — for every KV dtype that
+round-trips exactly (fp32, bf16), across block sizes, and independently of
+how its prompt was chunked.  The memplan check extends the training
+planner's predicted-vs-compiled discipline (args exact, transients within
+``MEM_RTOL``) to the serve-mode footprint with the donated KV pool.
+
+Checks:
+
+  paged_bitwise           {fp32, bf16} KV x block sizes {4, 8} on the GQA
+                          mesh (tp=4 > n_kv_heads) with block-straddling
+                          prompts and mixed greedy/sampled rows: tokens and
+                          logits bitwise-equal to the contiguous reference
+  chunked_prefill         chunk-boundary placement at a fixed chunk width
+                          is bitwise-irrelevant (same executable, same
+                          key-axis length); across widths (chunk=4 vs
+                          token-by-token) greedy tokens agree and pools /
+                          logits match to last-ulp tolerance
+  int8_kv_error           quantize/dequantize round-trip error is within
+                          the documented absmax/254 per-element bound, and
+                          the int8-KV engine's decode logits stay close to
+                          the fp32 reference
+  sampler                 temperature 0 equals the greedy argmax; decoding
+                          is deterministic per (seed, position); different
+                          seeds decorrelate the sampled stream
+  memplan_serve_footprint predict_footprint(mode="serve") vs the compiled
+                          paged step's memory_analysis(): argument bytes
+                          (param shards + KV pool + plan rows) EXACT for
+                          bf16 and int8 pools, transients within MEM_RTOL;
+                          max_resident_requests grows as the KV dtype
+                          shrinks (fp32 < bf16 < int8)
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core import memplan as M
+from repro.core import quant as Q
+from repro.core.comm import policies_from_config
+from repro.core.mics import MiCSConfig, init_state
+from repro.core.topology import MiCSTopology, make_host_mesh
+from repro.models.build import build_model
+from repro.runtime import paged as PG
+from repro.runtime.serving import build_serve_steps, global_cache_shapes
+
+RESULTS = {}
+
+CAP = 16                      # contiguous reference cache positions
+PLENS = [3, 7, 5, 9]          # 7 and 9 straddle both swept block sizes
+B = 4
+STEPS = 4
+_SHARED = {}
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:  # noqa: BLE001
+            RESULTS[name] = {
+                "ok": False,
+                "err": f"{type(e).__name__}: {e}",
+                "tb": traceback.format_exc()[-2000:],
+            }
+        return fn
+    return deco
+
+
+def _shared():
+    """Model/params on the GQA mesh (dp=2, tp=4 > n_kv_heads), built once."""
+    if not _SHARED:
+        cfg = smoke_variant(get_config("llama3.2-1b"))
+        topo = MiCSTopology(make_host_mesh(1, 1, 2, 4))
+        model = build_model(cfg, tp=topo.model_size)
+        state = init_state(model, topo, seed=7)
+        _SHARED.update(model=model, topo=topo, params=state["params"])
+    return _SHARED["model"], _SHARED["topo"], _SHARED["params"]
+
+
+def _mixed_rows():
+    """Per-request sampling knobs: greedy and sampled rows side by side."""
+    seeds = jnp.asarray(np.arange(B, dtype=np.int32) * 101)
+    temps = jnp.asarray(np.array([0.0, 0.7, 0.0, 0.9], np.float32))
+    return seeds, temps
+
+
+def _copy(tree):
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
+
+
+def _prefill_ref(kv_dtype):
+    """Contiguous reference caches holding the PLENS prompts, row by row
+    (each row prefilled at its own length — no cross-row padding)."""
+    model, topo, params = _shared()
+    jdt = {"fp32": jnp.float32, "bf16": jnp.bfloat16}[kv_dtype]
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype=kv_dtype)
+    prefill_fn, _ = build_serve_steps(model, topo, mcfg, CAP)
+    tmpl, _specs = global_cache_shapes(model, topo, B, CAP)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, jdt), tmpl)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, model.cfg.vocab, (B, max(PLENS)))
+    last = np.zeros((B, model.vocab_padded), np.float32)
+    for b in range(B):
+        n = PLENS[b]
+        row = {"tokens": jnp.asarray(
+            np.broadcast_to(prompts[b:b + 1, :n], (B, n)).astype(np.int32))}
+        logits, caches_b = prefill_fn(params, row)
+
+        def put(dst, src):
+            return dst.at[:, b].set(
+                jnp.asarray(np.asarray(src)[:, b]).astype(dst.dtype))
+        caches = jax.tree.map(put, caches, caches_b)
+        last[b] = np.asarray(logits)[b, -1]
+    tok0 = np.argmax(last[:, :model.cfg.vocab], -1).astype(np.int32)
+    return caches, tok0, prompts
+
+
+def _reference_trace(kv_dtype):
+    """STEPS of the contiguous step; returns the per-step (tok, logits)
+    record plus the post-prefill caches for seeding paged pools."""
+    key = ("ref", kv_dtype)
+    if key in _SHARED:
+        return _SHARED[key]
+    model, topo, params = _shared()
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype=kv_dtype)
+    caches0, tok0, prompts = _prefill_ref(kv_dtype)
+    step = PG.build_contiguous_step(model, topo, mcfg, CAP)
+    seeds, temps = _mixed_rows()
+    caches = _copy(caches0)
+    tok = jnp.asarray(tok0[:, None])
+    pos = np.asarray(PLENS, np.int32)
+    rec = []
+    for s in range(STEPS):
+        tr, lr, caches = step(params, caches, tok, jnp.asarray(pos + s),
+                              seeds, temps)
+        rec.append((np.asarray(tr), np.asarray(lr)))
+        tok = tr[:, None].astype(jnp.int32)
+    _SHARED[key] = (rec, caches0, tok0, prompts)
+    return _SHARED[key]
+
+
+def _paged_pool_from_ref(caches0, block_size, max_blocks, kv_dtype,
+                         extra_pos=STEPS):
+    """A block pool seeded with the reference prompts + its tables."""
+    model, topo, _params = _shared()
+    dp = topo.data_parallel_size
+    nbl = sum(PG.blocks_for(n + extra_pos, block_size)
+              for n in PLENS) + 1
+    allocs = [PG.PagedKVAllocator(nbl, block_size) for _ in range(dp)]
+    tables = np.zeros((B, max_blocks), np.int32)
+    for b in range(B):
+        blocks = allocs[b // (B // dp)].alloc(
+            PG.blocks_for(PLENS[b] + extra_pos, block_size))
+        tables[b, :len(blocks)] = blocks
+    pool, _ = PG.init_paged_caches(model, topo, nbl, block_size, kv_dtype)
+    pool = PG.pages_from_contiguous(
+        model, topo, caches0, pool, tables, PLENS,
+        block_size=block_size, kv_dtype=kv_dtype)
+    return pool, tables
+
+
+def _paged_cell(kv_dtype, block_size):
+    """One paged-vs-contiguous bitwise cell; returns its ledger row."""
+    model, topo, params = _shared()
+    max_blocks = -(-(max(PLENS) + STEPS) // block_size)
+    rec, caches0, tok0, _prompts = _reference_trace(kv_dtype)
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype=kv_dtype,
+                      kv_block_size=block_size)
+    step = PG.build_paged_step(model, topo, mcfg, max_blocks=max_blocks,
+                               block_size=block_size, chunk=1,
+                               kv_dtype=kv_dtype)
+    pool, tables = _paged_pool_from_ref(caches0, block_size, max_blocks,
+                                        kv_dtype)
+    seeds, temps = _mixed_rows()
+    tok = jnp.asarray(tok0[:, None])
+    pos = np.asarray(PLENS, np.int32)
+    ok_tok = ok_log = True
+    for s in range(STEPS):
+        tp_, lp, pool = step(params, pool, tok, jnp.asarray(pos + s),
+                             jnp.ones(B, jnp.int32), jnp.asarray(tables),
+                             seeds, temps)
+        tr, lr = rec[s]
+        ok_tok &= bool(np.array_equal(tr, np.asarray(tp_)))
+        ok_log &= bool(np.array_equal(
+            lr.view(np.uint32), np.asarray(lp).view(np.uint32)))
+        tok = tp_[:, None].astype(jnp.int32)
+    row = {"kv_dtype": kv_dtype, "block_size": block_size,
+           "tokens_bitwise": ok_tok, "logits_bitwise": ok_log}
+    assert ok_tok and ok_log, row
+    return row
+
+
+# ---------------------------------------------------------------------------
+@check("paged_bitwise")
+def _paged_bitwise():
+    detail = {}
+    for kv in ("fp32", "bf16"):
+        for bs in (4, 8):
+            detail[f"{kv}/bs{bs}"] = _paged_cell(kv, bs)
+    RESULTS["paged_bitwise_detail"] = detail
+
+
+# ---------------------------------------------------------------------------
+@check("chunked_prefill")
+def _chunked_prefill():
+    """Chunk-boundary placement is bitwise-irrelevant for a fixed chunk
+    width (one compiled executable, key axis always max_blocks * bs);
+    across widths (chunk=4 vs token-by-token) the kernels tile the token
+    matmuls differently, so the sampled tokens must agree and the pool /
+    logits must match to last-ulp tolerance."""
+    model, topo, params = _shared()
+    bs, mb, chunk = 4, 4, 4
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype="fp32",
+                      kv_block_size=bs)
+    step_c = PG.build_paged_step(model, topo, mcfg, max_blocks=mb,
+                                 block_size=bs, chunk=chunk, kv_dtype="fp32")
+    step_1 = PG.build_paged_step(model, topo, mcfg, max_blocks=mb,
+                                 block_size=bs, chunk=1, kv_dtype="fp32")
+    _rec, _c0, _t0, prompts = _reference_trace("fp32")
+    plens = np.asarray(PLENS)
+    seeds, _ = _mixed_rows()
+    temps = jnp.zeros(B, jnp.float32)      # greedy: cross-width tokens
+    nbl = 16
+    tables = np.zeros((B, mb), np.int32)
+    allocs = [PG.PagedKVAllocator(nbl, bs)
+              for _ in range(topo.data_parallel_size)]
+    for b in range(B):
+        blk = allocs[b // (B // topo.data_parallel_size)].alloc(
+            PG.blocks_for(int(plens[b]) + STEPS, bs))
+        tables[b, :len(blk)] = blk
+    tbl = jnp.asarray(tables)
+
+    def prefill(step_fn, width, first_n):
+        """Stream the prompts through ``step_fn``; per-row first chunk of
+        ``first_n`` tokens, then greedy ``width``-sized chunks.  Returns
+        (pool arrays, last (tok, logits) per row)."""
+        pool, _ = PG.init_paged_caches(model, topo, nbl, bs, "fp32")
+        done = np.zeros(B, np.int64)
+        nxt = np.minimum(plens, first_n)
+        last = None
+        while (done < plens).any():
+            n_new = nxt.astype(np.int32)
+            toks = np.zeros((B, width), np.int32)
+            for b in range(B):
+                toks[b, :n_new[b]] = prompts[b, done[b]:done[b] + n_new[b]]
+            t, lg, pool = step_fn(
+                params, pool, jnp.asarray(toks),
+                jnp.asarray(done.astype(np.int32)), jnp.asarray(n_new),
+                tbl, seeds, temps)
+            t, lg = np.asarray(t), np.asarray(lg)
+            if last is None:
+                last = (t.copy(), lg.copy())
+            fin = (n_new > 0) & (done + n_new == plens)
+            last[0][fin] = t[fin]
+            last[1][fin] = lg[fin]
+            done += n_new
+            nxt = np.minimum(plens - done, width)
+        return jax.tree.map(np.asarray, pool), last
+
+    def tail(step_fn, pool_np, tok0_):
+        pool = jax.tree.map(jnp.asarray, pool_np)
+        tok = jnp.asarray(tok0_[:, None].astype(np.int32))
+        out = []
+        for s in range(STEPS):
+            t, lg, pool = step_fn(
+                params, pool, tok, jnp.asarray((plens + s).astype(np.int32)),
+                jnp.ones(B, jnp.int32), tbl, seeds, temps)
+            out.append((np.asarray(t), np.asarray(lg)))
+            tok = t[:, None].astype(jnp.int32)
+        return out
+
+    # fixed width, two boundary patterns: bitwise-equal pools and tokens
+    pool_a, last_a = prefill(step_c, chunk, np.full(B, chunk))
+    pool_a2, last_a2 = prefill(step_c, chunk,
+                               1 + np.arange(B) % chunk)   # staggered
+    ok_fixed = bool(np.array_equal(last_a[0], last_a2[0])) and bool(
+        np.array_equal(last_a[1].view(np.uint32),
+                       last_a2[1].view(np.uint32)))
+    for name in pool_a:
+        for part in pool_a[name]:
+            ok_fixed &= bool(np.array_equal(pool_a[name][part],
+                                            pool_a2[name][part]))
+
+    # across widths: same greedy tokens, last-ulp pools/logits
+    pool_b, last_b = prefill(step_1, 1, np.ones(B, np.int64))
+    ok_tok = bool(np.array_equal(last_a[0], last_b[0]))
+    logit_err = float(np.max(np.abs(last_a[1] - last_b[1])))
+    pool_err = max(
+        float(np.max(np.abs(pool_a[name][part].astype(np.float64)
+                            - pool_b[name][part].astype(np.float64))))
+        for name in pool_a for part in pool_a[name])
+    tail_a = tail(step_1, pool_a, last_a[0])
+    tail_b = tail(step_1, pool_b, last_b[0])
+    ok_tail = all(np.array_equal(a[0], b_[0]) for a, b_ in zip(tail_a,
+                                                               tail_b))
+    RESULTS["chunked_prefill_detail"] = {
+        "fixed_width_bitwise": ok_fixed, "cross_width_tokens_equal": ok_tok,
+        "cross_width_tail_tokens_equal": ok_tail,
+        "cross_width_logit_err": logit_err,
+        "cross_width_pool_err": pool_err, "chunk": chunk}
+    assert ok_fixed and ok_tok and ok_tail
+    assert pool_err < 1e-4 and logit_err < 1e-3, (pool_err, logit_err)
+
+
+# ---------------------------------------------------------------------------
+@check("int8_kv_error")
+def _int8_kv_error():
+    # (a) the documented round-trip bound: per-element error <= absmax/254
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(8, 4 * Q.BLOCK)).astype(np.float32))
+    q, s = Q.quantize_flat(x)
+    xd = Q.dequantize_flat(q, s, dtype=jnp.float32)
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    absmax = np.max(np.abs(np.asarray(x).reshape(8, 4, Q.BLOCK)), -1)
+    bound = np.repeat(absmax / 254.0, Q.BLOCK, axis=-1) + 1e-7
+    assert (err <= bound).all(), float((err - bound).max())
+
+    # (b) the int8 engine stays close to the fp32 reference logits
+    model, topo, params = _shared()
+    bs, mb = 8, -(-(max(PLENS) + STEPS) // 8)
+    rec, caches0, tok0, _p = _reference_trace("fp32")
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype="int8",
+                      kv_block_size=bs)
+    step = PG.build_paged_step(model, topo, mcfg, max_blocks=mb,
+                               block_size=bs, chunk=1, kv_dtype="int8")
+    pool, tables = _paged_pool_from_ref(caches0, bs, mb, "int8")
+    seeds, temps = _mixed_rows()
+    temps = temps * 0.0          # greedy: isolate the KV quantization error
+    tok = jnp.asarray(tok0[:, None])
+    pos = np.asarray(PLENS, np.int32)
+    rel = 0.0
+    for s in range(STEPS):
+        _t8, l8, pool = step(params, pool, tok, jnp.asarray(pos + s),
+                             jnp.ones(B, jnp.int32), jnp.asarray(tables),
+                             seeds, temps)
+        tr, lr = rec[s]
+        rel = max(rel, float(np.max(np.abs(np.asarray(l8) - lr))
+                             / np.max(np.abs(lr))))
+        # teacher-force the reference stream: the smoke model's random-init
+        # logits are nearly flat, so comparing free-running trajectories
+        # would measure argmax flips, not the KV quantization error
+        tok = jnp.asarray(tr[:, None].astype(np.int32))
+    RESULTS["int8_kv_error_detail"] = {
+        "roundtrip_max_err": float(err.max()),
+        "logits_rel_err": rel}
+    assert np.isfinite(rel) and rel < 0.1, rel
+
+
+# ---------------------------------------------------------------------------
+@check("sampler")
+def _sampler():
+    model, topo, params = _shared()
+    mcfg = MiCSConfig(gather_dtype=jnp.float32, kv_dtype="fp32")
+    step = PG.build_contiguous_step(model, topo, mcfg, CAP)
+    _rec, caches0, tok0, _p = _reference_trace("fp32")
+    pos = jnp.asarray(np.asarray(PLENS, np.int32))
+    tok = jnp.asarray(tok0[:, None])
+    zs = jnp.zeros(B, jnp.int32)
+
+    def one(seeds, temps):
+        t, lg, _c = step(params, _copy(caches0), tok, pos,
+                         jnp.asarray(seeds), jnp.asarray(temps))
+        return np.asarray(t), np.asarray(lg)
+
+    # temperature 0 == the greedy argmax over the real vocab
+    t0, lg = one(zs, np.zeros(B, np.float32))
+    assert np.array_equal(t0, np.argmax(lg[:, :model.cfg.vocab], -1)), t0
+
+    # deterministic per (seed, position): same inputs, same stream
+    seeds = np.arange(B, dtype=np.int32) * 7 + 1
+    hot = np.full(B, 1.2, np.float32)
+    ta, _ = one(seeds, hot)
+    tb, _ = one(seeds, hot)
+    assert np.array_equal(ta, tb), (ta, tb)
+
+    # different seeds decorrelate the stream
+    tc, _ = one(seeds + 1, hot)
+    assert not np.array_equal(ta, tc), ta
+    RESULTS["sampler_detail"] = {
+        "greedy": t0.tolist(), "sampled": ta.tolist(),
+        "resampled_other_seed": tc.tolist()}
+
+
+# ---------------------------------------------------------------------------
+@check("memplan_serve_footprint")
+def _memplan_serve_footprint():
+    model, topo, params = _shared()
+    bs, mb, slots = 8, 4, 4
+    nbl = 17
+    dp = topo.data_parallel_size
+    Bp = dp * slots
+    detail = {}
+    for kv in ("bf16", "int8"):
+        mcfg = MiCSConfig(kv_dtype=kv, kv_block_size=bs)
+        step = PG.build_paged_step(model, topo, mcfg, max_blocks=mb,
+                                   block_size=bs, chunk=1, kv_dtype=kv)
+        pool, _ = PG.init_paged_caches(model, topo, nbl, bs, kv)
+        z = jnp.zeros
+        ma = step.lower(
+            params, pool, z((Bp, 1), jnp.int32), z(Bp, jnp.int32),
+            z(Bp, jnp.int32), z((Bp, mb), jnp.int32), z(Bp, jnp.int32),
+            z(Bp, jnp.float32)).compile().memory_analysis()
+        gp, sp = policies_from_config(mcfg)
+        plan = M.predict_footprint(
+            model, topo, gp, sp, mode="serve",
+            kv_pages_tokens=nbl * bs, kv_dtype=kv,
+            decode_batch=slots, decode_ctx=mb * bs,
+            decode_chunk=1, kv_max_blocks=mb)
+        row = {
+            "predicted_args_bytes": plan.args_bytes,
+            "measured_args_bytes": ma.argument_size_in_bytes,
+            "predicted_temp_bytes": plan.temp_bytes,
+            "measured_temp_bytes": ma.temp_size_in_bytes,
+            "components": dict(plan.components),
+        }
+        detail[kv] = row
+        assert plan.args_bytes == ma.argument_size_in_bytes, (kv, row)
+        assert abs(plan.temp_bytes - ma.temp_size_in_bytes) \
+            <= M.MEM_RTOL * ma.temp_size_in_bytes, (kv, row)
+
+    # residency planning: shrinking the KV dtype admits more requests
+    gp, sp = policies_from_config(MiCSConfig())
+    res = {kv: M.max_resident_requests(
+        model, topo, gp, sp, hbm_bytes=16 * 2**30, ctx_len=1024,
+        kv_block_size=16, kv_dtype=kv) for kv in ("fp32", "bf16", "int8")}
+    detail["max_resident_requests"] = res
+    assert 0 < res["fp32"] < res["bf16"] <= res["int8"], res
+    RESULTS["memplan_serve_footprint_detail"] = detail
+
+
+print(json.dumps(RESULTS, indent=1, default=str))
+if "--check" in sys.argv:
+    bad = [k for k, v in RESULTS.items()
+           if isinstance(v, dict) and v.get("ok") is False]
+    if bad:
+        print(f"serve smoke gate FAILED: {bad}", file=sys.stderr)
+        sys.exit(1)

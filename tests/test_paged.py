@@ -1,0 +1,199 @@
+"""Paged-KV serving-engine tests.
+
+Device-free units exercise the block allocator and the continuous-batching
+scheduler (FIFO admission under the free-block budget, chunked-prefill
+interleaving, eviction + front-of-queue requeue determinism, and the
+``reserve="full"`` no-eviction watermark); the engine-level properties —
+paged-vs-contiguous bitwise equivalence across KV dtypes and block sizes,
+chunk-boundary invariance, int8 KV error bounds, the seeded sampler and the
+serve-mode memplan contract — run through the 8-virtual-device subprocess
+harness (tests/serve_harness.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.batching import ContinuousBatcher, Request
+from repro.runtime.paged import PagedKVAllocator, blocks_for
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_blocks_for():
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+    assert blocks_for(0, 8) == 0
+
+
+def test_allocator_reserves_garbage_block():
+    a = PagedKVAllocator(8, 4)
+    assert a.free_blocks == 7          # block 0 is the engine's drop target
+    got = a.alloc(7)
+    assert got is not None and 0 not in got
+    assert a.alloc(1) is None          # exhausted -> None, not a partial
+    a.free(got)
+    assert a.free_blocks == 7
+
+
+def test_allocator_free_then_realloc_roundtrip():
+    a = PagedKVAllocator(6, 4)
+    x = a.alloc(3)
+    y = a.alloc(2)
+    a.free(x)
+    z = a.alloc(3)
+    assert sorted(z) == sorted(x)      # recycled, no leak
+    assert a.free_blocks == 0 and y is not None
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _requests(n, plen=4, max_new=6, seed0=100):
+    return [Request(rid=i, prompt=list(range(1, plen + 1)),
+                    max_new_tokens=max_new, seed=seed0 + i)
+            for i in range(n)]
+
+
+def _drive(batcher, reqs, sample=None, max_ticks=500):
+    """Run the scheduler loop with a fake engine; the sampled token is
+    keyed by (rid, next_pos) so evicted-and-replayed requests regenerate
+    the same stream (mirroring the seeded per-(seed, position) sampler)."""
+    sample = sample or (lambda req: (req.rid * 1000 + req.next_pos) % 97)
+    for r in reqs:
+        batcher.submit(r)
+    for _ in range(max_ticks):
+        if batcher.idle:
+            break
+        plan = batcher.plan_step()
+        tok = np.zeros(batcher.batch, np.int64)
+        for slot, req in plan.requests.items():
+            n = int(plan.n_new[slot])
+            tok[slot] = sample_after(req, n, sample)
+        batcher.commit(plan, tok)
+    assert batcher.idle, "scheduler did not drain"
+    return batcher
+
+
+def sample_after(req, n, sample):
+    """The engine samples from the last consumed token's position."""
+    class _V:                          # next_pos as the engine will see it
+        rid = req.rid
+        next_pos = req.next_pos + n
+    return sample(_V)
+
+
+def test_fifo_admission_and_drain():
+    b = ContinuousBatcher(dp=2, slots_local=2, nb_local=9, block_size=4,
+                          max_blocks=4, chunk=4)
+    reqs = _requests(8)
+    _drive(b, reqs)
+    st = b.stats()
+    assert st["finished"] == 8 and st["evictions"] == 0
+    # FIFO: earlier rids were admitted no later than later ones
+    admits = {r.rid: r.admit_tick for r in b.finished}
+    assert all(admits[i] <= admits[i + 1] for i in range(7))
+    # every block returned to its rank's pool
+    assert all(a.free_blocks == 8 for a in b.allocators)
+    assert all(len(r.generated) == 6 for r in b.finished)
+
+
+def test_chunked_prefill_plan_shapes():
+    b = ContinuousBatcher(dp=1, slots_local=1, nb_local=9, block_size=4,
+                          max_blocks=4, chunk=3)
+    b.submit(Request(rid=0, prompt=list(range(1, 8)), max_new_tokens=2))
+    p1 = b.plan_step()                 # first prompt chunk: 3 tokens
+    assert p1.n_new[0] == 3 and list(p1.tokens[0]) == [1, 2, 3]
+    b.commit(p1, np.zeros(1, np.int64))
+    p2 = b.plan_step()
+    assert p2.n_new[0] == 3 and p2.pos[0] == 3
+    b.commit(p2, np.zeros(1, np.int64))
+    p3 = b.plan_step()                 # ragged tail of the prompt
+    assert p3.n_new[0] == 1 and p3.pos[0] == 6 and p3.tokens[0, 0] == 7
+    b.commit(p3, np.full(1, 42, np.int64))
+    assert b.resident[0].generated == [42]       # first sampled token
+    p4 = b.plan_step()                 # decode: feed the sampled token back
+    assert p4.n_new[0] == 1 and p4.tokens[0, 0] == 42
+
+
+def _overload(reserve):
+    # 2 slots but only 5 usable blocks: two 12-position requests need
+    # 3 blocks each *eventually*, yet admission under "min" lets both in
+    b = ContinuousBatcher(dp=1, slots_local=2, nb_local=6, block_size=4,
+                          max_blocks=4, chunk=4, reserve=reserve)
+    reqs = [Request(rid=i, prompt=[1, 2, 3, 4], max_new_tokens=9)
+            for i in range(3)]
+    _drive(b, reqs)
+    return b
+
+
+def test_reserve_full_never_evicts():
+    b = _overload("full")
+    assert b.stats()["finished"] == 3
+    assert b.stats()["evictions"] == 0
+
+
+def test_eviction_requeue_is_deterministic():
+    b = _overload("min")
+    assert b.stats()["finished"] == 3
+    # lazy growth over-admitted, so somebody was evicted and replayed...
+    assert b.stats()["evictions"] > 0
+    # ...yet every request's stream matches the eviction-free schedule,
+    # because the fake engine (like the real sampler) is keyed by
+    # (request, position) — replay regenerates the same tokens
+    want = {r.rid: r.generated for r in _overload("full").finished}
+    assert {r.rid: r.generated for r in b.finished} == want
+
+
+def test_admission_respects_block_budget():
+    b = ContinuousBatcher(dp=1, slots_local=2, nb_local=3, block_size=4,
+                          max_blocks=4, chunk=4)
+    b.submit(Request(rid=0, prompt=list(range(1, 6)), max_new_tokens=2))
+    plan = b.plan_step()               # needs blocks_for(6)=2 of 2 free: ok
+    assert plan.active_rows == 1
+    b2 = ContinuousBatcher(dp=1, slots_local=2, nb_local=2, block_size=4,
+                           max_blocks=4, chunk=4)
+    b2.submit(Request(rid=0, prompt=list(range(1, 6)), max_new_tokens=2))
+    assert b2.plan_step().active_rows == 0       # 1 free block < budget 2
+
+
+def test_submit_validates():
+    b = ContinuousBatcher(dp=1, slots_local=1, nb_local=9, block_size=4,
+                          max_blocks=2, chunk=1)
+    with pytest.raises(ValueError):
+        b.submit(Request(rid=0, prompt=[1], max_new_tokens=99))
+    with pytest.raises(ValueError):
+        b.submit(Request(rid=1, prompt=[], max_new_tokens=1))
+    with pytest.raises(ValueError):
+        ContinuousBatcher(dp=1, slots_local=1, nb_local=2, block_size=4,
+                          max_blocks=2, chunk=1, reserve="lazy")
+
+
+# ---------------------------------------------------------------------------
+# engine properties (subprocess harness, 8 virtual devices)
+# ---------------------------------------------------------------------------
+
+HARNESS_CHECKS = ("paged_bitwise", "chunked_prefill", "int8_kv_error",
+                  "sampler", "memplan_serve_footprint")
+
+
+@pytest.mark.parametrize("name", HARNESS_CHECKS)
+def test_serve_harness(serve_results, name):
+    assert serve_results[name]["ok"], serve_results[name]
+
+
+def test_paged_bitwise_covers_dtypes_and_block_sizes(serve_results):
+    detail = serve_results["paged_bitwise_detail"]
+    cells = {(d["kv_dtype"], d["block_size"]) for d in detail.values()}
+    assert {("fp32", 4), ("fp32", 8), ("bf16", 4), ("bf16", 8)} <= cells
+    assert all(d["tokens_bitwise"] and d["logits_bitwise"]
+               for d in detail.values())
+
+
+def test_serve_memplan_residency_ranks_kv_dtypes(serve_results):
+    res = serve_results["memplan_serve_footprint_detail"][
+        "max_resident_requests"]
+    assert 0 < res["fp32"] < res["bf16"] <= res["int8"]
