@@ -43,11 +43,20 @@ Two correctness/overhead sections ride along:
   tick/step counts are deterministic, so pricing them with interleaved
   timings is the noise-immune throughput comparison.
 
+An ``overload`` cell rides along: a tick-0 burst through the resilient
+serve loop (runtime/resilient.py) with a bounded queue, tight deadlines
+and the memplan-priced degradation ladder — the overload-control contract
+(typed shedding, ladder engage/restore, 100%-accounted lifecycle ledger,
+no deadlock) gated on the real engine.  Every sweep cell also carries the
+batcher's request-lifecycle ledger (queue-depth and wait-age percentiles,
+shed/evict/replay counters).
+
   PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--check]
 
 ``--check`` (the ci.yml bench gate) fails on any paged-vs-contiguous
-mismatch or when the interleaved per-row decode overhead exceeds
-``STEP_REGRESSION_FACTOR``; the full run must additionally show paged
+mismatch, when the interleaved per-row decode overhead exceeds
+``STEP_REGRESSION_FACTOR``, or when the overload cell breaks the
+shed/ladder/ledger contract; the full run must additionally show paged
 normalized tokens/s beating the baseline in the saturation cell
 (``rate=inf`` — every request offered at tick 0, the highest swept
 arrival rate).  Output JSON is saved as BENCH_serve.json
@@ -77,7 +86,9 @@ from repro.core.mics import MiCSConfig, init_state
 from repro.core.topology import MiCSTopology, make_host_mesh
 from repro.models.build import build_model
 from repro.runtime import paged as PG
-from repro.runtime.batching import ContinuousBatcher, Request
+from repro.core.memplan import degradation_levels
+from repro.runtime.batching import ContinuousBatcher, DegradationLadder, Request
+from repro.runtime.resilient import ResilientServeLoop, ServeLoopConfig
 from repro.runtime.serving import build_serve_steps, global_cache_shapes
 
 BLOCK_SIZE = 8
@@ -213,6 +224,7 @@ def run_continuous(model, topo, mcfg, step_chunk, step_one, reqs,
         decode_only_ticks=len(decode_step_times),
         mean_resident_rows=float(np.mean(resident_rows))
         if resident_rows else 0.0,
+        ledger=batcher.ledger(),
     )
     return stats
 
@@ -429,6 +441,50 @@ def bitwise_equivalence(model, topo, params) -> dict:
             "block_size": BS, "kv_dtype": "fp32", "steps": steps}
 
 
+def overload_cell(model, topo, mcfg, n: int) -> dict:
+    """Burst overload through the resilient serve loop: ``n`` requests at
+    tick 0 against 4 resident rows and a 12-deep bounded queue, with tight
+    deadlines on a few and the degradation ladder armed.
+
+    The gate (``check``) asserts the overload-control contract end to end
+    on the real engine: typed shedding engages (queue-full + deadline),
+    the ladder tightens residency under pressure and restores when it
+    clears, the lifecycle ledger accounts 100% of submissions, and the
+    loop drains — no deadlock, no silent drops.
+
+    The ladder levels are priced by ``memplan.degradation_levels`` but
+    truncated to the residency-tightening rung so the cell stays at the
+    configured KV dtype (a kv downshift would recompile the engine and
+    change numerics — exercised by tests/serve_chaos_harness.py instead).
+    """
+    gp, sp = policies_from_config(mcfg)
+    levels = degradation_levels(
+        model, topo, gp, sp, hbm_bytes=2 * (1 << 30), ctx_len=CAP,
+        kv_block_size=BLOCK_SIZE, kv_ceiling=mcfg.kv_dtype)[:2]
+    ladder = DegradationLadder(levels, high_water=0.6, low_water=0.2,
+                               dwell=2)
+    sc = ServeLoopConfig(
+        slots_local=2, nb_local=NB_LOCAL, block_size=BLOCK_SIZE,
+        max_blocks=MAX_BLOCKS, chunk=CHUNK, top_k=8, reserve="full",
+        max_queue=12, evict_cap=2, backoff_base=2, backoff_seed=11, seed=7)
+    reqs = make_trace(n, model.cfg.vocab, np.random.default_rng(43))
+    for r in reqs[2:5]:
+        r.deadline_tick = 2              # unreachable: typed shed at submit
+    loop = ResilientServeLoop(model, topo, mcfg, sc, ladder=ladder)
+    rep = loop.run(reqs, [0] * len(reqs))
+    return {
+        "offered": len(reqs),
+        "completed_rids": sorted(rep["completions"]),
+        "shed": rep["shed"],
+        "ledger": rep["ledger"],
+        "ladder_levels": levels,
+        "ladder_transitions": rep["ladder_transitions"],
+        "ladder_max_level": rep["ladder_max_level"],
+        "ladder_level": rep["ladder_level"],
+        "ticks": rep["ticks"],
+    }
+
+
 def run(smoke: bool) -> dict:
     cfg = smoke_variant(get_config("llama3.2-1b"))
     # GQA path: tp=4 over 2 KV heads -> head-slot replication; dp=2
@@ -494,6 +550,8 @@ def run(smoke: bool) -> dict:
         }
     top = out["cells"][str(rates[-1])]   # the saturation cell
     out["paged_beats_fixed_at_peak"] = top["normalized"]["ratio"] > 1.0
+    out["overload"] = overload_cell(model, topo, mcfg,
+                                    n=16 if smoke else 24)
     return out
 
 
@@ -507,6 +565,14 @@ def check(out: dict, smoke: bool) -> None:
     for cell in out["cells"].values():
         assert cell["paged"]["finished"] == out["n_requests"], cell
         assert cell["predicted_decode_step_s"] > 0
+        assert cell["paged"]["ledger"]["accounted"], cell["paged"]["ledger"]
+    ov = out["overload"]
+    led = ov["ledger"]
+    assert led["accounted"] and led["in_flight"] == 0, led
+    assert led["shed"] > 0 and led["completed"] > 0, led
+    assert sum(led["shed_by_reason"].values()) == led["shed"], led
+    assert ov["ladder_max_level"] >= 1, ov["ladder_transitions"]
+    assert ov["ladder_level"] == 0, ov["ladder_transitions"]
     if not smoke:
         assert out["paged_beats_fixed_at_peak"], (
             "continuous batching lost to the static baseline at peak load")

@@ -1172,3 +1172,37 @@ def resolve_world(model, mcfg, *, n_devices: int, tp: int = 1,
     info.update(partition_size=p, data_extent=data_extent, tp=tp,
                 n_devices=n_devices)
     return p, mcfg2, info
+
+
+def rerank_serve_world(model, topo: MiCSTopology, mcfg, *, seq: int = 0,
+                       arrival_rate: float = 0.0):
+    """Re-rank the serve policy grid for a changed world, numerics pinned.
+
+    The resilient serve loop's policy half (runtime/resilient.py): after a
+    preemption/grow-back the survivors' link geometry changed, so the
+    gather topology, prefetch and planner residency that won on the old
+    world may lose on the new one — :func:`rank_policies(mode="serve")` is
+    re-run under the *same* ``hbm_budget_gb``.
+
+    Numerics are pinned on purpose: the wire/compute dtype
+    (``gather_dtype``/``quant_gather``), the KV dtype and the KV block
+    size are copied back from the pre-fault config after the re-rank, so
+    only bitwise-neutral axes (gather topology, inner factor, prefetch,
+    residency) may move.  That is what keeps replayed completions
+    bitwise-identical to the fault-free run — the serve harness pins paged
+    attention as invariant to block table layout and gather staging, but
+    not to dtype changes.
+
+    Returns ``(mcfg2, plan)``; ``plan`` is the ranked serve table (always
+    produced, even for manual configs — the re-rank is the point).
+    """
+    base = dataclasses.replace(mcfg, policy="auto", max_resident_requests=0)
+    resolved, plan = resolve_config(base, model, topo, mode="serve", seq=seq,
+                                    arrival_rate=arrival_rate)
+    # the re-resolved config is concrete (policy="manual"), so downstream
+    # builders cannot re-rank away the pins below
+    pinned = dataclasses.replace(
+        resolved,
+        gather_dtype=mcfg.gather_dtype, quant_gather=mcfg.quant_gather,
+        kv_dtype=mcfg.kv_dtype, kv_block_size=mcfg.kv_block_size)
+    return pinned, plan

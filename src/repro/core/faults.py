@@ -25,6 +25,15 @@ exactly once at its scripted step:
   (after the state blob, before the manifest is complete), leaving a
   ``step_*.tmp`` dir plus a truncated manifest behind — the atomicity
   scenario ``Checkpointer.latest_step`` must survive.
+* ``crash(at_step)`` — raise :class:`EngineCrashError`: the process died
+  but the world did not change.  The serving loop
+  (runtime/resilient.py) retries in place — fresh pools, in-flight
+  requests replayed from their prompts.
+
+The same step-indexed plan drives serving: the resilient serve loop calls
+it with the scheduler *tick* (``FaultPlan.parse`` builds one from the
+``launch/serve.py --fault-plan`` spec), so a preemption can land mid-decode
+and the bitwise replay contract is checked by tests/serve_chaos_harness.py.
 
 The plan is callable with the step index, which is exactly the
 ``fault_injector`` hook ``runtime/train_loop.train`` already had; the
@@ -84,6 +93,13 @@ class CrashDuringSaveError(FaultError):
     """The checkpoint writer died mid-write (simulated process kill)."""
 
 
+class EngineCrashError(FaultError):
+    """The serving engine died without the world changing (process crash,
+    XLA runtime abort).  The resilient serve loop treats it as retryable:
+    same world, fresh KV pools, every in-flight request replayed from its
+    prompt — bounded by ``ServeLoopConfig.max_crash_retries``."""
+
+
 @dataclasses.dataclass
 class FaultEvent:
     """One scripted event.  ``fired`` keeps every event one-shot, so the
@@ -138,6 +154,54 @@ class FaultPlan:
         self.events.append(FaultEvent("crash_during_save", step))
         return self
 
+    def crash(self, at_step: int) -> "FaultPlan":
+        """Engine crash with the world intact (serve-loop retry path)."""
+        self.events.append(FaultEvent("crash", at_step))
+        return self
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Build a plan from a compact CLI spec (``launch/serve.py
+        --fault-plan``).
+
+        Comma-separated one-shot events, each ``kind@tick`` with an
+        optional ``xN`` device count (default 1):
+
+        - ``preempt@T[xN]`` — abrupt loss of N devices at tick T;
+        - ``notice@T[xN]`` — preemption announced with notice;
+        - ``grow@T[xN]`` — N devices return;
+        - ``slow@T[xF]`` — straggling tick (F = slowdown factor);
+        - ``evict@T`` — straggler escalated to eviction;
+        - ``crash@T`` — engine crash, world intact.
+
+        Example: ``"preempt@20x4,grow@40x4,crash@60"``.
+        """
+        plan = cls()
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            try:
+                kind, rest = part.split("@", 1)
+                at, _, arg = rest.partition("x")
+                at = int(at)
+                n = float(arg) if arg else 1.0
+            except ValueError:
+                raise ValueError(f"bad fault spec {part!r} "
+                                 "(want kind@tick[xN])") from None
+            if kind == "preempt":
+                plan.preempt(at, devices=int(n), notice=False)
+            elif kind == "notice":
+                plan.preempt(at, devices=int(n), notice=True)
+            elif kind == "grow":
+                plan.grow(at, devices=int(n))
+            elif kind == "slow":
+                plan.slow(at, factor=n)
+            elif kind == "evict":
+                plan.slow(at, factor=n, evict=True)
+            elif kind == "crash":
+                plan.crash(at)
+            else:
+                raise ValueError(f"unknown fault kind {kind!r} in {part!r}")
+        return plan
+
     # -- the train-loop hook ------------------------------------------------
     def __call__(self, step: int) -> None:
         """Fire this step's scripted events (the loop's ``fault_injector``)."""
@@ -162,6 +226,9 @@ class FaultPlan:
                     raise StragglerError(
                         f"device {ev.devices} {ev.factor:g}x slow at step "
                         f"{step}: evicted")
+            if ev.kind == "crash":
+                raise EngineCrashError(
+                    f"engine crashed at step {step} (world intact)")
 
     # -- the checkpoint-writer hook ----------------------------------------
     def bind(self, checkpointer) -> "FaultPlan":

@@ -124,6 +124,63 @@ def max_resident_requests(
     return max(int(free // per_req), 0)
 
 
+# graceful-degradation dtype order: each step right is lossier but smaller
+_KV_LADDER = ("fp32", "bf16", "int8")
+
+
+def degradation_levels(
+    model,
+    topo,
+    gather: GatherPolicy,
+    sync: SyncPolicy,
+    *,
+    hbm_bytes: float,
+    ctx_len: int,
+    kv_block_size: int = 16,
+    kv_ceiling: str = "bf16",
+    tighten: float = 0.5,
+) -> list[dict]:
+    """Price a graceful-degradation ladder for the serving scheduler.
+
+    Returns ordered ``{"kv_dtype", "resident_cap", "label"}`` levels for
+    :class:`repro.runtime.batching.DegradationLadder` (plain dicts — core
+    must not import runtime):
+
+    - level 0: the configured operating point — ``kv_ceiling`` KV at the
+      full :func:`max_resident_requests` residency;
+    - level 1: same dtype, residency tightened by ``tighten`` — fewer
+      residents means fewer evictions and less replayed work under
+      ``reserve="min"`` thrash;
+    - level 2+: one lossier KV dtype per level (bf16 → int8), each priced
+      at its own (larger) planner residency, again tightened.
+
+    Every cap is at least 1, so the ladder degrades throughput and
+    numerics but can never deadlock admission.
+    """
+    if kv_ceiling not in _KV_LADDER:
+        raise ValueError(f"unknown kv dtype {kv_ceiling!r}")
+    if not 0.0 < tighten <= 1.0:
+        raise ValueError("tighten must be in (0, 1]")
+
+    def cap(dt):
+        return max_resident_requests(
+            model, topo, gather, sync, hbm_bytes=hbm_bytes, ctx_len=ctx_len,
+            kv_block_size=kv_block_size, kv_dtype=dt)
+
+    r0 = cap(kv_ceiling)
+    levels = [
+        {"kv_dtype": kv_ceiling, "resident_cap": max(r0, 1),
+         "label": "configured"},
+        {"kv_dtype": kv_ceiling, "resident_cap": max(int(r0 * tighten), 1),
+         "label": "tightened"},
+    ]
+    for dt in _KV_LADDER[_KV_LADDER.index(kv_ceiling) + 1:]:
+        levels.append({"kv_dtype": dt,
+                       "resident_cap": max(int(cap(dt) * tighten), 1),
+                       "label": f"kv_{dt}"})
+    return levels
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceGrid:
     """The three sizes the footprint model needs — duck-types MiCSTopology

@@ -123,6 +123,15 @@ class PagedKVAllocator:
         self._free.extend(sorted(blocks, reverse=True))
         self._free.sort(reverse=True)
 
+    def reset(self) -> None:
+        """Return every block to the pool (outstanding tables invalid).
+
+        The world-change rebuild path: after a preemption/degradation the
+        KV pool arrays are re-initialized and every resident request
+        replays from its prompt, so the allocator forgets all outstanding
+        allocations in one step instead of requiring each to be freed."""
+        self._free = list(range(self.n_blocks - 1, 0, -1))
+
 
 # ---------------------------------------------------------------------------
 # paged cache pytree (global arrays + pspecs)

@@ -1,0 +1,338 @@
+"""Fault-tolerant serving driver: the world-change-aware serve loop.
+
+The training loop survives preemption by checkpoint + rollback
+(runtime/train_loop.py).  Serving has a cheaper durable state: the
+*prompts*.  Because the paged engine samples per (seed, position)
+(models/lm.sample_tokens) and paged attention is bitwise-invariant to
+block-table layout and gather staging (tests/serve_harness.py), a request
+replayed from its prompt on any surviving topology regenerates exactly the
+completion it would have produced — so the loop's recovery story is simply
+**re-mesh, rebuild, replay**:
+
+1. a scripted :class:`repro.core.faults.FaultPlan` (or a real preemption
+   signal) raises a typed fault at a scheduler tick;
+2. on :class:`~repro.core.faults.WorldChangeError` the survivors are
+   re-meshed and the serve policy grid re-ranked for the new link geometry
+   under the same HBM budget — with numerics pinned —
+   (``runtime/serving.resize_for_serve_world``), the paged step and pools
+   are rebuilt, and every in-flight request is requeued from its prompt
+   (``ContinuousBatcher.rebuild_world``) ahead of the waiting queue;
+3. :class:`~repro.core.faults.StragglerError` is the "evict the slow
+   host" decision: the world shrinks by one (rounded to a TP multiple)
+   and the same rebuild runs;
+4. :class:`~repro.core.faults.EngineCrashError` retries in place — same
+   world, fresh pools, bounded by ``max_crash_retries``.
+
+``notice`` on a preemption is advisory here: training uses it to take an
+emergency checkpoint, but serving's checkpoint *is* the prompt queue, so
+both paths replay identically and the ledger just records which kind
+fired.
+
+Overload control rides on the batcher (deadlines/TTL, bounded queue,
+typed shedding, seeded backoff) and on an optional
+:class:`~repro.runtime.batching.DegradationLadder`: each tick the queue
+pressure feeds the ladder, and a level change tightens the per-rank
+residency cap (priced by ``memplan.max_resident_requests``) or downshifts
+the KV dtype — the latter rebuilds the engine in place and replays, the
+one recovery path numerics are *allowed* to change on (that is the
+degradation), restoring automatically when pressure clears.
+
+The chaos harness (tests/serve_chaos_harness.py) proves the headline
+guarantee on 8 virtual devices: kill half the mesh mid-decode and every
+surviving request completes bitwise-identical to the fault-free run, with
+the lifecycle ledger accounting for 100% of submissions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults import (
+    EngineCrashError, StragglerError, WorldChangeError,
+)
+from repro.core.mics import MiCSConfig, init_state
+from repro.core.topology import MiCSTopology
+from repro.runtime import paged as PG
+from repro.runtime.batching import (
+    ContinuousBatcher, DegradationLadder, Request, ShedError,
+)
+from repro.runtime.serving import resize_for_serve_world
+
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class ServeLoopConfig:
+    """Engine geometry + robustness budgets for :class:`ResilientServeLoop`.
+
+    The engine half mirrors ``benchmarks/serve_bench.py`` (``slots_local``
+    resident slots and ``nb_local`` KV blocks per data rank, ``max_blocks``
+    table width, ``chunk`` prefill tokens per tick).  The robustness half:
+    ``max_world_changes``/``max_crash_retries`` bound the rebuild budget
+    (a flapping cluster re-raises rather than thrashing), ``max_ticks`` is
+    the deadlock guard, and the ``reserve``/``max_queue``/``evict_cap``/
+    ``backoff_*``/``resident_cap`` knobs pass through to the batcher's
+    overload control."""
+
+    slots_local: int
+    nb_local: int
+    block_size: int
+    max_blocks: int
+    chunk: int = 8
+    top_k: int = 0
+    reserve: str = "full"
+    max_queue: int = 0
+    evict_cap: int = 4
+    backoff_base: int = 0
+    backoff_seed: int = 0
+    resident_cap: int = 0
+    max_world_changes: int = 8
+    max_crash_retries: int = 2
+    max_ticks: int = 100_000
+    seed: int = 7              # default params provider: init_state(seed)
+    arrival_rate: float = 0.0  # offered load the world re-rank prices
+
+
+def _default_params(model, topo: MiCSTopology, seed: int):
+    """Reload weights onto a (possibly new) topology.
+
+    Serving weights are read-only, so production reloads them from the
+    checkpoint/object store after a world change; the deterministic stand-in
+    is a seeded re-init — ``init_state`` materializes identical global
+    values on any mesh, which the chaos harness's bitwise contract
+    implicitly verifies."""
+    return init_state(model, topo, seed=seed)["params"]
+
+
+class ResilientServeLoop:
+    """Continuous-batching serve loop that survives faults and overload.
+
+    ``fault_injector`` is called with every scheduler tick (a
+    ``core/faults.FaultPlan`` fits directly); ``params_for(model, topo)``
+    reloads weights after a rebuild (default: seeded re-init);
+    ``ladder`` enables graceful degradation.
+    """
+
+    def __init__(self, model, topo: MiCSTopology, mcfg: MiCSConfig,
+                 sc: ServeLoopConfig, *,
+                 params_for: Callable | None = None,
+                 fault_injector: Callable[[int], None] | None = None,
+                 ladder: DegradationLadder | None = None):
+        self.model = model
+        self.topo = topo
+        self.mcfg0 = mcfg          # numerics source for every re-rank
+        self.mcfg = mcfg
+        self.sc = sc
+        self.tp = topo.model_size
+        self.world = topo.world_size
+        self.ctx_len = sc.max_blocks * sc.block_size
+        self.fault = fault_injector
+        self.ladder = ladder
+        self.params_for = params_for or (
+            lambda model, topo: _default_params(model, topo, sc.seed))
+        self.kv_dtype = (ladder.current()["kv_dtype"] if ladder
+                         else mcfg.kv_dtype)
+        self.world_changes: list[dict] = []
+        self.crash_retries = 0
+        self.batcher = ContinuousBatcher(
+            dp=topo.data_parallel_size, slots_local=sc.slots_local,
+            nb_local=sc.nb_local, block_size=sc.block_size,
+            max_blocks=sc.max_blocks, chunk=sc.chunk, reserve=sc.reserve,
+            max_queue=sc.max_queue, evict_cap=sc.evict_cap,
+            backoff_base=sc.backoff_base, backoff_seed=sc.backoff_seed,
+            resident_cap=(ladder.current()["resident_cap"] if ladder
+                          else sc.resident_cap))
+        self._build_engine()
+
+    # -- engine (re)construction ------------------------------------------
+
+    def _build_engine(self) -> None:
+        sc = self.sc
+        self.step_chunk = PG.build_paged_step(
+            self.model, self.topo, self.mcfg, max_blocks=sc.max_blocks,
+            block_size=sc.block_size, chunk=sc.chunk,
+            kv_dtype=self.kv_dtype, top_k=sc.top_k)
+        self.step_one = PG.build_paged_step(
+            self.model, self.topo, self.mcfg, max_blocks=sc.max_blocks,
+            block_size=sc.block_size, chunk=1,
+            kv_dtype=self.kv_dtype, top_k=sc.top_k)
+        self.caches, _ = PG.init_paged_caches(
+            self.model, self.topo, sc.nb_local, sc.block_size,
+            self.kv_dtype)
+        self.params = self.params_for(self.model, self.topo)
+
+    def _rebuild(self, n_devices: int) -> dict:
+        """Re-mesh + numerics-pinned re-rank + rebuild + replay."""
+        self.topo, self.mcfg, info = resize_for_serve_world(
+            self.model, self.mcfg0, n_devices, tp=self.tp,
+            partition_size=self.topo.partition_size, seq=self.ctx_len,
+            arrival_rate=self.sc.arrival_rate)
+        if self.ladder is None:       # ladder levels own kv_dtype otherwise
+            self.kv_dtype = self.mcfg.kv_dtype
+        self._build_engine()
+        replayed = self.batcher.rebuild_world(
+            dp=self.topo.data_parallel_size)
+        self.world = n_devices
+        return dict(info, replayed=len(replayed))
+
+    def _shrink_to_tp_multiple(self, n: int) -> int:
+        n -= n % self.tp
+        if n < self.tp:
+            raise WorldChangeError(
+                f"world of {n} devices cannot carry tp={self.tp}", lost=0)
+        return n
+
+    # -- fault handlers ----------------------------------------------------
+
+    def _on_world_change(self, e: WorldChangeError, tick: int) -> None:
+        if len(self.world_changes) >= self.sc.max_world_changes:
+            log.error("world changed %d times; giving up",
+                      len(self.world_changes))
+            raise e
+        new_world = self._shrink_to_tp_multiple(
+            self.world - e.lost + e.gained)
+        log.warning("world change at tick %d (%s): %d -> %d devices",
+                    tick, e, self.world, new_world)
+        info = self._rebuild(new_world)
+        self.world_changes.append({
+            "at_tick": int(tick),
+            "kind": "grow" if e.gained else "preempt",
+            "lost": e.lost, "gained": e.gained, "notice": e.notice,
+            "world": new_world, **info})
+
+    def _on_straggler(self, e: StragglerError, tick: int) -> None:
+        if len(self.world_changes) >= self.sc.max_world_changes:
+            raise e
+        new_world = self._shrink_to_tp_multiple(self.world - 1)
+        log.warning("straggler evicted at tick %d (%s): %d -> %d devices",
+                    tick, e, self.world, new_world)
+        info = self._rebuild(new_world)
+        self.world_changes.append({
+            "at_tick": int(tick), "kind": "straggler_evict",
+            "lost": 1, "gained": 0, "notice": False,
+            "world": new_world, **info})
+
+    def _on_crash(self, e: EngineCrashError, tick: int) -> None:
+        self.crash_retries += 1
+        if self.crash_retries > self.sc.max_crash_retries:
+            raise e
+        log.warning("engine crash at tick %d (%s): retrying in place",
+                    tick, e)
+        # same world: fresh pools + params, replay in-flight from prompts
+        self.caches, _ = PG.init_paged_caches(
+            self.model, self.topo, self.sc.nb_local, self.sc.block_size,
+            self.kv_dtype)
+        self.params = self.params_for(self.model, self.topo)
+        replayed = self.batcher.rebuild_world(
+            dp=self.topo.data_parallel_size)
+        self.world_changes.append({
+            "at_tick": int(tick), "kind": "crash", "lost": 0, "gained": 0,
+            "notice": False, "world": self.world,
+            "replayed": len(replayed)})
+
+    def _on_ladder(self, tick: int) -> None:
+        if not self.ladder.update(tick, self.batcher.pressure()):
+            return
+        lv = self.ladder.current()
+        self.batcher.resident_cap = lv["resident_cap"]
+        if lv["kv_dtype"] != self.kv_dtype:
+            # dtype downshift/restore: pools change layout, so this is a
+            # same-world rebuild + replay (numerics change by design here)
+            self.kv_dtype = lv["kv_dtype"]
+            self._build_engine()
+            self.batcher.rebuild_world(dp=self.topo.data_parallel_size)
+        log.warning("degradation ladder -> level %d (%s) at tick %d",
+                    self.ladder.level, lv.get("label", ""), tick)
+
+    # -- the loop ----------------------------------------------------------
+
+    def _engine_step(self, plan) -> np.ndarray:
+        decode_only = int(plan.n_new.max()) <= 1
+        step = self.step_one if decode_only else self.step_chunk
+        tokens = plan.tokens[:, :1] if decode_only else plan.tokens
+        tok, _logits, self.caches = step(
+            self.params, self.caches,
+            jnp.asarray(tokens), jnp.asarray(plan.pos),
+            jnp.asarray(plan.n_new), jnp.asarray(plan.tables),
+            jnp.asarray(plan.seeds), jnp.asarray(plan.temps))
+        return np.asarray(tok)
+
+    def run(self, requests: list[Request],
+            arrival_ticks: list[int] | None = None) -> dict:
+        """Serve ``requests`` to completion (or typed shed); return report.
+
+        ``arrival_ticks[i]`` is the tick request ``i`` is offered at
+        (default: all at tick 0).  The report carries the completions, the
+        lifecycle ledger, the world-change ledger and the ladder
+        transitions — everything the chaos harness and the launcher
+        print."""
+        if arrival_ticks is None:
+            arrival_ticks = [0] * len(requests)
+        pending = sorted(zip(arrival_ticks, requests),
+                         key=lambda p: (p[0], p[1].rid))
+        b = self.batcher
+        while pending or not b.idle:
+            if b.tick > self.sc.max_ticks:
+                raise RuntimeError(
+                    f"serve loop exceeded max_ticks={self.sc.max_ticks} "
+                    f"(queue deadlock?)")
+            tick = b.tick
+            try:
+                if self.fault is not None:
+                    self.fault(tick)
+            except WorldChangeError as e:
+                self._on_world_change(e, tick)
+                continue
+            except StragglerError as e:
+                self._on_straggler(e, tick)
+                continue
+            except EngineCrashError as e:
+                self._on_crash(e, tick)
+                continue
+            while pending and pending[0][0] <= tick:
+                _, req = pending.pop(0)
+                req.arrival = tick
+                try:
+                    b.submit(req)
+                except ShedError:
+                    pass    # typed + already in the batcher's shed ledger
+            plan = b.plan_step()
+            if plan.active_rows == 0:
+                b.commit(plan, np.zeros(b.batch, np.int64))
+            else:
+                b.commit(plan, self._engine_step(plan))
+            if self.ladder is not None:
+                self._on_ladder(tick)
+        return self.report()
+
+    def report(self) -> dict:
+        return {
+            "completions": {r.rid: list(r.generated) for r in
+                            self.batcher.finished},
+            "shed": {r.rid: r.shed_reason for r in
+                     self.batcher.shed_requests},
+            "ledger": self.batcher.ledger(),
+            "world_changes": list(self.world_changes),
+            "ladder_transitions": (list(self.ladder.transitions)
+                                   if self.ladder else []),
+            "ladder_max_level": (self.ladder.max_level_seen
+                                 if self.ladder else 0),
+            "ladder_level": self.ladder.level if self.ladder else 0,
+            "crash_retries": self.crash_retries,
+            "world": self.world,
+            "kv_dtype": self.kv_dtype,
+            "ticks": self.batcher.tick,
+        }
+
+
+def serve_resilient(model, topo, mcfg, sc: ServeLoopConfig,
+                    requests: list[Request],
+                    arrival_ticks: list[int] | None = None, **kw) -> dict:
+    """One-shot convenience wrapper around :class:`ResilientServeLoop`."""
+    return ResilientServeLoop(model, topo, mcfg, sc, **kw).run(
+        requests, arrival_ticks)

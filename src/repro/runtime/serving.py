@@ -217,3 +217,47 @@ def build_serve_steps(model: ModelDef, topo: MiCSTopology, mcfg: MiCSConfig,
 
     decode_fn.lower = decode_jit.lower  # AOT path (launch/dryrun.py)
     return prefill_fn, decode_fn
+
+
+def resize_for_serve_world(model, mcfg: MiCSConfig, n_devices: int, *,
+                           tp: int = 1, partition_size: int | None = None,
+                           seq: int = 0, arrival_rate: float = 0.0
+                           ) -> tuple[MiCSTopology, MiCSConfig, dict]:
+    """(topology, config, ledger info) for serving on an ``n_devices`` world.
+
+    The serving analog of ``train_loop.resize_for_world``, and the one
+    rebuild path the resilient serve loop (runtime/resilient.py) uses on
+    every :class:`repro.core.faults.WorldChangeError`:
+
+    1. ``autotune.resolve_world(mode="serve")`` re-picks the partition
+       group for the survivors (the paper's §3.1 rule under
+       ``mcfg.hbm_budget_gb``; the keep rule without a budget);
+    2. ``topology.elastic_host_topology`` re-meshes them contiguously
+       (TP stays pinned — flat layouts are TP-local);
+    3. ``autotune.rerank_serve_world`` re-ranks the serve decode grid on
+       the new link geometry with numerics pinned, so the re-ranked
+       policy cannot break the bitwise replay contract.
+
+    ``info`` is ledger-friendly: the §3.1 decision plus the re-ranked
+    serve policy summary.
+    """
+    from repro.core.autotune import rerank_serve_world, resolve_world
+    from repro.core.topology import elastic_host_topology
+
+    p, mcfg2, info = resolve_world(
+        model, mcfg, n_devices=n_devices, tp=tp,
+        partition_size=partition_size, mode="serve", seq=seq)
+    topo = elastic_host_topology(n_devices, p, tp)
+    mcfg3, plan = rerank_serve_world(model, topo, mcfg2, seq=seq,
+                                     arrival_rate=arrival_rate)
+    chosen = plan.chosen
+    info = dict(info, serve_rerank={
+        "gather": chosen.gather.topology,
+        "wire": chosen.gather.wire_dtype,
+        "prefetch": chosen.gather.prefetch,
+        "kv_dtype": mcfg3.kv_dtype,            # pinned, not chosen.kv_dtype
+        "max_resident_requests": mcfg3.max_resident_requests,
+        "t_decode_s": chosen.t_decode_s,
+        "tokens_per_s": chosen.tokens_per_s,
+    })
+    return topo, mcfg3, info

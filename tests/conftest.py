@@ -29,6 +29,18 @@ def serve_results():
 
 
 @pytest.fixture(scope="session")
+def serve_chaos_results():
+    """Parsed JSON of the serving chaos harness, run once per session
+    (tests/test_batching_faults.py asserts every check: bitwise replay
+    across preempt/grow-back/straggler/crash plus deterministic typed
+    shedding under a burst)."""
+    from harness_util import run_harness
+
+    return run_harness(pathlib.Path(__file__).parent
+                       / "serve_chaos_harness.py")
+
+
+@pytest.fixture(scope="session")
 def elastic_results():
     """Parsed JSON of the elastic preemption harness, run once per session
     (tests/test_elastic.py asserts every check; tests/test_checkpoint.py

@@ -1,0 +1,301 @@
+"""Serving chaos harness: kill devices mid-decode, prove bitwise replay.
+
+Runs in a subprocess with 8 virtual CPU devices (same pattern as
+elastic_harness.py).  Prints one JSON object with named check results;
+tests/test_batching_faults.py asserts on them, and ``--check`` mode is the
+CI chaos smoke gate (artifact BENCH_serve_chaos_smoke.json).
+
+The system under test is :class:`repro.runtime.resilient.ResilientServeLoop`
+— the world-change-aware serve loop.  Serving's durable state is the
+prompt queue: because sampling is keyed per (seed, position) and paged
+attention is bitwise-invariant to block-table layout and gather staging
+(tests/serve_harness.py), a request replayed from its prompt on ANY
+surviving topology regenerates exactly its fault-free completion.  Every
+fault check below therefore asserts the strongest possible property:
+the faulted run's completions are BITWISE identical to the fault-free
+baseline's, not merely "recovered".
+
+Checks:
+
+  preempt_replay_bitwise  8 devices (dp=4, tp=2) lose half the mesh
+                          abruptly mid-decode (no notice).  The loop
+                          re-meshes the 4 survivors, re-ranks the serve
+                          policy grid with numerics pinned, rebuilds the
+                          paged engine and replays all in-flight requests
+                          from their prompts — completions bitwise equal
+                          to the fault-free run, ledger accounts 100% of
+                          submissions, replay counters populated.
+  grow_back_readmission   start on 4 devices, the preempted capacity
+                          returns mid-run (grow 4 -> 8): resident
+                          requests replay onto the larger world and the
+                          completions still match the 8-device fault-free
+                          baseline (the topology-invariance contract).
+  straggler_evict         a straggling host is evicted (8 -> 7, rounded
+                          down to 6 = a tp multiple).  resolve_world's
+                          keep rule re-picks the partition group (2 does
+                          not divide the new extent 3, so p drops to 1)
+                          — the §3.1 decision exercised by serving —
+                          and completions stay bitwise.
+  crash_retry             the engine dies with the world intact: the loop
+                          retries in place (fresh pools, same mesh, replay
+                          from prompts), bounded by max_crash_retries;
+                          bitwise completions, crash ledgered.
+  shed_under_burst        overload: a tick-0 burst over a bounded queue
+                          with tight deadlines, seeded backoff and the
+                          degradation ladder.  Some requests complete,
+                          some shed with TYPED reasons (queue_full /
+                          deadline_unreachable); the ladder engages under
+                          pressure and restores when it clears; the
+                          lifecycle ledger accounts every submission; and
+                          the whole overload trajectory is deterministic
+                          — a second identical run sheds the same rids
+                          for the same reasons and completes the same
+                          tokens.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json
+import sys
+import traceback
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.faults import FaultPlan
+from repro.core.mics import MiCSConfig
+from repro.core.topology import elastic_host_topology
+from repro.models.build import build_model
+from repro.runtime.batching import DegradationLadder, Request
+from repro.runtime.resilient import ResilientServeLoop, ServeLoopConfig
+
+RESULTS = {}
+CTX = {}
+
+BLOCK_SIZE = 8
+MAX_BLOCKS = 4
+CHUNK = 8
+SLOTS_LOCAL = 4
+NB_LOCAL = 17          # +1 for the garbage block 0
+N_REQUESTS = 8
+
+CFG = smoke_variant(get_config("llama3.2-1b"))
+TP = 2
+MODEL = build_model(CFG, tp=TP)
+MCFG = MiCSConfig(kv_dtype="bf16", kv_block_size=BLOCK_SIZE)
+SC = ServeLoopConfig(slots_local=SLOTS_LOCAL, nb_local=NB_LOCAL,
+                     block_size=BLOCK_SIZE, max_blocks=MAX_BLOCKS,
+                     chunk=CHUNK, top_k=8, reserve="full", seed=7)
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            RESULTS[name] = {"ok": True}
+        except Exception as e:  # noqa: BLE001
+            RESULTS[name] = {
+                "ok": False,
+                "err": f"{type(e).__name__}: {e}",
+                "tb": traceback.format_exc()[-2000:],
+            }
+        return fn
+    return deco
+
+
+def make_trace(n: int) -> list[Request]:
+    """Seeded chat-shaped trace; every run builds a FRESH copy (requests
+    carry mutable scheduling state)."""
+    rng = np.random.default_rng(42)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 9))
+        max_new = int(rng.integers(10, 25))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(1, CFG.vocab, plen).astype(int).tolist(),
+            max_new_tokens=max_new, temperature=0.7, seed=1000 + i))
+    return reqs
+
+
+def run_loop(n_devices: int, *, fault=None, ladder=None, sc=SC,
+             reqs=None, arrivals=None):
+    topo = elastic_host_topology(n_devices, 2, tp=TP)
+    loop = ResilientServeLoop(MODEL, topo, MCFG, sc,
+                              fault_injector=fault, ladder=ladder)
+    return loop.run(reqs if reqs is not None else make_trace(N_REQUESTS),
+                    arrivals)
+
+
+def assert_bitwise(report, baseline, what):
+    assert set(report["completions"]) == set(baseline["completions"]), \
+        (what, sorted(report["completions"]), sorted(baseline["completions"]))
+    for rid, toks in baseline["completions"].items():
+        assert report["completions"][rid] == toks, \
+            f"{what}: rid {rid} diverged from the fault-free run"
+
+
+def assert_accounted(report, what):
+    led = report["ledger"]
+    assert led["accounted"], (what, led)
+    assert led["in_flight"] == 0, (what, led)
+
+
+# ---------------------------------------------------------------------------
+# fault-free baseline on the full 8-device mesh: the bitwise reference
+BASE = run_loop(8)
+assert BASE["ledger"]["completed"] == N_REQUESTS, BASE["ledger"]
+
+
+@check("preempt_replay_bitwise")
+def _preempt():
+    plan = FaultPlan().preempt(6, devices=4, notice=False)
+    rep = run_loop(8, fault=plan)
+    CTX["preempt"] = rep
+    assert len(rep["world_changes"]) == 1, rep["world_changes"]
+    wc = rep["world_changes"][0]
+    assert wc["kind"] == "preempt" and wc["lost"] == 4 and not wc["notice"]
+    assert wc["at_tick"] == 6 and wc["world"] == 4, wc
+    assert wc["replayed"] > 0, "nothing was in flight at the kill tick"
+    # the re-rank ledger is present and numerics stayed pinned
+    assert wc["serve_rerank"]["kv_dtype"] == MCFG.kv_dtype, wc
+    assert rep["ledger"]["replays"] == wc["replayed"], rep["ledger"]
+    assert_bitwise(rep, BASE, "preempt 8->4")
+    assert_accounted(rep, "preempt 8->4")
+    RESULTS["preempt_detail"] = {
+        "ledger": wc, "ticks": rep["ticks"], "bitwise": True}
+
+
+@check("grow_back_readmission")
+def _grow_back():
+    base4 = run_loop(4)                      # fault-free on the small world
+    assert_bitwise(base4, BASE, "4-device fault-free (topology invariance)")
+    plan = FaultPlan().grow(5, devices=4)
+    rep = run_loop(4, fault=plan)
+    wc = rep["world_changes"][0]
+    assert wc["kind"] == "grow" and wc["gained"] == 4 and wc["world"] == 8, wc
+    assert wc["replayed"] > 0, wc
+    assert_bitwise(rep, BASE, "grow 4->8")
+    assert_accounted(rep, "grow 4->8")
+    RESULTS["grow_detail"] = {"ledger": wc, "ticks": rep["ticks"],
+                              "bitwise": True}
+
+
+@check("straggler_evict")
+def _straggler():
+    plan = FaultPlan(slow_base_s=0.01).slow(4, factor=3, evict=True)
+    rep = run_loop(8, fault=plan)
+    wc = rep["world_changes"][0]
+    assert wc["kind"] == "straggler_evict", wc
+    assert wc["world"] == 6, wc              # 8 - 1 rounded down to tp=2
+    # extent 3 is not divisible by the old p=2: the keep rule re-picks p=1
+    assert wc["partition_size"] == 1, wc
+    assert_bitwise(rep, BASE, "straggler 8->6")
+    assert_accounted(rep, "straggler 8->6")
+    RESULTS["straggler_detail"] = {"ledger": wc, "fired": plan.log,
+                                   "bitwise": True}
+
+
+@check("crash_retry")
+def _crash():
+    plan = FaultPlan().crash(7)
+    rep = run_loop(8, fault=plan)
+    assert rep["crash_retries"] == 1, rep["crash_retries"]
+    wc = rep["world_changes"][0]
+    assert wc["kind"] == "crash" and wc["world"] == 8, wc
+    assert wc["replayed"] > 0, wc
+    assert_bitwise(rep, BASE, "crash retry")
+    assert_accounted(rep, "crash retry")
+    RESULTS["crash_detail"] = {"ledger": wc, "bitwise": True}
+
+
+# ---------------------------------------------------------------------------
+def _burst_once():
+    """One overloaded run: 16 requests at tick 0 over a bounded queue with
+    tight deadlines, backoff and a residency-tightening ladder level.
+
+    Geometry: dp=2 x slots_local=2 = 4 resident rows against a 12-deep
+    queue, so the tick-0 burst leaves ~8 waiting (pressure 0.67 > the 0.6
+    high water) — the ladder engages after its dwell, tightens residency
+    to 1/rank, and restores once the queue drains below 0.2."""
+    sc = ServeLoopConfig(
+        slots_local=2, nb_local=NB_LOCAL, block_size=BLOCK_SIZE,
+        max_blocks=MAX_BLOCKS, chunk=CHUNK, top_k=8, reserve="full",
+        max_queue=12, evict_cap=2, backoff_base=2, backoff_seed=11, seed=7)
+    ladder = DegradationLadder(
+        [{"kv_dtype": MCFG.kv_dtype, "resident_cap": 0,
+          "label": "configured"},
+         {"kv_dtype": MCFG.kv_dtype, "resident_cap": 1,
+          "label": "tightened"}],
+        high_water=0.6, low_water=0.2, dwell=2)
+    reqs = make_trace(16)
+    for r in reqs[2:5]:
+        r.deadline_tick = 4                  # unreachable: typed shed
+    for r in reqs[8:12]:
+        r.deadline_tick = 200                # generous: must complete
+    return run_loop(4, ladder=ladder, sc=sc, reqs=reqs,
+                    arrivals=[0] * len(reqs))
+
+
+@check("shed_under_burst")
+def _burst():
+    rep = _burst_once()
+    led = rep["ledger"]
+    assert_accounted(rep, "burst")
+    assert led["shed"] > 0 and led["completed"] > 0, led
+    by = led["shed_by_reason"]
+    assert by.get("queue_full", 0) > 0, by          # bounded-queue rejection
+    assert by.get("deadline_unreachable", 0) > 0, by  # typed deadline shed
+    # every shed is typed — no silent drops
+    assert sum(by.values()) == led["shed"], (by, led["shed"])
+    # the ladder engaged under pressure and restored when it cleared
+    assert rep["ladder_max_level"] >= 1, rep["ladder_transitions"]
+    assert rep["ladder_level"] == 0, rep["ladder_transitions"]
+    # completed requests decoded their full budget (no silent truncation)
+    done = {r: len(t) for r, t in rep["completions"].items()}
+    assert all(n > 0 for n in done.values()), done
+    # the generous-deadline cohort rode out the overload and completed
+    assert all(r in rep["completions"] for r in range(8, 12)), sorted(done)
+
+    # determinism: an identical second run sheds the same rids for the
+    # same reasons and completes the same tokens
+    rep2 = _burst_once()
+    assert rep["shed"] == rep2["shed"], (rep["shed"], rep2["shed"])
+    assert rep["completions"] == rep2["completions"]
+    assert led["shed_by_reason"] == rep2["ledger"]["shed_by_reason"]
+    RESULTS["burst_detail"] = {
+        "completed": led["completed"], "shed": led["shed"],
+        "shed_by_reason": by, "ladder": rep["ladder_transitions"],
+        "queue_depth_p99": led.get("queue_depth_p99"),
+        "deterministic": True}
+    CTX["burst"] = rep
+
+
+# ---------------------------------------------------------------------------
+# summary ledger for the CI chaos smoke artifact
+_bit = {name: RESULTS.get(name, {}).get("ok", False)
+        for name in ("preempt_replay_bitwise", "grow_back_readmission",
+                     "straggler_evict", "crash_retry")}
+_burst_res = CTX.get("burst")
+RESULTS["summary"] = {
+    "replay_bitwise": _bit,
+    "baseline_ticks": BASE["ticks"],
+    "shed_under_burst": ({
+        "completed": _burst_res["ledger"]["completed"],
+        "shed": _burst_res["ledger"]["shed"],
+        "accounted": _burst_res["ledger"]["accounted"],
+        "ladder_engaged": _burst_res["ladder_max_level"] >= 1,
+    } if _burst_res else None),
+}
+
+print(json.dumps(RESULTS, indent=1, default=str))
+if "--check" in sys.argv:
+    bad = [k for k, v in RESULTS.items()
+           if isinstance(v, dict) and v.get("ok") is False]
+    if bad:
+        print(f"serve chaos smoke gate FAILED: {bad}", file=sys.stderr)
+        sys.exit(1)

@@ -1,0 +1,374 @@
+"""Overload-control and fault-tolerance tests for the serving scheduler.
+
+Device-free units exercise the deadline/TTL math, the typed shed ledger,
+seeded-jitter backoff reproducibility, the degradation-ladder hysteresis,
+the eviction-cap livelock fix and the ``rebuild_world`` replay path —
+everything in runtime/batching.py that PR 9 added is deterministic host
+code, so it is all testable without a device.  The engine-level chaos
+properties (bitwise replay across preemption/grow-back/straggler/crash,
+shed-under-burst determinism on the real paged engine) run through the
+8-virtual-device subprocess harness (tests/serve_chaos_harness.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.faults import EngineCrashError, FaultPlan
+from repro.runtime.batching import (
+    SHED_DEADLINE, SHED_DEADLINE_SUBMIT, SHED_QUEUE_FULL, SHED_TTL,
+    ContinuousBatcher, DegradationLadder, Request, ShedError, backoff_ticks,
+)
+
+
+def _drive(b, max_ticks=500):
+    """Fake engine keyed by (rid, position): replay regenerates streams."""
+    for _ in range(max_ticks):
+        if b.idle:
+            return b
+        plan = b.plan_step()
+        tok = np.zeros(b.batch, np.int64)
+        for slot, req in plan.requests.items():
+            tok[slot] = (req.rid * 1000 + req.next_pos
+                         + int(plan.n_new[slot])) % 97
+        b.commit(plan, tok)
+    raise AssertionError("scheduler did not drain")
+
+
+def _batcher(**kw):
+    cfg = dict(dp=1, slots_local=2, nb_local=9, block_size=4, max_blocks=4,
+               chunk=4)
+    cfg.update(kw)
+    return ContinuousBatcher(**cfg)
+
+
+# ---------------------------------------------------------------------------
+# deadline / TTL math
+# ---------------------------------------------------------------------------
+
+def test_min_ticks_left():
+    r = Request(rid=0, prompt=list(range(1, 8)), max_new_tokens=5)
+    # ceil(7/4)=2 prefill ticks (first token lands on the last) + 4 decode
+    assert r.min_ticks_left(chunk=4) == 6
+    assert r.min_ticks_left(chunk=7) == 5
+    assert r.min_ticks_left(chunk=1) == 11
+    r.prefill_done = 7
+    r.generated = [1, 2]
+    assert r.min_ticks_left(chunk=4) == 3       # decode-only: one per token
+
+
+def test_submit_rejects_unreachable_deadline():
+    b = _batcher()
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=8, deadline_tick=3)
+    with pytest.raises(ShedError) as ei:
+        b.submit(req)
+    assert ei.value.reason == SHED_DEADLINE_SUBMIT
+    # rejected, but never silently: the ledger accounts it
+    led = b.ledger()
+    assert led["submitted"] == 1 and led["shed"] == 1 and led["accounted"]
+    assert led["shed_by_reason"] == {SHED_DEADLINE_SUBMIT: 1}
+    assert req.shed_reason == SHED_DEADLINE_SUBMIT and req.shed_tick == 0
+
+
+def test_exactly_reachable_deadline_admits_and_completes():
+    b = _batcher()
+    # min_ticks_left = 1 + 5 = 6 from tick 0 -> earliest finish tick 5
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=6, deadline_tick=5)
+    b.submit(req)
+    _drive(b)
+    assert req.finish_tick == 5 == req.deadline_tick
+    assert b.ledger()["completed"] == 1
+
+
+def test_queued_deadline_expires_typed():
+    # one slot: the second request waits; its deadline becomes unreachable
+    # while queued and the sweep sheds it with the *queued* reason
+    b = _batcher(slots_local=1)
+    b.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=6))
+    late = Request(rid=1, prompt=[1, 2], max_new_tokens=6, deadline_tick=7)
+    b.submit(late)
+    _drive(b)
+    assert late.shed_reason == SHED_DEADLINE
+    led = b.ledger()
+    assert led["completed"] == 1 and led["shed"] == 1 and led["accounted"]
+
+
+def test_ttl_expires_while_waiting():
+    b = _batcher(slots_local=1)
+    b.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=8))
+    aged = Request(rid=1, prompt=[1, 2], max_new_tokens=2, ttl_ticks=3)
+    b.submit(aged)
+    _drive(b)
+    assert aged.shed_reason == SHED_TTL
+    assert aged.shed_tick == 4          # first tick past submit_tick + ttl
+    assert b.ledger()["accounted"]
+
+
+def test_bounded_queue_rejects_on_submit():
+    b = _batcher(slots_local=1, max_queue=2)
+    b.submit(Request(rid=0, prompt=[1], max_new_tokens=4))
+    b.plan_step()                        # admit rid 0: queue is empty again
+    b.commit(b.plan_step(), np.zeros(1, np.int64))
+    for rid in (1, 2):
+        b.submit(Request(rid=rid, prompt=[1], max_new_tokens=4))
+    with pytest.raises(ShedError) as ei:
+        b.submit(Request(rid=3, prompt=[1], max_new_tokens=4))
+    assert ei.value.reason == SHED_QUEUE_FULL
+    led = b.ledger()
+    assert led["submitted"] == 4 and led["shed"] == 1 and led["accounted"]
+
+
+def test_structural_errors_stay_value_errors():
+    b = _batcher(max_queue=1)
+    with pytest.raises(ValueError):
+        b.submit(Request(rid=0, prompt=[1], max_new_tokens=99))
+    with pytest.raises(ValueError):
+        b.submit(Request(rid=1, prompt=[], max_new_tokens=1))
+    assert b.ledger()["submitted"] == 0   # caller bugs are not load
+
+
+# ---------------------------------------------------------------------------
+# seeded backoff
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_reproducible_and_windowed():
+    for attempt in (1, 2, 3, 7):
+        window = 4 * (1 << (attempt - 1))
+        got = backoff_ticks(4, attempt, rid=5, seed=9)
+        assert got == backoff_ticks(4, attempt, rid=5, seed=9)
+        assert window <= got < 2 * window, (attempt, got)
+    assert backoff_ticks(0, 3, rid=5, seed=9) == 0    # disabled
+    # jitter decorrelates requests retrying after the same attempt count
+    draws = {backoff_ticks(4, 2, rid=r, seed=9) for r in range(16)}
+    assert len(draws) > 1
+
+
+def test_backoff_gate_skips_without_blocking_fifo():
+    b = _batcher(slots_local=1, backoff_base=4, backoff_seed=1)
+    gated = Request(rid=0, prompt=[1], max_new_tokens=2)
+    ready = Request(rid=1, prompt=[1], max_new_tokens=2)
+    b.submit(gated)
+    b.submit(ready)
+    gated.retry_at_tick = 3              # as a requeue would set it
+    plan = b.plan_step()                 # rid 1 admitted past the gate
+    assert plan.requests and next(iter(plan.requests.values())).rid == 1
+    _drive(b)
+    assert {r.rid for r in b.finished} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def _ladder(dwell=3):
+    return DegradationLadder(
+        [{"kv_dtype": "bf16", "resident_cap": 0, "label": "configured"},
+         {"kv_dtype": "bf16", "resident_cap": 2, "label": "tightened"},
+         {"kv_dtype": "int8", "resident_cap": 4, "label": "kv_int8"}],
+        high_water=0.75, low_water=0.25, dwell=dwell)
+
+
+def test_ladder_needs_consecutive_dwell():
+    lad = _ladder(dwell=3)
+    assert not lad.update(0, 0.9) and not lad.update(1, 0.9)
+    assert not lad.update(2, 0.5)        # streak broken: counter resets
+    assert not lad.update(3, 0.9) and not lad.update(4, 0.9)
+    assert lad.update(5, 0.9)            # third consecutive hot tick
+    assert lad.level == 1 and lad.current()["label"] == "tightened"
+
+
+def test_ladder_walks_both_ways_and_clamps():
+    lad = _ladder(dwell=1)
+    assert lad.update(0, 1.0) and lad.level == 1
+    assert lad.update(1, 1.0) and lad.level == 2
+    assert not lad.update(2, 1.0)        # clamped at the last level
+    assert not lad.update(3, 0.5)        # hysteresis band: no movement
+    assert lad.update(4, 0.0) and lad.level == 1
+    assert lad.update(5, 0.0) and lad.level == 0
+    assert not lad.update(6, 0.0)        # clamped at the configured level
+    assert lad.max_level_seen == 2
+    assert [t["to"] for t in lad.transitions] == [1, 2, 1, 0]
+
+
+def test_ladder_validates():
+    with pytest.raises(ValueError):
+        DegradationLadder([])
+    with pytest.raises(ValueError):
+        DegradationLadder([{"kv_dtype": "bf16", "resident_cap": 0}],
+                          high_water=0.2, low_water=0.5)
+
+
+def test_resident_cap_limits_admission():
+    b = _batcher(slots_local=3, resident_cap=2)
+    for rid in range(3):
+        b.submit(Request(rid=rid, prompt=[1], max_new_tokens=4))
+    plan = b.plan_step()
+    assert plan.active_rows == 2         # cap 2 < 3 free slots
+    _drive(b)                            # ...but nobody is starved
+    assert len(b.finished) == 3
+
+
+# ---------------------------------------------------------------------------
+# eviction cap + aging: the livelock regression
+# ---------------------------------------------------------------------------
+
+def _sustained_stream(evict_cap, ticks=300):
+    """reserve="min" under a never-ending one-request-per-tick stream.
+
+    The pool (5 usable blocks) cannot hold two full requests (4 blocks
+    each), so resident growth keeps evicting the youngest resident — and
+    with a fresh arrival every tick, the evicted request is readmitted as
+    the youngest again and re-evicted before it can finish."""
+    b = ContinuousBatcher(dp=1, slots_local=2, nb_local=6, block_size=2,
+                          max_blocks=4, chunk=2, reserve="min",
+                          evict_cap=evict_cap)
+    for t in range(ticks):
+        b.submit(Request(rid=t, prompt=[1, 2], max_new_tokens=7, arrival=t))
+        plan = b.plan_step()
+        tok = np.zeros(b.batch, np.int64)
+        for slot, req in plan.requests.items():
+            tok[slot] = (req.rid * 1000 + req.next_pos
+                         + int(plan.n_new[slot])) % 97
+        b.commit(plan, tok)
+    return b
+
+
+def test_reserve_min_livelocks_without_eviction_cap():
+    # the regression: with the cap disabled (legacy PR-8 semantics), the
+    # first request is starved FOREVER — hundreds of ticks, dozens of
+    # evictions, zero completions for a 9-tick job
+    b = _sustained_stream(evict_cap=0)
+    assert 0 not in {r.rid for r in b.finished}
+    starved = next(r for r in b.waiting + list(b.resident.values())
+                   if r.rid == 0)
+    assert starved.evictions > 20, starved.evictions
+
+
+def test_eviction_cap_with_aging_breaks_the_livelock():
+    b = _sustained_stream(evict_cap=3)
+    done = {r.rid: r for r in b.finished}
+    assert 0 in done, "aging failed to rescue the starved request"
+    assert done[0].evictions <= 3
+    assert done[0].finish_tick < 30      # rescued promptly, not eventually
+    led = b.ledger()
+    assert led["max_evictions_per_request"] <= 3
+    assert led["accounted"]
+
+
+def test_capped_eviction_streams_stay_deterministic():
+    # the cap changes the schedule, not the tokens: per-(rid, position)
+    # streams still match an eviction-free run of the same requests
+    def finished_streams(**kw):
+        b = ContinuousBatcher(dp=1, slots_local=2, nb_local=6, block_size=4,
+                              max_blocks=4, chunk=4, **kw)
+        for i in range(3):
+            b.submit(Request(rid=i, prompt=[1, 2, 3, 4], max_new_tokens=9))
+        _drive(b)
+        return {r.rid: r.generated for r in b.finished}
+
+    want = finished_streams(reserve="full")
+    got = finished_streams(reserve="min", evict_cap=2)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# world-change replay (device-free half of the chaos contract)
+# ---------------------------------------------------------------------------
+
+def test_rebuild_world_replays_bitwise_and_keeps_ledger():
+    def run(rebuild_at=None):
+        b = ContinuousBatcher(dp=2, slots_local=2, nb_local=9, block_size=4,
+                              max_blocks=4, chunk=4)
+        for i in range(6):
+            b.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=8))
+        for _ in range(500):
+            if b.idle:
+                return b
+            if rebuild_at is not None and b.tick == rebuild_at:
+                replayed = b.rebuild_world(dp=1)
+                assert replayed and all(r.next_pos == 0 for r in replayed)
+                rebuild_at = None
+            plan = b.plan_step()
+            tok = np.zeros(b.batch, np.int64)
+            for slot, req in plan.requests.items():
+                tok[slot] = (req.rid * 1000 + req.next_pos
+                             + int(plan.n_new[slot])) % 97
+            b.commit(plan, tok)
+        raise AssertionError("did not drain")
+
+    base = run()
+    faulted = run(rebuild_at=4)
+    assert ({r.rid: r.generated for r in faulted.finished}
+            == {r.rid: r.generated for r in base.finished})
+    led = faulted.ledger()
+    assert led["accounted"] and led["replays"] > 0
+    assert faulted.dp == 1 and faulted.batch == 2
+    # the tick clock spans the fault: latency accounting never reset
+    assert faulted.tick > base.tick
+    replayed = [r for r in faulted.finished if r.replays]
+    assert replayed and all(("replay", 4) in r.events for r in replayed)
+
+
+def test_rebuild_world_resets_allocators_without_leak():
+    b = ContinuousBatcher(dp=2, slots_local=2, nb_local=9, block_size=4,
+                          max_blocks=4, chunk=4)
+    for i in range(4):
+        b.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=6))
+    b.commit(b.plan_step(), np.zeros(b.batch, np.int64))
+    assert any(a.free_blocks < 8 for a in b.allocators)
+    b.rebuild_world(dp=2)
+    assert all(a.free_blocks == 8 for a in b.allocators)   # full pools
+    _drive(b)
+    assert len(b.finished) == 4
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan CLI spec
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse():
+    plan = FaultPlan.parse("preempt@20x4,grow@40x4,crash@60")
+    kinds = [(e.kind, e.at_step, e.devices) for e in plan.events]
+    assert kinds == [("preempt", 20, 4), ("grow", 40, 4), ("crash", 60, 0)]
+    assert not plan.events[0].notice     # bare preempt is the abrupt kill
+    assert FaultPlan.parse("notice@5x2").events[0].notice
+    ev = FaultPlan.parse("slow@3x2.5").events[0]
+    assert ev.kind == "slow" and ev.factor == 2.5 and not ev.evict
+    assert FaultPlan.parse("evict@3").events[0].evict
+    assert FaultPlan.parse("").events == []
+
+
+def test_fault_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("meteor@5")
+    with pytest.raises(ValueError, match="kind@tick"):
+        FaultPlan.parse("preempt-5")
+
+
+def test_crash_event_fires_once():
+    plan = FaultPlan.parse("crash@2")
+    plan(1)
+    with pytest.raises(EngineCrashError):
+        plan(2)
+    plan(2)                              # one-shot: replay does not re-raise
+    assert plan.log and plan.log[0]["kind"] == "crash"
+
+
+# ---------------------------------------------------------------------------
+# chaos properties (subprocess harness, 8 virtual devices)
+# ---------------------------------------------------------------------------
+
+CHAOS_CHECKS = ("preempt_replay_bitwise", "grow_back_readmission",
+                "straggler_evict", "crash_retry", "shed_under_burst")
+
+
+@pytest.mark.parametrize("name", CHAOS_CHECKS)
+def test_serve_chaos_harness(serve_chaos_results, name):
+    assert serve_chaos_results[name]["ok"], serve_chaos_results[name]
+
+
+def test_chaos_replay_is_bitwise_everywhere(serve_chaos_results):
+    summary = serve_chaos_results["summary"]
+    assert all(summary["replay_bitwise"].values()), summary
+    burst = summary["shed_under_burst"]
+    assert burst["accounted"] and burst["shed"] > 0 and burst["completed"] > 0
+    assert burst["ladder_engaged"]
