@@ -6,10 +6,10 @@ Run standalone (benchmarks/run.py invokes it as a subprocess so the main
 benchmark process keeps its single CPU device):
 
   PYTHONPATH=src python benchmarks/comm_bench.py [--smoke] [--steps N]
+      [--warmup N] [--check]
 
-``--smoke`` runs the CI-sized variant (fewer timing steps, same coverage)
-— the ci.yml ``bench`` step regression-checks the exposed-hop-2 ledger on
-every PR.  Prints one JSON object (saved as BENCH_comm.json by run.py):
+``--smoke`` runs the CI-sized variant (fewer timing steps, same coverage).
+Prints one JSON object (saved as BENCH_comm.json by run.py):
 
 * per-schedule wall time per training step, the HLO-census
   gathered-bytes/collective counts, the carried-gather prefetch evidence,
@@ -32,14 +32,19 @@ every PR.  Prints one JSON object (saved as BENCH_comm.json by run.py):
   measured wall times, the bucket-granular hop-2 census, and an
   ``overlap`` roll-up of measured step time vs the link model's predicted
   exposed-hop-2 time per cell and profile;
-* the autotuner's full ranked table per profile (``autotune_rankings``) —
-  which ranks ``hop2_bucket_mb``, ``clip_mode`` and the host-offloaded
-  carry as candidate axes.
+* a ``cells`` section in the shared perf-matrix schema
+  (repro.bench.measure): every timed cell carries its declarative config
+  + config hash, the timing samples with median/MAD/IQR variance, and
+  its local contract verdict;
+* the autotuner's full ranked table per profile (``autotune_rankings``).
 
-The ``--check`` gate additionally fails if any non-serial boundary cell's
-measured step time regresses more than ``REGRESSION_FACTOR`` over the
-same-run serial reference (CPU io_callback overhead gets its own
-documented allowance on the offload cell).
+This script is the ``comm`` suite of the declarative perf matrix
+(``benchmarks/matrix.py``); ``--check`` is a thin shim that applies
+exactly the gates ``repro.bench.matrixdef`` declares for this suite —
+bitwise/census/rtol contracts per cell, and the variance-aware step-time
+regression gates of the non-serial boundary cells against the same-run
+serial reference (the host-offload cell gets a wider threshold for its
+documented CPU io_callback overhead).
 """
 
 import os
@@ -51,12 +56,15 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse
 import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import measure as MS
+from repro.bench.matrixdef import COMM_BOUNDARY_CELLS, COMM_POLICY_LABELS
 from repro.configs import get_config, smoke_variant
 from repro.core.autotune import (
     compare_census, cost_candidate, cost_hop2_schedule, predict_traffic,
@@ -77,16 +85,9 @@ from repro.optim.adamw import OptConfig
 from repro.roofline.hlo_stats import analyze
 
 STEPS = 8
+WARMUP = 1  # timed loops discard this many post-compile steps
 MICRO = 2
 BOUNDARY_BUCKET_MB = 0.05  # small enough to split the smoke model's pools
-
-# --check step-time gate: each non-serial boundary cell's fastest timed step
-# vs the same-run serial reference (the min over steps is the noise-robust
-# statistic on a shared CI host).  The offload cell gets a wider allowance:
-# on the CPU backend every d2h/h2d stream is a synchronous Python
-# io_callback round-trip, an overhead a real DMA engine does not pay.
-REGRESSION_FACTOR = 1.2
-OFFLOAD_REGRESSION_FACTOR = 3.0
 
 PROFILES = ("v5e", "efa-100g")
 # (label, MiCSConfig fields) — >= 3 policies for the predicted-vs-measured
@@ -95,36 +96,54 @@ PROFILES = ("v5e", "efa-100g")
 # step runs.  The qgZ rows ship the int8 hop-1 gradient wire (ISSUE 4);
 # the +host row streams the prefetch carry over the host tier, giving
 # tools/fit_profile.py a ``tier='host'`` stage to constrain (α, β) from.
-POLICIES = (
-    ("flat@bf16", dict(hierarchical=False)),
-    ("inner_first@bf16", dict()),
-    ("outer_first@bf16", dict(gather_order="outer_first")),
-    ("inner_first@int8", dict(quant_gather=True)),
-    ("inner_first@bf16+qgZ", dict(hop1_wire_dtype="int8")),
-    ("inner_first@int8+qgZ", dict(quant_gather=True,
-                                  hop1_wire_dtype="int8")),
-    ("inner_first@bf16+host", dict(prefetch=True, carry_offload="host")),
+# Labels are pinned by repro.bench.matrixdef.COMM_POLICY_LABELS — the
+# declared matrix cells — so coverage drift fails the matrix loudly.
+POLICIES = tuple(zip(COMM_POLICY_LABELS, (
+    dict(hierarchical=False),
+    dict(),
+    dict(gather_order="outer_first"),
+    dict(quant_gather=True),
+    dict(hop1_wire_dtype="int8"),
+    dict(quant_gather=True, hop1_wire_dtype="int8"),
+    dict(prefetch=True, carry_offload="host"),
     # second host row at a different bytes-per-event ratio (fp32 carry is
     # 2x the bytes of bf16 at the same event count) — separates the host
     # α from its β in the fit
-    ("inner_first@fp32+host", dict(prefetch=True, gather_dtype="float32",
-                                   carry_offload="host")),
-)
+    dict(prefetch=True, gather_dtype="float32", carry_offload="host"),
+)))
 
 # Boundary cells (replicated mesh): the bitwise-exact schedules, the
 # approximate-clip pipeline, and the host-offloaded cell (carry + AdamW
 # moments streamed through the host stash; numerics still bitwise-exact).
-BOUNDARY_CELLS = (
-    ("serial", dict(boundary_schedule="serial")),
-    ("bucketed", dict(boundary_schedule="bucketed")),
-    ("bucketed_approx", dict(boundary_schedule="bucketed",
-                             clip_mode="approx")),
-    ("bucketed_offload", dict(boundary_schedule="bucketed",
-                              carry_offload="host", offload_opt=True)),
-)
+# Cell labels pinned by matrixdef.COMM_BOUNDARY_CELLS, thresholds by
+# matrixdef.COMM_BOUNDARY_THRESHOLDS.
+BOUNDARY_CELLS = tuple(zip(COMM_BOUNDARY_CELLS, (
+    dict(boundary_schedule="serial"),
+    dict(boundary_schedule="bucketed"),
+    dict(boundary_schedule="bucketed", clip_mode="approx"),
+    dict(boundary_schedule="bucketed", carry_offload="host",
+         offload_opt=True),
+)))
 
 
-def run(steps: int = STEPS) -> dict:
+def _timed_steps(step, state, batch, steps, warmup):
+    """Run ``warmup + steps`` training steps; per-step wall times (each
+    blocked on the loss, so the samples are honest) + the timed-loop loss
+    trajectory."""
+    m = None
+    for _ in range(warmup):
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+    samples, traj = [], []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        state, m = step(state, batch)
+        traj.append((float(m["loss"]), float(m["grad_norm"])))
+        samples.append(time.perf_counter() - t0)
+    return state, MS.TimingStats(tuple(samples), warmup=warmup), traj
+
+
+def run(steps: int = STEPS, warmup: int = WARMUP) -> dict:
     cfg = smoke_variant(get_config("llama3.2-1b"))
     mesh = make_host_mesh(1, 1, 4, 2)  # p=4 partition group, tp=2
     topo = MiCSTopology(mesh)
@@ -141,8 +160,14 @@ def run(steps: int = STEPS) -> dict:
         "mask": jnp.ones((MICRO, b, t), jnp.float32),
     }
 
+    def cell_config(section, label, **extra):
+        return dict(suite="comm", section=section, cell=label,
+                    mesh=mesh_shape, model=cfg.name, micro_steps=MICRO,
+                    batch=[b, t], steps=steps, warmup=warmup, **extra)
+
+    cells = {}
     out = {"mesh": mesh_shape, "partition_size": topo.partition_size,
-           "steps": steps, "micro_steps": MICRO}
+           "steps": steps, "warmup": warmup, "micro_steps": MICRO}
     for label, prefetch in (("serial", False), ("prefetch", True)):
         mcfg = MiCSConfig(micro_steps=MICRO, prefetch=prefetch)
         step = build_train_step(model, topo, mcfg,
@@ -159,40 +184,46 @@ def run(steps: int = STEPS) -> dict:
                          if k.startswith("param_gather")}
 
         state = init_state(model, topo, seed=11)
-        state, m = step(state, batch)  # compile + warm
-        jax.block_until_ready(m["loss"])
-        losses = []
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            state, m = step(state, batch)
-            losses.append(float(m["loss"]))
-        dt = (time.perf_counter() - t0) / steps
-
+        _state, timing, traj = _timed_steps(step, state, batch, steps,
+                                            warmup)
         out[label] = {
-            "us_per_step": round(dt * 1e6, 1),
+            "us_per_step": round(timing.median_s * 1e6, 1),
             "gathered_wire_bytes": sum(
                 v["wire_bytes"] for v in gather_stages.values()),
             "param_gather_count": sum(
                 v["count"] for v in gather_stages.values()),
             "carried_all_gathers": stats["prefetch"]["carried_all_gathers"],
             "total_wire_bytes": stats["total_wire_bytes"],
-            "losses": losses,
+            "losses": [loss for loss, _gn in traj],
         }
+        cells[f"comm/gather/{label}"] = MS.timing_cell(
+            cell_config("gather", label, schedule=label), timing,
+            metrics={
+                "gathered_wire_bytes": out[label]["gathered_wire_bytes"],
+                "total_wire_bytes": out[label]["total_wire_bytes"],
+                "carried_all_gathers": out[label]["carried_all_gathers"],
+            })
     out["loss_bitwise_equal"] = out["serial"]["losses"] \
         == out["prefetch"]["losses"]
+    cells["comm/gather/prefetch"]["ok"] = out["loss_bitwise_equal"]
+    if not out["loss_bitwise_equal"]:
+        cells["comm/gather/prefetch"]["detail"] = "prefetch changed the loss"
     out["speedup"] = round(
         out["serial"]["us_per_step"] / out["prefetch"]["us_per_step"], 3)
-    out["policies"] = policy_ledger(model, topo, mesh_shape, batch, steps)
-    out["boundary"] = boundary_bench(cfg, steps)
+    out["policies"] = policy_ledger(model, topo, mesh_shape, batch, steps,
+                                    warmup, cells, cell_config)
+    out["boundary"] = boundary_bench(cfg, steps, warmup, cells)
     out["autotune_rankings"] = {
         name: rank_policies(model, topo, name, micro_steps=MICRO,
                             prefetch=True).describe()
         for name in PROFILES
     }
+    out["cells"] = cells
     return out
 
 
-def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
+def policy_ledger(model, topo, mesh_shape, batch, steps, warmup, cells,
+                  cell_config) -> dict:
     """Predicted-vs-measured per gather policy, on two link profiles.
 
     Measured: per-stage census wire bytes of the compiled (serial) train
@@ -222,23 +253,20 @@ def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
             partition_axes=topo.partition_axes,
             replication_axes=topo.replication_axes)
         state = init_state(model, topo, seed=11)
-        state, m = step(state, batch)  # compile cache warm + donation
-        jax.block_until_ready(m["loss"])
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            state, m = step(state, batch)
-        jax.block_until_ready(m["loss"])
-        t_measured = (time.perf_counter() - t0) / steps
+        _state, timing, _traj = _timed_steps(step, state, batch, steps,
+                                             warmup)
+        t_measured = timing.median_s
         gp, sp = engine.gather_policy, engine.sync_policy
         predicted = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
                                     upcast_float_collectives=True)
         cmp = compare_census(predicted["by_stage"], stats["by_stage"])
         wire_pred = predict_traffic(model, topo, gp, sp, micro_steps=MICRO,
                                     profile=get_profile("v5e"))
+        byte_match = all(
+            abs(row["ratio"] - 1.0) <= 0.02 for row in cmp.values())
         entry = {
             "predicted_vs_measured": cmp,
-            "byte_match": all(
-                abs(row["ratio"] - 1.0) <= 0.02 for row in cmp.values()),
+            "byte_match": byte_match,
             "measured_total_wire_bytes": stats["total_wire_bytes"],
             "measured_us_per_step": round(t_measured * 1e6, 1),
             "modeled_t_comm_us": {},
@@ -283,10 +311,21 @@ def policy_ledger(model, topo, mesh_shape, batch, steps) -> dict:
                                   micro_steps=MICRO)
             entry["modeled_t_comm_us"][name] = round(cand.t_comm_s * 1e6, 2)
         ledger[label] = entry
+        worst = max(abs(row["ratio"] - 1.0) for row in cmp.values()) \
+            if cmp else 0.0
+        cells[f"comm/policy/{label}"] = MS.timing_cell(
+            cell_config("policy", label, policy=mcfg_kw), timing,
+            metrics={
+                "measured_total_wire_bytes": stats["total_wire_bytes"],
+                "pvm_worst_abs_ratio_err": worst,
+                "modeled_t_comm_us": entry["modeled_t_comm_us"],
+            },
+            ok=byte_match,
+            detail=None if byte_match else "census byte mismatch")
     return ledger
 
 
-def boundary_bench(cfg, steps) -> dict:
+def boundary_bench(cfg, steps, warmup, cells) -> dict:
     """The ``BOUNDARY_CELLS`` grid on a replicated mesh (repl=2, p=2, tp=2
     — hop 2 is live).  serial / bucketed / bucketed_offload must produce
     bitwise equal loss/grad-norm trajectories (the offload cell merely
@@ -294,10 +333,11 @@ def boundary_bench(cfg, steps) -> dict:
     bucketed_approx pipelines AdamW under hop-2 with a one-bucket-stale
     clip factor, so its trajectory may drift — bounded by
     ``APPROX_CLIP_LOSS_RTOL`` on the final loss.  The ledger records
-    per-cell wall times (mean and min over the timed steps), the
+    per-cell timing stats (median + MAD over the timed steps), the
     bucket-granular hop-2 census, and an ``overlap`` roll-up against the
-    link model's exposed-hop-2 prediction per profile (what a real cluster
-    would regression-check)."""
+    link model's exposed-hop-2 prediction per profile; the step-time
+    regression gates themselves live in the matrix (variance-aware, vs
+    the same-run serial reference)."""
     mesh = make_host_mesh(1, 2, 2, 2)
     topo = MiCSTopology(mesh)
     model = build_model(cfg, tp=2)
@@ -315,6 +355,12 @@ def boundary_bench(cfg, steps) -> dict:
                           bucket_mb=BOUNDARY_BUCKET_MB)
     out = {"mesh": mesh_shape, "bucket_mb": BOUNDARY_BUCKET_MB,
            "n_buckets": bplan.n_buckets, "steps": steps}
+
+    def cell_config(section, label, **extra):
+        return dict(suite="comm", section=section, cell=label,
+                    mesh=mesh_shape, model=cfg.name, micro_steps=MICRO,
+                    batch=[b, t], steps=steps, warmup=warmup, **extra)
+    timings = {}
     for label, cell_kw in BOUNDARY_CELLS:
         mcfg = MiCSConfig(micro_steps=MICRO,
                           hop2_bucket_mb=BOUNDARY_BUCKET_MB, **cell_kw)
@@ -331,19 +377,12 @@ def boundary_bench(cfg, steps) -> dict:
             replication_axes=topo.replication_axes)
         state = init_state(model, topo, seed=13,
                            offload_opt=mcfg.offload_opt)
-        state, m = step(state, batch)
-        jax.block_until_ready(m["loss"])
-        traj = []
-        times = []
-        for _ in range(steps):
-            t0 = time.perf_counter()
-            state, m = step(state, batch)
-            # float() blocks on the step, so per-step times are honest
-            traj.append((float(m["loss"]), float(m["grad_norm"])))
-            times.append(time.perf_counter() - t0)
+        _state, timing, traj = _timed_steps(step, state, batch, steps,
+                                            warmup)
+        timings[label] = timing
         out[label] = {
-            "us_per_step": round(sum(times) / len(times) * 1e6, 1),
-            "us_per_step_min": round(min(times) * 1e6, 1),
+            "us_per_step": round(timing.median_s * 1e6, 1),
+            "us_per_step_min": round(timing.min_s * 1e6, 1),
             "trajectory": traj,
             "census_boundary": stats["boundary"],
         }
@@ -396,52 +435,85 @@ def boundary_bench(cfg, steps) -> dict:
         }
         for label, _ in BOUNDARY_CELLS
     }
+
+    # per-cell contract verdicts (the matrix's contract gates read these)
+    def census_ok(label):
+        census = out[label]["census_boundary"]
+        return census["interleaved"] and census["hop2_ops"] == out["n_buckets"]
+
+    verdicts = {
+        "serial": (True, None),
+        "bucketed": (
+            out["trajectory_bitwise_equal"] and census_ok("bucketed"),
+            "bucketed boundary changed numerics or census off-granular"),
+        "bucketed_approx": (
+            census_ok("bucketed_approx")
+            and all(np.isfinite(v)
+                    for pair in out["bucketed_approx"]["trajectory"]
+                    for v in pair)
+            and out["approx_final_loss_rtol"] <= APPROX_CLIP_LOSS_RTOL,
+            f"approx clip diverged "
+            f"(rtol={out['approx_final_loss_rtol']:.4f})"),
+        "bucketed_offload": (
+            out["offload_bitwise_equal"] and census_ok("bucketed_offload"),
+            "host offload changed numerics or census off-granular"),
+    }
+    for label, _ in BOUNDARY_CELLS:
+        ok, why = verdicts[label]
+        cells[f"comm/boundary/{label}"] = MS.timing_cell(
+            cell_config("boundary", label, schedule=label,
+                        bucket_mb=BOUNDARY_BUCKET_MB,
+                        n_buckets=out["n_buckets"]),
+            timings[label],
+            metrics={
+                "hop2_ops": out[label]["census_boundary"]["hop2_ops"],
+                "predicted_exposed_hop2_us":
+                    out["overlap"][label]["predicted_exposed_hop2_us"],
+            },
+            ok=ok, detail=None if ok else why)
+
+    # serial keeps a coarse hop-2 (strictly fewer ops than the bucket
+    # plan) and the model's exposed-time ordering holds per profile
+    pred_ok = out["serial"]["census_boundary"]["hop2_ops"] < out["n_buckets"]
+    for name, pred in out["predicted"].items():
+        pred_ok &= pred["serial"]["t_exposed_s"] == pred["serial"]["t_total_s"]
+        pred_ok &= pred["bucketed"]["t_exposed_s"] \
+            <= pred["bucketed"]["t_total_s"]
+        pred_ok &= pred["bucketed_approx"]["t_exposed_s"] \
+            <= pred["bucketed"]["t_exposed_s"] + 1e-12
+    cells["comm/contract/predicted_exposed"] = MS.contract_cell(
+        cell_config("contract", "predicted_exposed"), pred_ok,
+        detail=None if pred_ok else "exposed-hop2 prediction ordering broke")
     return out
 
 
-def check_ledger(out: dict) -> None:
-    """The CI regression gate (ci.yml ``bench`` job): schedules must not
-    change numerics, the census must match the analytical model, and the
-    exposed-hop-2 / fit ledgers must be present and well-formed."""
-    assert out["loss_bitwise_equal"], "prefetch changed the loss"
-    b = out["boundary"]
-    assert b["trajectory_bitwise_equal"], \
-        "bucketed boundary changed the numerics"
-    assert b["offload_bitwise_equal"], \
-        "host offload changed the numerics"
-    for label in ("bucketed", "bucketed_approx", "bucketed_offload"):
-        census = b[label]["census_boundary"]
-        assert census["interleaved"], label
-        assert census["hop2_ops"] == b["n_buckets"], label
-    assert b["serial"]["census_boundary"]["hop2_ops"] < b["n_buckets"]
-    assert all(np.isfinite(v) for pair in b["bucketed_approx"]["trajectory"]
-               for v in pair), "approx clip diverged"
-    assert b["approx_final_loss_rtol"] <= APPROX_CLIP_LOSS_RTOL, \
-        b["approx_final_loss_rtol"]
-    for name, pred in b["predicted"].items():
-        assert pred["serial"]["t_exposed_s"] == pred["serial"]["t_total_s"]
-        assert pred["bucketed"]["t_exposed_s"] \
-            <= pred["bucketed"]["t_total_s"], name
-        assert pred["bucketed_approx"]["t_exposed_s"] \
-            <= pred["bucketed"]["t_exposed_s"] + 1e-12, name
-    # Step-time regression gate: non-serial cells vs the same-run serial
-    # reference (min over timed steps; offload pays documented CPU
-    # io_callback overhead, hence its wider factor).
-    ref_us = b["serial"]["us_per_step_min"]
-    for label, _ in BOUNDARY_CELLS[1:]:
-        factor = (OFFLOAD_REGRESSION_FACTOR if "offload" in label
-                  else REGRESSION_FACTOR)
-        assert b[label]["us_per_step_min"] <= factor * ref_us, (
-            label, b[label]["us_per_step_min"], ref_us, factor)
-    for label, entry in out["policies"].items():
-        assert entry["byte_match"], (label, "census mismatch")
-        assert entry["fit_inputs"]["t_measured_s"] > 0, label
-        assert entry["fit_inputs"]["stages"], label
-    assert any(
+def finish_cells(out: dict) -> None:
+    """Post-run contract cells that span sections."""
+    host_ok = any(
         s["tier"] == "host"
         for entry in out["policies"].values()
-        for s in entry["fit_inputs"]["stages"].values()), \
-        "no host-tier fit stage — tools/fit_profile.py host fit unexercised"
+        for s in entry["fit_inputs"]["stages"].values())
+    fit_ok = host_ok and all(
+        entry["fit_inputs"]["t_measured_s"] > 0
+        and entry["fit_inputs"]["stages"]
+        for entry in out["policies"].values())
+    out["cells"]["comm/contract/host_fit_stage"] = MS.contract_cell(
+        dict(suite="comm", section="contract", cell="host_fit_stage"),
+        fit_ok,
+        detail=None if fit_ok else
+        "no host-tier fit stage — tools/fit_profile.py host fit unexercised")
+
+
+def check_ledger(out: dict, smoke: bool) -> None:
+    """The standalone gate shim: apply exactly the matrix's declared gates
+    for the ``comm`` suite (contract + variance-aware step-time ratios)."""
+    from repro.bench.runner import check_suite
+
+    failures = check_suite("comm", out, smoke=smoke)
+    if failures:
+        print("comm bench gate FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":
@@ -449,13 +521,16 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: fewer timing steps, same coverage")
     ap.add_argument("--steps", type=int, default=0,
-                    help="timing steps per schedule (default 8, smoke 2)")
+                    help="timing steps per schedule (default 8, smoke 5)")
+    ap.add_argument("--warmup", type=int, default=WARMUP,
+                    help="post-compile steps discarded before timing")
     ap.add_argument("--check", action="store_true",
-                    help="assert the ledger invariants (the CI gate) after "
+                    help="apply the matrix's comm-suite gates after "
                          "printing the JSON")
     args = ap.parse_args()
-    steps = args.steps or (2 if args.smoke else STEPS)
-    out = run(steps)
+    steps = args.steps or (5 if args.smoke else STEPS)
+    out = run(steps, args.warmup)
+    finish_cells(out)
     print(json.dumps(out, indent=1))
     if args.check:
-        check_ledger(out)
+        check_ledger(out, args.smoke)

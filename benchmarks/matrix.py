@@ -1,0 +1,27 @@
+"""Declarative perf-matrix runner — the repo's single CI bench gate.
+
+  PYTHONPATH=src python benchmarks/matrix.py [--smoke] [--check]
+      [--suites comm,serve,...] [--out BENCH_matrix.json] [--list]
+
+Runs every bench suite (comm, serve, memplan, elastic, chaos, figures) as
+declared in ``repro.bench.matrixdef``, measures each cell through the
+shared core (warmup discard, N repeats, median + MAD/IQR), applies the
+variance-aware regression gates (a cell fails only when it exceeds both
+the threshold and the measured noise band — vs its in-run reference cell
+and, when curated, the checked-in ``benchmarks/baselines.json``), and
+emits ONE trajectory-friendly ``BENCH_matrix.json`` with per-cell
+provenance: config hash, timing samples, variance, gate verdicts,
+predicted-vs-measured ratios.
+
+``--check`` exits nonzero on any enforced gate failure; the report is
+still written first, so CI's ``if: always()`` artifact upload keeps the
+ledger.  See docs/benchmarks.md for the config schema and the baseline
+refresh recipe (tools/update_baseline.py).
+"""
+
+import sys
+
+from repro.bench.runner import main
+
+if __name__ == "__main__":
+    sys.exit(main())

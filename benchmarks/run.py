@@ -492,6 +492,71 @@ BENCHES = [
     bench_kernel_walltime,
 ]
 
+# figure-cell name -> (bench fn, RESULTS key) for the perf matrix's
+# ``figures`` suite.  These are the model-derived paper numbers: cheap,
+# deterministic, and gated on EXACT value-hash reproducibility against
+# benchmarks/baselines.json — never on timing.  fig15/fig16 actually train
+# on CPU, so their floats are jax-version dependent: contract-gated only
+# (their internal asserts), full runs only.
+FIGURE_BENCHES = {
+    "fig2": (bench_fig2_effective_bandwidth, "fig2"),
+    "fig7_8": (bench_fig7_8_scaling, "fig7_8"),
+    "fig9": (bench_fig9_tflops, "fig9"),
+    "fig10": (bench_fig10_400g, "fig10"),
+    "case_study_100b": (bench_case_study_100b, "case_study_100b"),
+    "fig11": (bench_fig11_megatron, "fig11"),
+    "fig12": (bench_fig12_partition_group, "fig12_model"),
+    "fig13": (bench_fig13_hierarchical, "fig13_time_ratio"),
+    "fig14": (bench_fig14_two_hop, "fig14"),
+    "table1": (bench_table1_model_zoo, "table1"),
+}
+FIGURE_BENCHES_FULL = {
+    "fig15": (bench_fig15_impl_opts, "fig15"),
+    "fig16": (bench_fig16_fidelity, "fig16"),
+}
+
+
+def matrix_cells_main(full: bool) -> None:
+    """``--matrix-cells``: run just the figure benches and print their
+    matrix cell records as pure JSON (the ``figures`` suite of
+    ``benchmarks/matrix.py``).  The CSV ``emit`` chatter is redirected to
+    stderr so stdout stays machine-parseable.  Coverage is pinned to
+    ``repro.bench.matrixdef.FIGURE_CELLS`` — a bench this mapping loses
+    becomes a loud cell-missing matrix failure."""
+    import contextlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+    from repro.bench import matrixdef as MD
+    from repro.bench import measure as MS
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    items = {name: FIGURE_BENCHES[name] for name in MD.FIGURE_CELLS}
+    if full:
+        items.update({name: FIGURE_BENCHES_FULL[name]
+                      for name in MD.FIGURE_CELLS_FULL})
+    cells = {}
+    with contextlib.redirect_stdout(sys.stderr):
+        for name, (bench, key) in items.items():
+            config = dict(suite="figures", cell=name, result_key=key)
+            err = None
+            try:
+                bench()
+            except Exception as e:  # noqa: BLE001
+                err = f"{type(e).__name__}: {e}"
+            value = RESULTS.get(key)
+            ok = err is None and value is not None
+            detail = err or (None if ok
+                             else f"result key {key!r} missing")
+            if name in FIGURE_BENCHES_FULL:
+                cells[f"figures/{name}"] = MS.contract_cell(
+                    config, ok, detail=detail)
+            else:
+                cells[f"figures/{name}"] = MS.exact_cell(
+                    config, MS.result_hash(value) if ok else "",
+                    ok=ok, detail=detail)
+    print(json.dumps({"cells": cells}, indent=1, default=str))
+
 
 def main() -> None:
     import sys
@@ -511,4 +576,9 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    if "--matrix-cells" in sys.argv:
+        matrix_cells_main(full="--full" in sys.argv)
+    else:
+        main()

@@ -53,14 +53,20 @@ shed/evict/replay counters).
 
   PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--check]
 
-``--check`` (the ci.yml bench gate) fails on any paged-vs-contiguous
-mismatch, when the interleaved per-row decode overhead exceeds
-``STEP_REGRESSION_FACTOR``, or when the overload cell breaks the
-shed/ladder/ledger contract; the full run must additionally show paged
-normalized tokens/s beating the baseline in the saturation cell
-(``rate=inf`` — every request offered at tick 0, the highest swept
-arrival rate).  Output JSON is saved as BENCH_serve.json
-(BENCH_serve_smoke.json in CI).
+This script is the ``serve`` suite of the declarative perf matrix
+(``benchmarks/matrix.py``); its ``cells`` section carries the standard
+per-cell records (repro.bench.measure) — the four interleaved step kinds
+as timing cells (the paged/fixed decode comparison is per-ROW,
+``normalize_by="rows"``, because the paged step pushes 1.5x the rows),
+the bitwise equivalence and every sweep/overload cell as contract cells.
+``--check`` is a thin shim applying exactly the gates
+``repro.bench.matrixdef`` declares for this suite: it fails on any
+paged-vs-contiguous mismatch, when the per-row decode overhead regresses
+significantly (variance-aware, vs the same-run fixed reference), or when
+the overload cell breaks the shed/ladder/ledger contract; the full run
+must additionally show paged normalized tokens/s beating the baseline in
+the saturation cell (``rate=inf`` — every request offered at tick 0).
+Output JSON is saved as BENCH_serve.json (BENCH_serve_smoke.json in CI).
 """
 
 import os
@@ -72,12 +78,17 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse
 import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import measure as MS
+from repro.bench.matrixdef import (
+    SERVE_RATES_FULL, SERVE_RATES_SMOKE, SERVE_STEP_KINDS,
+)
 from repro.configs import get_config, smoke_variant
 from repro.core.autotune import cost_decode_step
 from repro.core.comm import policies_from_config
@@ -100,12 +111,13 @@ SLOTS_LOCAL = 6                        # paged slots per rank (1.5x the rows:
 CHUNK = 8                              # prefill tokens per tick (>= max plen)
 # equal KV budget: usable pool slots/rank == the fixed cache's token slots
 NB_LOCAL = FIXED_ROWS_LOCAL * CAP // BLOCK_SIZE + 1  # +1: garbage block 0
-# offered requests per tick; inf = the saturation cell (all at tick 0)
-RATES = (0.25, 0.5, 1.0, 2.0, float("inf"))
-SMOKE_RATES = (0.5, float("inf"))
+# offered requests per tick; inf = the saturation cell (all at tick 0).
+# Labels pinned by repro.bench.matrixdef.SERVE_RATES_* — the declared
+# matrix cells — so coverage drift fails the matrix loudly.
+RATES = tuple(float(r) for r in SERVE_RATES_FULL)
+SMOKE_RATES = tuple(float(r) for r in SERVE_RATES_SMOKE)
 N_REQUESTS = 32
 SMOKE_REQUESTS = 10
-STEP_REGRESSION_FACTOR = 1.2
 PROFILE = "v5e"
 
 
@@ -291,7 +303,8 @@ def run_fixed(model, topo, mcfg, prefill_fn, decode_fn, reqs, arrival_s,
 
 
 def step_overhead(model, topo, mcfg, step_chunk, step_one, prefill_fn,
-                  decode_fn, params, max_plen: int, reps: int = 20) -> dict:
+                  decode_fn, params, max_plen: int, reps: int = 20,
+                  warmup: int = 2):
     """Interleaved timing of every step kind both engines issue.
 
     All four step kinds run back-to-back inside each rep, so JIT/allocator
@@ -299,7 +312,10 @@ def step_overhead(model, topo, mcfg, step_chunk, step_one, prefill_fn,
     per-step prices the normalized throughput gate uses.  The regression
     gate is the per-ROW decode ratio: the paged step pushes
     ``SLOTS_LOCAL/FIXED_ROWS_LOCAL`` times the rows per call, so raw step
-    times are not directly comparable.
+    times are not directly comparable (``normalize_by="rows"`` in the
+    matrix gate).  Returns ``(summary, timings)`` where ``timings`` maps
+    each step kind to its :class:`repro.bench.measure.TimingStats` (the
+    matrix's ``serve/step/*`` cells).
     """
     dp = topo.data_parallel_size
     Bp, Bf = dp * SLOTS_LOCAL, dp * FIXED_ROWS_LOCAL
@@ -319,9 +335,8 @@ def step_overhead(model, topo, mcfg, step_chunk, step_one, prefill_fn,
     zf_i = jnp.zeros(Bf, jnp.int32)
     zf_f = jnp.zeros(Bf, jnp.float32)
     mask = jnp.ones(Bf, bool)
-    acc = {"paged_decode": [], "paged_chunk": [],
-           "fixed_decode": [], "fixed_prefill": []}
-    for i in range(reps + 2):
+    acc = {kind: [] for kind in SERVE_STEP_KINDS}
+    for i in range(reps + warmup):
         t0 = time.perf_counter()
         t, _lg, pool = step_one(params, pool, tok1, zp_i, one_p, tabs,
                                 zp_i, zp_f)
@@ -341,17 +356,20 @@ def step_overhead(model, topo, mcfg, step_chunk, step_one, prefill_fn,
         lg, _caches = prefill_fn(params, pref_batch)
         jax.block_until_ready(lg)
         d_fp = time.perf_counter() - t0
-        if i >= 2:  # first interleaved rounds pay the compiles
+        if i >= warmup:  # first interleaved rounds pay the compiles
             acc["paged_decode"].append(d_pd)
             acc["paged_chunk"].append(d_pc)
             acc["fixed_decode"].append(d_fd)
             acc["fixed_prefill"].append(d_fp)
+    timings = {k: MS.TimingStats(tuple(v), warmup=warmup)
+               for k, v in acc.items()}
     out = {k + "_s": float(np.mean(v)) for k, v in acc.items()}
-    out.update(paged_rows=Bp, fixed_rows=Bf, reps=reps)
+    out.update(paged_rows=Bp, fixed_rows=Bf, reps=reps, warmup=warmup,
+               timing={k: t.to_dict() for k, t in timings.items()})
     out["per_row_ratio"] = ((out["paged_decode_s"] / Bp)
                             / (out["fixed_decode_s"] / Bf)
                             if out["fixed_decode_s"] else float("inf"))
-    return out
+    return out, timings
 
 
 def normalized_throughput(cont: dict, fixed: dict, so: dict) -> dict:
@@ -505,6 +523,9 @@ def run(smoke: bool) -> dict:
 
     gp, _sp = policies_from_config(mcfg)
     profile = get_profile(PROFILE)
+    eq = bitwise_equivalence(model, topo, params)
+    so, so_timings = step_overhead(model, topo, mcfg, step_chunk, step_one,
+                                   prefill_fn, decode_fn, params, max_plen)
     out = {"mesh": {"data": topo.data_parallel_size,
                     "model": topo.model_size},
            "block_size": BLOCK_SIZE, "max_blocks": MAX_BLOCKS,
@@ -514,11 +535,9 @@ def run(smoke: bool) -> dict:
                "paged": (NB_LOCAL - 1) * BLOCK_SIZE,
                "fixed": FIXED_ROWS_LOCAL * CAP},
            "n_requests": n, "kv_dtype": mcfg.kv_dtype,
-           "equivalence": bitwise_equivalence(model, topo, params),
-           "step_overhead": step_overhead(model, topo, mcfg, step_chunk,
-                                          step_one, prefill_fn, decode_fn,
-                                          params, max_plen),
-           "cells": {}}
+           "equivalence": eq,
+           "step_overhead": so,
+           "sweep": {}}
     for rate in rates:
         arrival_ticks = [int(i / rate) for i in range(n)]
         reqs = make_trace(n, vocab, np.random.default_rng(42))  # fresh state
@@ -535,7 +554,7 @@ def run(smoke: bool) -> dict:
             model, topo, profile, gp,
             resident=SLOTS_LOCAL, ctx_len=CAP, kv_dtype=mcfg.kv_dtype,
             chunk=1)
-        out["cells"][str(rate)] = {
+        out["sweep"][str(rate)] = {
             "rate_req_per_tick": rate,
             "paged": cont,
             "fixed": fixed,
@@ -548,34 +567,85 @@ def run(smoke: bool) -> dict:
             "predicted_breakdown": pred,
             "measured_decode_step_s": cont["measured_decode_step_s_mean"],
         }
-    top = out["cells"][str(rates[-1])]   # the saturation cell
+    top = out["sweep"][str(rates[-1])]   # the saturation cell
     out["paged_beats_fixed_at_peak"] = top["normalized"]["ratio"] > 1.0
     out["overload"] = overload_cell(model, topo, mcfg,
                                     n=16 if smoke else 24)
+    out["cells"] = matrix_cells(out, cfg, mcfg, so_timings, rates, smoke)
     return out
 
 
-def check(out: dict, smoke: bool) -> None:
+def matrix_cells(out, cfg, mcfg, so_timings, rates, smoke) -> dict:
+    """The serve suite's standard per-cell records (repro.bench.measure):
+    the four interleaved step kinds as timing cells, the bitwise
+    equivalence + every sweep/overload cell as contract cells, each
+    carrying its verdict and the metrics the matrix gates read
+    (``rows`` for the per-row decode ratio, ``normalized_ratio`` for the
+    saturation throughput bound)."""
+    so = out["step_overhead"]
+    base = dict(suite="serve", mesh=out["mesh"], model=cfg.name,
+                block_size=BLOCK_SIZE, max_blocks=MAX_BLOCKS, chunk=CHUNK,
+                kv_dtype=mcfg.kv_dtype, n_requests=out["n_requests"],
+                smoke=smoke)
+    rows = {"paged_decode": so["paged_rows"], "paged_chunk": so["paged_rows"],
+            "fixed_decode": so["fixed_rows"],
+            "fixed_prefill": so["fixed_rows"]}
+    cells = {}
+    for kind in SERVE_STEP_KINDS:
+        cells[f"serve/step/{kind}"] = MS.timing_cell(
+            dict(base, section="step", cell=kind, reps=so["reps"],
+                 warmup=so["warmup"]),
+            so_timings[kind], metrics={"rows": rows[kind]})
     eq = out["equivalence"]
-    assert eq["tokens_bitwise"], "paged tokens diverge from contiguous"
-    assert eq["logits_bitwise"], "paged logits diverge from contiguous"
-    assert out["step_overhead"]["per_row_ratio"] <= STEP_REGRESSION_FACTOR, (
-        "paged decode step regressed vs fixed-batch baseline:",
-        out["step_overhead"])
-    for cell in out["cells"].values():
-        assert cell["paged"]["finished"] == out["n_requests"], cell
-        assert cell["predicted_decode_step_s"] > 0
-        assert cell["paged"]["ledger"]["accounted"], cell["paged"]["ledger"]
+    eq_ok = eq["tokens_bitwise"] and eq["logits_bitwise"]
+    cells["serve/equivalence"] = MS.contract_cell(
+        dict(base, section="equivalence", cell="bitwise",
+             eq_block_size=eq["block_size"], eq_kv_dtype=eq["kv_dtype"],
+             eq_steps=eq["steps"]),
+        eq_ok, detail=None if eq_ok else "paged diverged from contiguous")
+    for rate in rates:
+        cell = out["sweep"][str(rate)]
+        led = cell["paged"]["ledger"]
+        ok = (cell["paged"]["finished"] == out["n_requests"]
+              and cell["predicted_decode_step_s"] > 0
+              and bool(led["accounted"]))
+        cells[f"serve/rate/{rate}"] = MS.contract_cell(
+            dict(base, section="rate", cell=str(rate)),
+            ok,
+            metrics={
+                "normalized_ratio": cell["normalized"]["ratio"],
+                "tokens_per_s_ratio": cell["tokens_per_s_ratio"],
+                "predicted_decode_step_s": cell["predicted_decode_step_s"],
+                "measured_decode_step_s": cell["measured_decode_step_s"],
+            },
+            detail=None if ok else
+            "unfinished requests or unaccounted ledger")
     ov = out["overload"]
     led = ov["ledger"]
-    assert led["accounted"] and led["in_flight"] == 0, led
-    assert led["shed"] > 0 and led["completed"] > 0, led
-    assert sum(led["shed_by_reason"].values()) == led["shed"], led
-    assert ov["ladder_max_level"] >= 1, ov["ladder_transitions"]
-    assert ov["ladder_level"] == 0, ov["ladder_transitions"]
-    if not smoke:
-        assert out["paged_beats_fixed_at_peak"], (
-            "continuous batching lost to the static baseline at peak load")
+    ov_ok = (bool(led["accounted"]) and led["in_flight"] == 0
+             and led["shed"] > 0 and led["completed"] > 0
+             and sum(led["shed_by_reason"].values()) == led["shed"]
+             and ov["ladder_max_level"] >= 1 and ov["ladder_level"] == 0)
+    cells["serve/overload"] = MS.contract_cell(
+        dict(base, section="overload", cell="burst", offered=ov["offered"]),
+        ov_ok,
+        metrics={"shed": led["shed"], "completed": led["completed"],
+                 "ladder_max_level": ov["ladder_max_level"]},
+        detail=None if ov_ok else "shed/ladder/ledger contract broke")
+    return cells
+
+
+def check(out: dict, smoke: bool) -> None:
+    """The standalone gate shim: apply exactly the matrix's declared gates
+    for the ``serve`` suite (contracts + the variance-aware per-row decode
+    ratio; the saturation throughput bound only in full runs)."""
+    from repro.bench.runner import check_suite
+
+    failures = check_suite("serve", out, smoke=smoke)
+    if failures:
+        print("serve bench gate FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

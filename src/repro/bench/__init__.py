@@ -1,0 +1,15 @@
+"""Shared perf-matrix infrastructure (benchmarks/matrix.py is the CLI).
+
+``measure``   the measure core: warmup-discarding repeat timing, robust
+              variance statistics (median + MAD/IQR), config hashing, and
+              the shared check registry the subprocess harnesses record
+              their verdicts through.
+``gates``     variance-aware regression gates: a cell fails only when its
+              regression over the in-run reference (or a checked-in
+              baseline) exceeds BOTH the threshold and the measured noise
+              band.  Also the BENCH_matrix.json schema validator.
+``matrixdef`` the declarative matrix: which suites run, which cells each
+              must produce, and the gates applied to every cell.
+``runner``    executes the matrix (one subprocess per suite), assembles
+              the BENCH_matrix.json report, and applies the gates.
+"""

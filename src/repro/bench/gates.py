@@ -1,0 +1,280 @@
+"""Variance-aware regression gates + the BENCH_matrix.json schema.
+
+The gating rule (the tentpole contract): a timing cell FAILS only when its
+regression exceeds BOTH the configured threshold AND the measured noise
+band.  With ``m`` the cell median, ``r`` the reference median and
+``sigma`` each side's standard error of the median
+(:attr:`repro.bench.measure.TimingStats.sigma_s`),
+
+    excess = m - threshold * r
+    noise  = z * sqrt(sigma_m^2 + (threshold * sigma_r)^2)
+    FAIL  <=>  excess > noise
+
+so a genuine 1.5x slowdown against a 1.2x threshold fails decisively,
+while a 1.25x blip inside a wide noise band does not — and a quiet
+machine (tiny sigmas) tightens the gate automatically.
+
+References come in two flavours, applied independently:
+
+* ``ratio_vs_ref`` — the *in-run* reference cell (bucketed vs same-run
+  serial, paged vs same-run fixed).  Always enforced: machine drift
+  cancels because both sides ran seconds apart on the same host.
+* ``ratio_vs_baseline`` — the checked-in ``benchmarks/baselines.json``
+  entry.  A missing or *stale* entry (config_hash mismatch) downgrades
+  this gate to "recorded, not enforced" — it NEVER becomes a
+  pass-by-default on the in-run ratio check, which still applies.  An
+  entry with ``"enforce": false`` is advisory (CI hosts are not the
+  curator's host); ``"enforce": true`` is a hard gate.
+
+``contract`` gates consume a suite-local boolean verdict (bitwise
+equality, census match, ledger accounting...); ``exact_vs_baseline``
+compares a deterministic cell's value hash with the baseline (the
+paper-figure cells — model-derived, so exact reproducibility is the
+contract, never timing); ``metric_bound`` gates a scalar metric
+(e.g. paged-beats-fixed throughput ratio > 1 at saturation).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from dataclasses import dataclass, field
+
+SCHEMA = "bench-matrix/v1"
+BASELINE_SCHEMA = "bench-baselines/v1"
+DEFAULT_Z = 3.0
+
+
+@dataclass(frozen=True)
+class GateSpec:
+    """One gate applied to one cell, declared in the matrix config."""
+
+    kind: str                    # ratio_vs_ref | ratio_vs_baseline |
+    #                              contract | exact_vs_baseline | metric_bound
+    threshold: float | None = None
+    reference: str | None = None  # cell id, for ratio_vs_ref
+    normalize_by: str | None = None  # metrics key dividing the timing
+    #                                  (per-row decode comparisons)
+    metric: str | None = None    # metrics key, for metric_bound
+    min_value: float | None = None
+    max_value: float | None = None
+    z: float = DEFAULT_Z
+    enforce_smoke: bool = True   # gate counts toward --check in smoke runs
+    enforce_full: bool = True    # ... and in full runs
+
+    def to_jsonable(self) -> dict:
+        return {k: v for k, v in self.__dict__.items() if v is not None}
+
+
+@dataclass
+class GateResult:
+    kind: str
+    ok: bool
+    enforced: bool
+    detail: str = ""
+    data: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "ok": self.ok,
+                "enforced": self.enforced, "detail": self.detail,
+                **self.data}
+
+
+def _median_sigma(cell: dict, normalize_by: str | None):
+    t = cell.get("timing")
+    if not t:
+        return None, None
+    m, s = float(t["median_s"]), float(t["sigma_s"])
+    if normalize_by:
+        rows = float(cell["metrics"][normalize_by])
+        m, s = m / rows, s / rows
+    return m, s
+
+
+def _significant_excess(m, sig_m, base, sig_base, threshold, z):
+    """(ratio, excess, noise, fail) for the shared significance rule."""
+    ratio = m / base if base else math.inf
+    excess = m - threshold * base
+    noise = z * math.hypot(sig_m, threshold * sig_base)
+    return ratio, excess, noise, excess > noise
+
+
+def gate_ratio_vs_ref(spec: GateSpec, cell: dict, cells: dict) -> GateResult:
+    ref = cells.get(spec.reference)
+    if ref is None:
+        return GateResult(spec.kind, False, True,
+                          f"reference cell {spec.reference!r} missing")
+    m, sig_m = _median_sigma(cell, spec.normalize_by)
+    r, sig_r = _median_sigma(ref, spec.normalize_by)
+    if m is None or r is None:
+        return GateResult(spec.kind, False, True,
+                          "timing stats missing on cell or reference")
+    ratio, excess, noise, fail = _significant_excess(
+        m, sig_m, r, sig_r, spec.threshold, spec.z)
+    detail = (f"median {m*1e6:.1f}us vs ref {r*1e6:.1f}us "
+              f"(x{ratio:.3f}, threshold {spec.threshold}, "
+              f"noise band {noise*1e6:.1f}us)")
+    return GateResult(spec.kind, not fail, True, detail, {
+        "reference": spec.reference, "ratio": ratio,
+        "threshold": spec.threshold, "excess_s": excess, "noise_s": noise,
+        "significant": fail})
+
+
+def gate_ratio_vs_baseline(spec: GateSpec, cell: dict,
+                           baseline: dict | None) -> GateResult:
+    entry, status = baseline_entry(baseline, cell)
+    if entry is None:
+        return GateResult(
+            spec.kind, True, False,
+            f"baseline {status}: in-run reference only", {"baseline": status})
+    m, sig_m = _median_sigma(cell, spec.normalize_by)
+    if m is None:
+        return GateResult(spec.kind, False, True, "timing stats missing")
+    base = float(entry["median_s"])
+    sig_b = float(entry.get("sigma_s", 0.0))
+    ratio, excess, noise, fail = _significant_excess(
+        m, sig_m, base, sig_b, spec.threshold, spec.z)
+    enforced = bool(entry.get("enforce", False))
+    detail = (f"median {m*1e6:.1f}us vs baseline {base*1e6:.1f}us "
+              f"(x{ratio:.3f}, threshold {spec.threshold}"
+              + ("" if enforced else ", advisory") + ")")
+    return GateResult(spec.kind, not fail, enforced, detail, {
+        "baseline": "enforced" if enforced else "advisory",
+        "ratio": ratio, "threshold": spec.threshold,
+        "excess_s": excess, "noise_s": noise, "significant": fail})
+
+
+def gate_contract(spec: GateSpec, cell: dict) -> GateResult:
+    ok = cell.get("ok")
+    if ok is None:
+        return GateResult(spec.kind, False, True, "no verdict recorded")
+    return GateResult(spec.kind, bool(ok), True,
+                      "" if ok else str(cell.get("detail", "check failed")))
+
+
+def gate_exact_vs_baseline(spec: GateSpec, cell: dict,
+                           baseline: dict | None) -> GateResult:
+    entry, status = baseline_entry(baseline, cell)
+    got = cell.get("hash")
+    if got is None:
+        return GateResult(spec.kind, False, True, "cell has no value hash")
+    if entry is None:
+        return GateResult(
+            spec.kind, True, False,
+            f"baseline {status}: hash {got} recorded, not compared",
+            {"baseline": status, "hash": got})
+    want = entry.get("hash")
+    ok = got == want
+    return GateResult(
+        spec.kind, ok, bool(entry.get("enforce", True)),
+        "" if ok else f"value hash {got} != baseline {want}",
+        {"baseline": "present", "hash": got, "baseline_hash": want})
+
+
+def gate_metric_bound(spec: GateSpec, cell: dict) -> GateResult:
+    v = cell.get("metrics", {}).get(spec.metric)
+    if v is None:
+        return GateResult(spec.kind, False, True,
+                          f"metric {spec.metric!r} missing")
+    v = float(v)
+    ok = ((spec.min_value is None or v >= spec.min_value)
+          and (spec.max_value is None or v <= spec.max_value))
+    return GateResult(
+        spec.kind, ok, True,
+        f"{spec.metric}={v:.4g} (min={spec.min_value}, max={spec.max_value})",
+        {"metric": spec.metric, "value": v})
+
+
+def evaluate_gates(specs, cell: dict, cells: dict, baseline: dict | None,
+                   smoke: bool) -> list:
+    """All gate records for one cell; smoke/full enforcement applied."""
+    out = []
+    for spec in specs:
+        if spec.kind == "ratio_vs_ref":
+            res = gate_ratio_vs_ref(spec, cell, cells)
+        elif spec.kind == "ratio_vs_baseline":
+            res = gate_ratio_vs_baseline(spec, cell, baseline)
+        elif spec.kind == "contract":
+            res = gate_contract(spec, cell)
+        elif spec.kind == "exact_vs_baseline":
+            res = gate_exact_vs_baseline(spec, cell, baseline)
+        elif spec.kind == "metric_bound":
+            res = gate_metric_bound(spec, cell)
+        else:
+            res = GateResult(spec.kind, False, True,
+                             f"unknown gate kind {spec.kind!r}")
+        if smoke and not spec.enforce_smoke:
+            res.enforced = False
+            res.detail = (res.detail + " [not enforced in smoke]").strip()
+        if not smoke and not spec.enforce_full:
+            res.enforced = False
+        out.append(res)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baselines (benchmarks/baselines.json)
+# ---------------------------------------------------------------------------
+
+def load_baselines(path) -> dict | None:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return None
+    data = json.loads(p.read_text())
+    assert data.get("schema") == BASELINE_SCHEMA, data.get("schema")
+    return data
+
+
+def baseline_entry(baseline: dict | None, cell: dict):
+    """(entry, status): entry is None when missing or stale.
+
+    Staleness: the baseline was curated for a different cell config
+    (config_hash mismatch), so comparing against it would be meaningless
+    — the gate treats it exactly like a missing baseline.
+    """
+    if baseline is None:
+        return None, "missing (no baselines file)"
+    entry = baseline.get("cells", {}).get(cell.get("id") or "")
+    if entry is None:
+        return None, "missing"
+    if entry.get("config_hash") not in (None, cell.get("config_hash")):
+        return None, (f"stale (config_hash {entry.get('config_hash')} != "
+                      f"{cell.get('config_hash')})")
+    return entry, "present"
+
+
+# ---------------------------------------------------------------------------
+# report schema
+# ---------------------------------------------------------------------------
+
+_CELL_KINDS = ("timing", "contract", "exact", "metric")
+
+
+def validate_report(report: dict) -> list:
+    """Structural check of a BENCH_matrix.json dict; returns error strings
+    (empty = valid).  Round-trip safe: validate(json.loads(json.dumps(r)))
+    agrees with validate(r)."""
+    errs = []
+    if report.get("schema") != SCHEMA:
+        errs.append(f"schema {report.get('schema')!r} != {SCHEMA!r}")
+    for key in ("smoke", "matrix_config_hash", "suites", "cells", "ok"):
+        if key not in report:
+            errs.append(f"missing top-level key {key!r}")
+    for name, s in (report.get("suites") or {}).items():
+        if "status" not in s:
+            errs.append(f"suite {name}: missing status")
+    for cid, cell in (report.get("cells") or {}).items():
+        if cell.get("kind") not in _CELL_KINDS:
+            errs.append(f"cell {cid}: bad kind {cell.get('kind')!r}")
+        if "config_hash" not in cell:
+            errs.append(f"cell {cid}: missing config_hash")
+        if cell.get("kind") == "timing" and cell.get("timing") is None \
+                and cell.get("missing") is not True:
+            errs.append(f"cell {cid}: timing cell without timing stats")
+        for g in cell.get("gates", []):
+            if not isinstance(g.get("ok"), bool):
+                errs.append(f"cell {cid}: gate without boolean ok")
+    if not isinstance(report.get("failures", []), list):
+        errs.append("failures is not a list")
+    return errs

@@ -1,0 +1,256 @@
+"""The measure core shared by every bench suite and the matrix runner.
+
+Every timed cell in the repo goes through :class:`TimingStats`: discard
+``warmup`` leading samples, keep ``n`` repeats, and summarize them with
+*robust* statistics — the median as the location estimate and the MAD
+(median absolute deviation) / IQR as the spread.  On the oversubscribed
+CI hosts these benches run on, means and minima are hostage to scheduler
+noise; the median+MAD pair is what the variance-aware regression gates in
+:mod:`repro.bench.gates` reason about ("Is Network the Bottleneck of
+Distributed Training?" is the cautionary tale — single-shot timings on
+cloud hosts mislead).
+
+Also here, because every suite needs them:
+
+* :func:`config_hash` / :func:`result_hash` — canonical-JSON SHA-256
+  prefixes.  A cell's ``config_hash`` is its provenance: baselines carry
+  it, and a baseline whose hash no longer matches the cell's current
+  config is *stale* and silently ignored by the gates (never compared).
+* :func:`timing_cell` / :func:`contract_cell` / :func:`exact_cell` — the
+  standard per-cell record constructors; the matrix runner consumes these
+  shapes from every suite's JSON output.
+* :func:`make_check` / :func:`contract_cells` / :func:`exit_check` — the
+  shared verdict registry for the subprocess harnesses (memplan, elastic,
+  serve-chaos): each named check records ``{"ok": bool}`` and the
+  ``--check`` CLI shim exits nonzero iff any failed.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import statistics
+import sys
+import time
+import traceback
+from dataclasses import dataclass
+
+# MAD -> sigma for a normal distribution, and the standard error of the
+# median (1.2533 sigma / sqrt(n)); folded so
+#   se(median) ~= MEDIAN_SE_FACTOR * mad / sqrt(n)
+MAD_SIGMA = 1.4826
+MEDIAN_SE_FACTOR = 1.2533 * MAD_SIGMA
+
+
+def _jsonable(obj):
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    if hasattr(obj, "tolist"):  # numpy scalars/arrays without importing numpy
+        return obj.tolist()
+    return str(obj)
+
+
+def canonical_json(obj) -> str:
+    """Deterministic JSON: sorted keys, no whitespace, stable fallbacks."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=_jsonable)
+
+
+def config_hash(obj) -> str:
+    """12-hex-digit provenance hash of a cell's declarative config."""
+    return hashlib.sha256(canonical_json(obj).encode()).hexdigest()[:12]
+
+
+# result payloads get the same treatment; a separate name because the two
+# hashes mean different things in a cell record (provenance vs value)
+result_hash = config_hash
+
+
+@dataclass(frozen=True)
+class TimingStats:
+    """Robust summary of repeated timings (seconds).
+
+    ``samples_s`` are the post-warmup repeats; ``warmup`` records how many
+    leading samples were discarded (provenance only — they are gone).
+    """
+
+    samples_s: tuple
+    warmup: int = 0
+
+    @staticmethod
+    def from_samples(samples, warmup: int = 0) -> "TimingStats":
+        kept = tuple(float(s) for s in list(samples)[warmup:])
+        if not kept:
+            raise ValueError("no samples left after warmup discard")
+        return TimingStats(samples_s=kept, warmup=warmup)
+
+    @property
+    def n(self) -> int:
+        return len(self.samples_s)
+
+    @property
+    def median_s(self) -> float:
+        return float(statistics.median(self.samples_s))
+
+    @property
+    def mad_s(self) -> float:
+        med = self.median_s
+        return float(statistics.median(abs(s - med) for s in self.samples_s))
+
+    @property
+    def iqr_s(self) -> float:
+        if self.n < 2:
+            return 0.0
+        xs = sorted(self.samples_s)
+        q = statistics.quantiles(xs, n=4, method="inclusive")
+        return float(q[2] - q[0])
+
+    @property
+    def min_s(self) -> float:
+        return float(min(self.samples_s))
+
+    @property
+    def sigma_s(self) -> float:
+        """Standard error of the median (the gate's noise unit).
+
+        MAD-based; falls back to the IQR when the MAD degenerates to zero
+        (e.g. quantized clocks), and to 0.0 only when every sample is
+        identical — in which case any excess is genuinely significant.
+        """
+        spread = self.mad_s
+        if spread == 0.0:
+            spread = self.iqr_s / (2 * 0.6745 * MAD_SIGMA) if self.iqr_s \
+                else 0.0
+        return MEDIAN_SE_FACTOR * spread / math.sqrt(self.n)
+
+    def to_dict(self) -> dict:
+        return {
+            "samples_s": list(self.samples_s),
+            "warmup": self.warmup,
+            "n": self.n,
+            "median_s": self.median_s,
+            "mad_s": self.mad_s,
+            "iqr_s": self.iqr_s,
+            "min_s": self.min_s,
+            "sigma_s": self.sigma_s,
+            "median_us": self.median_s * 1e6,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "TimingStats":
+        return TimingStats(samples_s=tuple(d["samples_s"]),
+                           warmup=int(d.get("warmup", 0)))
+
+
+def measure(fn, *, warmup: int = 1, repeats: int = 5) -> TimingStats:
+    """Time ``fn()`` ``warmup + repeats`` times, discarding the warmups.
+
+    ``fn`` must block until its work is done (callers wrap device work
+    with ``jax.block_until_ready`` or an equivalent host sync).
+    """
+    samples = []
+    for _ in range(warmup + repeats):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return TimingStats.from_samples(samples, warmup=warmup)
+
+
+# ---------------------------------------------------------------------------
+# standard per-cell records (what every suite emits under out["cells"])
+# ---------------------------------------------------------------------------
+
+def _cell(kind: str, config: dict, *, timing=None, metrics=None, ok=None,
+          detail=None, value_hash=None) -> dict:
+    rec = {
+        "kind": kind,
+        "config": config,
+        "config_hash": config_hash(config),
+        "timing": timing.to_dict() if isinstance(timing, TimingStats)
+        else timing,
+        "metrics": metrics or {},
+        "ok": ok,
+    }
+    if detail is not None:
+        rec["detail"] = detail
+    if value_hash is not None:
+        rec["hash"] = value_hash
+    return rec
+
+
+def timing_cell(config: dict, timing: TimingStats, *, metrics=None,
+                ok=None, detail=None) -> dict:
+    """A measured cell: gated on time ratios (and optionally a verdict)."""
+    return _cell("timing", config, timing=timing, metrics=metrics, ok=ok,
+                 detail=detail)
+
+
+def contract_cell(config: dict, ok: bool, *, metrics=None,
+                  detail=None) -> dict:
+    """A correctness cell: gated on its boolean verdict only."""
+    return _cell("contract", config, metrics=metrics, ok=bool(ok),
+                 detail=detail)
+
+
+def exact_cell(config: dict, value_hash: str, *, metrics=None, ok=None,
+               detail=None) -> dict:
+    """A deterministic-output cell: gated on exact value-hash equality
+    with the checked-in baseline (model-derived figures — never timing)."""
+    return _cell("exact", config, metrics=metrics, ok=ok, detail=detail,
+                 value_hash=value_hash)
+
+
+# ---------------------------------------------------------------------------
+# the shared harness verdict registry (memplan/elastic/serve-chaos pattern)
+# ---------------------------------------------------------------------------
+
+def make_check(results: dict):
+    """The subprocess harnesses' ``@check(name)`` decorator: run the body
+    immediately, record ``{"ok": bool}`` (plus error + traceback tail on
+    failure) into ``results`` — one registry shared by all harnesses."""
+    def check(name):
+        def deco(fn):
+            try:
+                fn()
+                results[name] = {"ok": True}
+            except Exception as e:  # noqa: BLE001
+                results[name] = {
+                    "ok": False,
+                    "err": f"{type(e).__name__}: {e}",
+                    "tb": traceback.format_exc()[-2000:],
+                }
+            return fn
+        return deco
+    return check
+
+
+def failed_checks(results: dict) -> list:
+    """Names of recorded checks whose verdict is ``ok: False``."""
+    return [k for k, v in results.items()
+            if isinstance(v, dict) and v.get("ok") is False]
+
+
+def contract_cells(suite: str, results: dict, base_config: dict) -> dict:
+    """Standard cell records for every named check in a harness registry.
+
+    Cell ids are ``<suite>/<check>``; each carries the harness's shared
+    config (mesh/model/...) plus the check name, hashed for provenance.
+    """
+    cells = {}
+    for name, verdict in results.items():
+        if not (isinstance(verdict, dict) and "ok" in verdict):
+            continue
+        cfg = dict(base_config, suite=suite, check=name)
+        cells[f"{suite}/{name}"] = contract_cell(
+            cfg, verdict["ok"],
+            detail=verdict.get("err"))
+    return cells
+
+
+def exit_check(results: dict, gate_name: str) -> None:
+    """The harnesses' ``--check`` tail: exit 1 iff any check failed."""
+    bad = failed_checks(results)
+    if bad:
+        print(f"{gate_name} FAILED: {bad}", file=sys.stderr)
+        sys.exit(1)

@@ -1,0 +1,239 @@
+"""Executes the declarative perf matrix and assembles BENCH_matrix.json.
+
+One subprocess per suite (each suite pins its own virtual-device count,
+exactly as the historical per-script CI steps did), then one central gate
+pass: every declared cell is looked up in its suite's emitted ``cells``
+section, its gates (in-run reference ratio, baseline ratio, contract,
+exact-hash, metric bound) are evaluated by :mod:`repro.bench.gates`, and
+the whole run lands in a single trajectory-friendly report:
+
+* ``suites``  — per-suite status, wall time, script + argv provenance;
+* ``cells``   — per-cell records: declarative config + config_hash,
+  timing samples/median/MAD/IQR, metrics (wire bytes,
+  predicted-vs-measured ratios, ...), gate verdicts;
+* ``failures``— every *enforced* gate that failed (a declared cell a
+  suite failed to emit is itself a failure — coverage can only shrink
+  loudly).
+
+``main`` is the CLI behind ``benchmarks/matrix.py``.  The report is
+always written/printed before a failing exit so the artifact survives
+gate failures (CI uploads it with ``if: always()``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+from repro.bench import gates as G
+from repro.bench import matrixdef as MD
+
+DEFAULT_BASELINES = "benchmarks/baselines.json"
+
+
+def repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _suite_env() -> dict:
+    # same minimal-but-sufficient child env as tests/harness_util.py, plus
+    # the repo root on PYTHONPATH so `from benchmarks import ...` resolves
+    return {
+        "PYTHONPATH": "src" + os.pathsep + ".",
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": str(pathlib.Path.home()),
+        "JAX_PLATFORMS": "cpu",
+    }
+
+
+def run_suite(suite: MD.SuiteSpec, smoke: bool,
+              root: pathlib.Path | None = None) -> dict:
+    """Run one suite subprocess; parse its JSON; never raise."""
+    root = root or repo_root()
+    argv = [sys.executable, str(root / suite.script), *suite.argv(smoke)]
+    t0 = time.perf_counter()
+    status = {"script": suite.script, "argv": argv[1:], "status": "ok"}
+    try:
+        proc = subprocess.run(
+            argv, capture_output=True, text=True, cwd=str(root),
+            env=_suite_env(), timeout=suite.timeout_s)
+    except subprocess.TimeoutExpired:
+        status.update(status="timeout", wall_s=time.perf_counter() - t0)
+        return {"status": status, "out": {}}
+    status["wall_s"] = round(time.perf_counter() - t0, 2)
+    status["returncode"] = proc.returncode
+    out = {}
+    try:
+        stdout = proc.stdout
+        out = json.loads(stdout[stdout.index("{"):])
+    except (ValueError, json.JSONDecodeError):
+        status["status"] = "no-json"
+    if proc.returncode != 0:
+        status["status"] = "error"
+    if status["status"] != "ok":
+        status["stderr_tail"] = proc.stderr[-3000:]
+    return {"status": status, "out": out}
+
+
+def _missing_cell(spec: MD.CellSpec, reason: str) -> dict:
+    return {"kind": "contract", "config": {"id": spec.id}, "missing": True,
+            "config_hash": "", "metrics": {}, "ok": False, "detail": reason,
+            "timing": None}
+
+
+def gate_cells(matrix: MD.MatrixSpec, suite_cells: dict,
+               baseline: dict | None, *, suites: set | None = None) -> tuple:
+    """Evaluate every declared cell's gates.
+
+    ``suite_cells`` maps suite name -> emitted cells dict.  Returns
+    ``(report_cells, failures)``; extra (undeclared) emitted cells are
+    carried through ungated for the trajectory.
+    """
+    report_cells: dict = {}
+    failures: list = []
+    # declared cells first, so in-run references resolve among them
+    emitted_flat: dict = {}
+    for sname, cells in suite_cells.items():
+        for cid, rec in (cells or {}).items():
+            emitted_flat[cid] = rec
+    for cid, spec in matrix.cells.items():
+        if suites is not None and spec.suite not in suites:
+            continue
+        rec = emitted_flat.get(cid)
+        if rec is None:
+            reason = f"declared cell not emitted by suite {spec.suite!r}"
+            rec = _missing_cell(spec, reason)
+        rec = dict(rec, id=cid, suite=spec.suite, declared=True)
+        results = G.evaluate_gates(spec.gates, rec, emitted_flat, baseline,
+                                   matrix.smoke)
+        if rec.get("missing"):
+            results.insert(0, G.GateResult("present", False, True,
+                                           rec["detail"]))
+        rec["gates"] = [r.to_dict() for r in results]
+        rec["ok"] = all(r.ok for r in results if r.enforced)
+        report_cells[cid] = rec
+        failures += [{"cell": cid, "gate": r.kind, "detail": r.detail}
+                     for r in results if r.enforced and not r.ok]
+    for cid, rec in emitted_flat.items():
+        if cid in report_cells:
+            continue
+        rec = dict(rec, id=cid, declared=False, gates=[])
+        rec["ok"] = rec.get("ok") is not False
+        report_cells[cid] = rec
+    return report_cells, failures
+
+
+def assemble_report(matrix: MD.MatrixSpec, suite_runs: dict,
+                    baseline: dict | None, baseline_path) -> dict:
+    suite_cells = {name: run["out"].get("cells", {})
+                   for name, run in suite_runs.items()}
+    cells, failures = gate_cells(matrix, suite_cells, baseline,
+                                 suites=set(suite_runs))
+    suites_out = {}
+    for name, run in suite_runs.items():
+        suites_out[name] = run["status"]
+        if run["status"]["status"] != "ok":
+            failures.append({"cell": None, "gate": "suite",
+                             "detail": f"suite {name}: "
+                                       f"{run['status']['status']}"})
+    return {
+        "schema": G.SCHEMA,
+        "smoke": matrix.smoke,
+        "matrix_config_hash": matrix.config_hash,
+        "baseline_path": str(baseline_path) if baseline else None,
+        "suites": suites_out,
+        "cells": cells,
+        "failures": failures,
+        "ok": not failures,
+    }
+
+
+def check_suite(name: str, out: dict, *, smoke: bool,
+                baseline: dict | None = None) -> list:
+    """The standalone shims' gate: evaluate ONE suite's slice of the
+    declared matrix against its own emitted cells (no baseline by
+    default, so baseline gates stay advisory).  Returns failure strings.
+    """
+    matrix = MD.build_matrix(smoke)
+    cells, failures = gate_cells(matrix, {name: out.get("cells", {})},
+                                 baseline, suites={name})
+    return [f"{f['cell']}: [{f['gate']}] {f['detail']}" for f in failures]
+
+
+def _summary_lines(report: dict) -> list:
+    lines = []
+    n_ok = sum(1 for c in report["cells"].values() if c.get("ok"))
+    lines.append(f"matrix: {n_ok}/{len(report['cells'])} cells ok, "
+                 f"{len(report['failures'])} enforced gate failure(s), "
+                 f"smoke={report['smoke']}, "
+                 f"config={report['matrix_config_hash']}")
+    for name, s in report["suites"].items():
+        lines.append(f"  suite {name:8s} {s['status']:7s} "
+                     f"{s.get('wall_s', 0.0):8.1f}s  {s['script']}")
+    for f in report["failures"]:
+        lines.append(f"  FAIL {f['cell'] or '(suite)'} [{f['gate']}]: "
+                     f"{f['detail']}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks/matrix.py",
+        description="Declarative perf-matrix runner with variance-aware "
+                    "regression gates (see docs/benchmarks.md)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer repeats/requests/rates)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any enforced gate fails")
+    ap.add_argument("--suites", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINES,
+                    help="baselines file (missing entries downgrade the "
+                         "baseline gates to advisory)")
+    ap.add_argument("--out", default="",
+                    help="also write the report JSON here (written before "
+                         "a failing exit, so the artifact always survives)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the declared matrix (cells + gates) and exit")
+    args = ap.parse_args(argv)
+
+    matrix = MD.build_matrix(args.smoke)
+    if args.list:
+        print(json.dumps(matrix.to_jsonable(), indent=1))
+        return 0
+
+    selected = [s.strip() for s in args.suites.split(",") if s.strip()] \
+        or list(matrix.suites)
+    unknown = [s for s in selected if s not in matrix.suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; have {list(matrix.suites)}")
+
+    root = repo_root()
+    baseline = G.load_baselines(root / args.baseline)
+    suite_runs = {}
+    for name in selected:
+        suite = matrix.suites[name]
+        print(f"[matrix] running suite {name} "
+              f"({suite.script} {' '.join(suite.argv(args.smoke))})",
+              file=sys.stderr, flush=True)
+        suite_runs[name] = run_suite(suite, args.smoke, root)
+        print(f"[matrix]   -> {suite_runs[name]['status']['status']} in "
+              f"{suite_runs[name]['status'].get('wall_s', 0.0):.1f}s",
+              file=sys.stderr, flush=True)
+
+    report = assemble_report(matrix, suite_runs, baseline,
+                             root / args.baseline)
+    text = json.dumps(report, indent=1, default=str)
+    if args.out:
+        pathlib.Path(args.out).write_text(text + "\n")
+    print(text)
+    for line in _summary_lines(report):
+        print(line, file=sys.stderr)
+    if args.check and not report["ok"]:
+        return 1
+    return 0

@@ -61,13 +61,13 @@ import hashlib
 import json
 import sys
 import tempfile
-import traceback
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.runtime.train_loop as TL
+from repro.bench import measure as MS
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config, smoke_variant
 from repro.core import memplan as M
@@ -88,20 +88,7 @@ from repro.runtime.train_loop import (
 RESULTS = {}
 CTX = {}      # cross-check shared state (ledgers, recorded batches)
 
-
-def check(name):
-    def deco(fn):
-        try:
-            fn()
-            RESULTS[name] = {"ok": True}
-        except Exception as e:  # noqa: BLE001
-            RESULTS[name] = {
-                "ok": False,
-                "err": f"{type(e).__name__}: {e}",
-                "tb": traceback.format_exc()[-2000:],
-            }
-        return fn
-    return deco
+check = MS.make_check(RESULTS)
 
 
 class RecordingLM(SyntheticLM):
@@ -464,10 +451,10 @@ RESULTS["summary"] = {
     "budget_gb": BUDGET_GB,
 }
 
+# the elastic suite's matrix cells (one contract cell per named check)
+RESULTS["cells"] = MS.contract_cells(
+    "elastic", RESULTS,
+    dict(model="llama3.2-1b-smoke", budget_gb=BUDGET_GB))
 print(json.dumps(RESULTS, indent=1, default=str))
 if "--check" in sys.argv:
-    bad = [k for k, v in RESULTS.items()
-           if isinstance(v, dict) and v.get("ok") is False]
-    if bad:
-        print(f"elastic smoke gate FAILED: {bad}", file=sys.stderr)
-        sys.exit(1)
+    MS.exit_check(RESULTS, "elastic smoke gate")

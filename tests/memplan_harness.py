@@ -49,11 +49,11 @@ os.environ["XLA_FLAGS"] = (
 
 import json
 import sys
-import traceback
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import measure as MS
 from repro.configs import get_config, smoke_variant
 from repro.core import memplan as M
 from repro.core.autotune import compare_census, predict_traffic
@@ -72,20 +72,7 @@ MICRO = 2
 GLOBAL_BATCH = 16
 SEQ = 16
 
-
-def check(name):
-    def deco(fn):
-        try:
-            fn()
-            RESULTS[name] = {"ok": True}
-        except Exception as e:  # noqa: BLE001
-            RESULTS[name] = {
-                "ok": False,
-                "err": f"{type(e).__name__}: {e}",
-                "tb": traceback.format_exc()[-2000:],
-            }
-        return fn
-    return deco
+check = MS.make_check(RESULTS)
 
 
 def _build(mesh_dims, part, repl, **mcfg_kw):
@@ -280,10 +267,11 @@ def _offload_lowers_peak():
     RESULTS["offload_lowers_peak_detail"] = rows
 
 
+# the memplan suite's matrix cells (one contract cell per named check)
+RESULTS["cells"] = MS.contract_cells(
+    "memplan", RESULTS,
+    dict(model="llama3.2-1b-smoke", micro_steps=MICRO,
+         global_batch=GLOBAL_BATCH, seq=SEQ))
 print(json.dumps(RESULTS, indent=1, default=str))
 if "--check" in sys.argv:
-    bad = [k for k, v in RESULTS.items()
-           if isinstance(v, dict) and v.get("ok") is False]
-    if bad:
-        print(f"memplan smoke gate FAILED: {bad}", file=sys.stderr)
-        sys.exit(1)
+    MS.exit_check(RESULTS, "memplan smoke gate")

@@ -62,10 +62,10 @@ os.environ["XLA_FLAGS"] = (
 
 import json
 import sys
-import traceback
 
 import numpy as np
 
+from repro.bench import measure as MS
 from repro.configs import get_config, smoke_variant
 from repro.core.faults import FaultPlan
 from repro.core.mics import MiCSConfig
@@ -93,19 +93,7 @@ SC = ServeLoopConfig(slots_local=SLOTS_LOCAL, nb_local=NB_LOCAL,
                      chunk=CHUNK, top_k=8, reserve="full", seed=7)
 
 
-def check(name):
-    def deco(fn):
-        try:
-            fn()
-            RESULTS[name] = {"ok": True}
-        except Exception as e:  # noqa: BLE001
-            RESULTS[name] = {
-                "ok": False,
-                "err": f"{type(e).__name__}: {e}",
-                "tb": traceback.format_exc()[-2000:],
-            }
-        return fn
-    return deco
+check = MS.make_check(RESULTS)
 
 
 def make_trace(n: int) -> list[Request]:
@@ -292,10 +280,11 @@ RESULTS["summary"] = {
     } if _burst_res else None),
 }
 
+# the chaos suite's matrix cells (one contract cell per named check)
+RESULTS["cells"] = MS.contract_cells(
+    "chaos", RESULTS,
+    dict(model=CFG.name, tp=TP, block_size=BLOCK_SIZE,
+         slots_local=SLOTS_LOCAL, n_requests=N_REQUESTS))
 print(json.dumps(RESULTS, indent=1, default=str))
 if "--check" in sys.argv:
-    bad = [k for k, v in RESULTS.items()
-           if isinstance(v, dict) and v.get("ok") is False]
-    if bad:
-        print(f"serve chaos smoke gate FAILED: {bad}", file=sys.stderr)
-        sys.exit(1)
+    MS.exit_check(RESULTS, "serve chaos smoke gate")

@@ -1,0 +1,359 @@
+"""Device-free tests for the perf-matrix core (repro.bench).
+
+Synthetic timing draws exercise the variance estimator and the
+significance-aware regression gate end to end: an injected 1.5x slowdown
+must fail the 1.2x gate decisively, noise-level jitter must pass, and the
+config-hash provenance must be stable across key order and serialization.
+The BENCH_matrix.json schema round-trips through json, and the declared
+matrix itself is checked for internal consistency (every reference cell
+exists, every suite is runnable, the standalone shims' gates are the
+matrix's own).
+"""
+
+import json
+
+import pytest
+
+from repro.bench import gates as G
+from repro.bench import matrixdef as MD
+from repro.bench import measure as MS
+from repro.bench import runner as R
+
+US = 1e-6
+
+
+def t_cell(cid, samples_us, rows=None, ok=None):
+    """A synthetic timing cell record keyed like the runner keys them."""
+    stats = MS.TimingStats(tuple(s * US for s in samples_us))
+    cell = MS.timing_cell({"cell": cid, "steps": len(samples_us)}, stats,
+                          metrics={"rows": rows} if rows else {}, ok=ok)
+    return dict(cell, id=cid)
+
+
+# ---------------------------------------------------------------------------
+# TimingStats: the variance estimator
+# ---------------------------------------------------------------------------
+
+def test_timing_stats_robust_summary():
+    t = MS.TimingStats((10.0, 12.0, 11.0, 100.0, 11.5))
+    assert t.median_s == 11.5          # the outlier does not move the median
+    assert t.mad_s == 0.5
+    assert t.min_s == 10.0
+    assert t.n == 5
+    # MAD-based standard error of the median
+    assert t.sigma_s == pytest.approx(MS.MEDIAN_SE_FACTOR * 0.5 / 5 ** 0.5)
+
+
+def test_timing_stats_warmup_discard_and_roundtrip():
+    t = MS.TimingStats.from_samples([999.0, 999.0, 1.0, 2.0, 3.0], warmup=2)
+    assert t.samples_s == (1.0, 2.0, 3.0)
+    assert t.warmup == 2 and t.median_s == 2.0
+    t2 = MS.TimingStats.from_dict(json.loads(json.dumps(t.to_dict())))
+    assert t2 == t
+    with pytest.raises(ValueError):
+        MS.TimingStats.from_samples([1.0], warmup=1)
+
+
+def test_sigma_falls_back_to_iqr_then_zero():
+    # MAD degenerates (quantized clock: most samples identical) but the
+    # IQR still sees the spread
+    t = MS.TimingStats((10.0, 10.0, 10.0, 20.0, 20.0))
+    assert t.mad_s == 0.0 and t.iqr_s > 0.0 and t.sigma_s > 0.0
+    # all-identical samples: zero spread means any excess is significant
+    assert MS.TimingStats((5.0, 5.0, 5.0)).sigma_s == 0.0
+
+
+def test_measure_collects_warmup_and_repeats():
+    calls = []
+    stats = MS.measure(lambda: calls.append(1), warmup=2, repeats=5)
+    assert len(calls) == 7 and stats.n == 5 and stats.warmup == 2
+
+
+# ---------------------------------------------------------------------------
+# config-hash provenance
+# ---------------------------------------------------------------------------
+
+def test_config_hash_stable_across_key_order_and_json():
+    a = {"mesh": {"p": 4, "tp": 2}, "steps": 8, "cell": "x"}
+    b = json.loads(json.dumps({"cell": "x", "steps": 8,
+                               "mesh": {"tp": 2, "p": 4}}))
+    assert MS.config_hash(a) == MS.config_hash(b)
+    assert MS.config_hash(a) != MS.config_hash(dict(a, steps=9))
+    assert len(MS.config_hash(a)) == 12
+
+
+# ---------------------------------------------------------------------------
+# the variance-aware regression gate
+# ---------------------------------------------------------------------------
+
+def _ratio_gate(cell, ref, threshold=1.2, normalize_by=None):
+    spec = G.GateSpec(kind="ratio_vs_ref", reference=ref["id"],
+                      threshold=threshold, normalize_by=normalize_by)
+    return G.gate_ratio_vs_ref(spec, cell, {ref["id"]: ref})
+
+
+def test_injected_slowdown_fails_gate():
+    """A genuine 1.5x slowdown on a quiet machine fails the 1.2x gate."""
+    ref = t_cell("ref", [99.9, 100.0, 100.1, 99.95, 100.05])
+    slow = t_cell("slow", [149.8, 150.0, 150.2, 149.9, 150.1])
+    res = _ratio_gate(slow, ref)
+    assert not res.ok and res.data["significant"]
+    assert res.data["ratio"] == pytest.approx(1.5, rel=1e-3)
+
+
+def test_noise_level_jitter_passes_gate():
+    """A 1.25x median blip inside a wide measured noise band passes."""
+    ref = t_cell("ref", [90.0, 95.0, 100.0, 105.0, 110.0])
+    jit = t_cell("jit", [s * 1.25 for s in (90.0, 95.0, 100.0, 105.0, 110.0)])
+    res = _ratio_gate(jit, ref)
+    assert res.ok and not res.data["significant"]
+    assert res.data["ratio"] == pytest.approx(1.25)
+    # the same 1.25x on a quiet machine IS significant: tiny sigmas
+    # tighten the gate automatically
+    ref_q = t_cell("ref", [99.9, 100.0, 100.1, 99.95, 100.05])
+    jit_q = t_cell("jit", [124.9, 125.0, 125.1, 124.95, 125.05])
+    assert not _ratio_gate(jit_q, ref_q).ok
+
+
+def test_per_row_normalization():
+    """Paged pushes 1.5x the rows; per-row the same gate passes."""
+    ref = t_cell("fixed", [99.9, 100.0, 100.1, 99.95, 100.05], rows=8)
+    paged = t_cell("paged", [149.8, 150.0, 150.2, 149.9, 150.1], rows=12)
+    assert not _ratio_gate(paged, ref).ok            # raw: 1.5x, fails
+    res = _ratio_gate(paged, ref, normalize_by="rows")
+    assert res.ok                                    # per-row: 1.0x
+    assert res.data["ratio"] == pytest.approx(1.0, rel=1e-3)
+
+
+def test_missing_reference_fails_loudly():
+    res = G.gate_ratio_vs_ref(
+        G.GateSpec(kind="ratio_vs_ref", reference="nope", threshold=1.2),
+        t_cell("c", [1.0]), {})
+    assert not res.ok and "missing" in res.detail
+
+
+def test_contract_gate_requires_a_verdict():
+    spec = G.GateSpec(kind="contract")
+    assert G.gate_contract(spec, {"ok": True}).ok
+    assert not G.gate_contract(spec, {"ok": False}).ok
+    res = G.gate_contract(spec, {"ok": None})       # no verdict => fail
+    assert not res.ok and "no verdict" in res.detail
+
+
+def test_metric_bound_gate():
+    cell = {"metrics": {"normalized_ratio": 1.3}}
+    spec = G.GateSpec(kind="metric_bound", metric="normalized_ratio",
+                      min_value=1.0)
+    assert G.gate_metric_bound(spec, cell).ok
+    cell["metrics"]["normalized_ratio"] = 0.9
+    assert not G.gate_metric_bound(spec, cell).ok
+    assert not G.gate_metric_bound(spec, {"metrics": {}}).ok
+
+
+def test_enforce_smoke_downgrade():
+    spec = G.GateSpec(kind="metric_bound", metric="x", min_value=1.0,
+                      enforce_smoke=False)
+    cell = {"metrics": {"x": 0.5}}
+    smoke = G.evaluate_gates((spec,), cell, {}, None, smoke=True)[0]
+    full = G.evaluate_gates((spec,), cell, {}, None, smoke=False)[0]
+    assert not smoke.ok and not smoke.enforced       # recorded, not gating
+    assert not full.ok and full.enforced
+
+
+# ---------------------------------------------------------------------------
+# baselines: missing / stale / advisory / enforced
+# ---------------------------------------------------------------------------
+
+def _baseline(cells):
+    return {"schema": G.BASELINE_SCHEMA, "cells": cells}
+
+
+def test_missing_baseline_is_never_pass_by_default():
+    """No baseline => the baseline gate is advisory, but the in-run
+    reference gate still fails the injected slowdown."""
+    ref = t_cell("ref", [99.9, 100.0, 100.1, 99.95, 100.05])
+    slow = t_cell("slow", [149.8, 150.0, 150.2, 149.9, 150.1])
+    bres = G.gate_ratio_vs_baseline(
+        G.GateSpec(kind="ratio_vs_baseline", threshold=1.5), slow, None)
+    assert bres.ok and not bres.enforced             # recorded only
+    assert not _ratio_gate(slow, ref).ok             # still gated in-run
+
+
+def test_stale_baseline_treated_as_missing():
+    cell = t_cell("c", [100.0, 100.1, 99.9])
+    entry = {"median_s": 50 * US, "sigma_s": 0.1 * US,
+             "config_hash": "000000000000", "enforce": True}
+    res = G.gate_ratio_vs_baseline(
+        G.GateSpec(kind="ratio_vs_baseline", threshold=1.2), cell,
+        _baseline({"c": entry}))
+    assert res.ok and not res.enforced and "stale" in res.detail
+    # matching hash: the 2x regression over baseline now hard-fails
+    entry2 = dict(entry, config_hash=cell["config_hash"])
+    res2 = G.gate_ratio_vs_baseline(
+        G.GateSpec(kind="ratio_vs_baseline", threshold=1.2), cell,
+        _baseline({"c": entry2}))
+    assert not res2.ok and res2.enforced
+
+
+def test_advisory_baseline_records_but_does_not_gate():
+    cell = t_cell("c", [100.0, 100.1, 99.9])
+    entry = {"median_s": 50 * US, "sigma_s": 0.1 * US,
+             "config_hash": cell["config_hash"], "enforce": False}
+    res = G.gate_ratio_vs_baseline(
+        G.GateSpec(kind="ratio_vs_baseline", threshold=1.2), cell,
+        _baseline({"c": entry}))
+    assert not res.ok and not res.enforced
+
+
+def test_exact_baseline_gate():
+    cell = dict(MS.exact_cell({"cell": "fig"}, "abc123"), id="f")
+    spec = G.GateSpec(kind="exact_vs_baseline")
+    missing = G.gate_exact_vs_baseline(spec, cell, None)
+    assert missing.ok and not missing.enforced       # recorded, not compared
+    entry = {"hash": "abc123", "config_hash": cell["config_hash"]}
+    assert G.gate_exact_vs_baseline(spec, cell, _baseline({"f": entry})).ok
+    bad = G.gate_exact_vs_baseline(
+        spec, cell, _baseline({"f": dict(entry, hash="def456")}))
+    assert not bad.ok and bad.enforced               # exact defaults enforced
+
+
+# ---------------------------------------------------------------------------
+# the runner's central gate pass + report schema round-trip
+# ---------------------------------------------------------------------------
+
+def _tiny_matrix(smoke=True):
+    cells = {
+        "t/ref": MD.CellSpec(id="t/ref", suite="t", gates=()),
+        "t/fast": MD.CellSpec(
+            id="t/fast", suite="t",
+            gates=(G.GateSpec(kind="ratio_vs_ref", reference="t/ref",
+                              threshold=1.2),)),
+        "t/contract": MD.CellSpec(
+            id="t/contract", suite="t",
+            gates=(G.GateSpec(kind="contract"),)),
+        "t/never_emitted": MD.CellSpec(
+            id="t/never_emitted", suite="t",
+            gates=(G.GateSpec(kind="contract"),)),
+    }
+    suites = {"t": MD.SuiteSpec("t", "tests/nonexistent.py")}
+    return MD.MatrixSpec(suites=suites, cells=cells, smoke=smoke)
+
+
+def _tiny_suite_cells():
+    return {"t": {
+        "t/ref": t_cell("t/ref", [100.0, 100.1, 99.9]),
+        "t/fast": t_cell("t/fast", [101.0, 101.1, 100.9]),
+        "t/contract": dict(MS.contract_cell({"c": 1}, True), id="t/contract"),
+        "t/extra": dict(MS.contract_cell({"c": 2}, True), id="t/extra"),
+    }}
+
+
+def test_gate_cells_missing_declared_cell_fails():
+    matrix = _tiny_matrix()
+    report_cells, failures = R.gate_cells(matrix, _tiny_suite_cells(), None)
+    assert report_cells["t/fast"]["ok"]
+    assert report_cells["t/contract"]["ok"]
+    # the declared-but-never-emitted cell is a loud failure (one entry
+    # per gate: the synthetic "present" gate plus its declared gates)...
+    assert not report_cells["t/never_emitted"]["ok"]
+    assert {f["cell"] for f in failures} == {"t/never_emitted"}
+    # ...and the undeclared extra cell is carried through ungated
+    assert report_cells["t/extra"]["declared"] is False
+    assert report_cells["t/extra"]["gates"] == []
+
+
+def test_report_schema_roundtrip():
+    matrix = _tiny_matrix()
+    suite_runs = {"t": {
+        "status": {"script": "x.py", "argv": [], "status": "ok",
+                   "wall_s": 0.1, "returncode": 0},
+        "out": {"cells": _tiny_suite_cells()["t"]},
+    }}
+    report = R.assemble_report(matrix, suite_runs, None, "benchmarks/b.json")
+    assert G.validate_report(report) == []
+    rt = json.loads(json.dumps(report, default=str))
+    assert G.validate_report(rt) == []
+    assert rt["schema"] == G.SCHEMA
+    assert rt["matrix_config_hash"] == matrix.config_hash
+    # only the declared-but-missing cell fails; everything else gated ok
+    assert {f["cell"] for f in rt["failures"]} == {"t/never_emitted"}
+    assert rt["ok"] is False
+
+
+def test_validate_report_catches_malformed_cells():
+    bad = {"schema": G.SCHEMA, "smoke": True, "matrix_config_hash": "x",
+           "suites": {}, "ok": True, "failures": [],
+           "cells": {"c": {"kind": "banana"}}}
+    errs = G.validate_report(bad)
+    assert any("bad kind" in e for e in errs)
+    assert any("config_hash" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# the declared matrix is internally consistent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("smoke", [True, False])
+def test_declared_matrix_consistency(smoke):
+    matrix = MD.build_matrix(smoke)
+    for cid, spec in matrix.cells.items():
+        assert spec.suite in matrix.suites, cid
+        for gate in spec.gates:
+            if gate.kind == "ratio_vs_ref":
+                assert gate.reference in matrix.cells, (cid, gate.reference)
+                assert gate.threshold and gate.threshold > 1.0
+    # every historical gate surface is declared
+    have = set(matrix.cells)
+    for name in MD.MEMPLAN_CHECKS:
+        assert f"memplan/{name}" in have
+    for name in MD.ELASTIC_CHECKS:
+        assert f"elastic/{name}" in have
+    for name in MD.CHAOS_CHECKS:
+        assert f"chaos/{name}" in have
+    for label in MD.COMM_POLICY_LABELS:
+        assert f"comm/policy/{label}" in have
+    for name in MD.FIGURE_CELLS:
+        assert f"figures/{name}" in have
+    rates = MD.SERVE_RATES_SMOKE if smoke else MD.SERVE_RATES_FULL
+    for rate in rates:
+        assert f"serve/rate/{rate}" in have
+    # smoke and full declare different matrices (provenance hash differs)
+    assert MD.build_matrix(True).config_hash != \
+        MD.build_matrix(False).config_hash
+
+
+def test_check_suite_slices_one_suite():
+    """The standalone shims gate exactly their own declared slice."""
+    out = {"cells": {}}   # a suite that emitted nothing
+    failures = R.check_suite("memplan", out, smoke=True)
+    # every declared memplan cell is reported missing, nothing else
+    assert all(f.startswith("memplan/") for f in failures)
+    missing = {f.split(":")[0] for f in failures}
+    assert missing == {f"memplan/{n}" for n in MD.MEMPLAN_CHECKS}
+
+
+# ---------------------------------------------------------------------------
+# the harness verdict registry
+# ---------------------------------------------------------------------------
+
+def test_make_check_and_contract_cells():
+    results = {}
+    check = MS.make_check(results)
+
+    @check("passes")
+    def _a():
+        pass
+
+    @check("fails")
+    def _b():
+        raise ValueError("boom")
+
+    results["fails_detail"] = {"extra": "not a verdict"}
+    assert results["passes"] == {"ok": True}
+    assert not results["fails"]["ok"] and "boom" in results["fails"]["err"]
+    assert MS.failed_checks(results) == ["fails"]
+    cells = MS.contract_cells("h", results, {"mesh": 8})
+    assert set(cells) == {"h/passes", "h/fails"}     # details skipped
+    assert cells["h/passes"]["ok"] and not cells["h/fails"]["ok"]
+    assert cells["h/fails"]["detail"].startswith("ValueError")
+    assert cells["h/passes"]["config"]["mesh"] == 8

@@ -1,0 +1,138 @@
+"""Refresh benchmarks/baselines.json from a BENCH_matrix.json run.
+
+  PYTHONPATH=src python tools/update_baseline.py BENCH_matrix.json \
+      [--baselines benchmarks/baselines.json] [--cells id1,id2,...]
+      [--enforce-timing] [--dry-run]
+
+For every declared cell in the report, writes/updates one baseline entry:
+
+* timing cells  -> ``{median_s, sigma_s, n, config_hash, enforce}``
+* exact cells   -> ``{hash, config_hash, enforce}``
+
+The ``config_hash`` makes the entry self-invalidating: when a cell's
+declarative config changes, the gates treat the old entry as *stale* and
+fall back to in-run-reference-only — never a silent pass against a
+meaningless number (see repro.bench.gates.baseline_entry).
+
+Enforcement policy on merge:
+
+* an EXISTING entry keeps its ``enforce`` flag (curation survives
+  refreshes);
+* a NEW timing entry defaults to ``enforce: false`` — advisory — because
+  CI hosts are not the curator's host; flip it by hand (or pass
+  ``--enforce-timing``) only for cells you trust cross-machine;
+* a NEW exact (value-hash) entry defaults to ``enforce: true`` — the
+  figure cells are deterministic model outputs, so any hash drift is a
+  real reproducibility break.
+
+Baselines from a *smoke* run are refused unless ``--allow-smoke``: smoke
+cells run fewer repeats/requests, and curating them would quietly loosen
+the full-run gates.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.bench.gates import BASELINE_SCHEMA, SCHEMA, validate_report
+
+
+def baseline_from_cell(cell: dict, old: dict | None,
+                       enforce_timing: bool) -> dict | None:
+    kind = cell.get("kind")
+    if cell.get("missing") or not cell.get("declared", True):
+        return None
+    if kind == "timing" and cell.get("timing"):
+        t = cell["timing"]
+        return {
+            "kind": "timing",
+            "median_s": t["median_s"],
+            "sigma_s": t["sigma_s"],
+            "n": t["n"],
+            "config_hash": cell["config_hash"],
+            "enforce": old["enforce"] if old and "enforce" in old
+            else enforce_timing,
+        }
+    if kind == "exact" and cell.get("hash"):
+        return {
+            "kind": "exact",
+            "hash": cell["hash"],
+            "config_hash": cell["config_hash"],
+            "enforce": old["enforce"] if old and "enforce" in old else True,
+        }
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Merge a BENCH_matrix.json run into the checked-in "
+                    "baselines (see docs/benchmarks.md)")
+    ap.add_argument("report", help="BENCH_matrix.json from a full run")
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--cells", default="",
+                    help="comma-separated cell ids to update (default: all)")
+    ap.add_argument("--enforce-timing", action="store_true",
+                    help="NEW timing entries get enforce:true (default "
+                         "advisory)")
+    ap.add_argument("--allow-smoke", action="store_true",
+                    help="accept a smoke-run report (normally refused)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the merged baselines, write nothing")
+    args = ap.parse_args(argv)
+
+    report = json.loads(pathlib.Path(args.report).read_text())
+    errs = validate_report(report)
+    if errs:
+        print(f"refusing invalid report ({len(errs)} schema error(s)):",
+              file=sys.stderr)
+        for e in errs[:10]:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    assert report.get("schema") == SCHEMA
+    if report.get("smoke") and not args.allow_smoke:
+        print("refusing a --smoke report: smoke cells run fewer repeats; "
+              "curate baselines from a full run (or pass --allow-smoke)",
+              file=sys.stderr)
+        return 1
+
+    bpath = pathlib.Path(args.baselines)
+    baselines = (json.loads(bpath.read_text()) if bpath.exists()
+                 else {"schema": BASELINE_SCHEMA, "cells": {}})
+    assert baselines.get("schema") == BASELINE_SCHEMA
+
+    only = {c.strip() for c in args.cells.split(",") if c.strip()}
+    updated, skipped = [], []
+    for cid, cell in report.get("cells", {}).items():
+        if only and cid not in only:
+            continue
+        entry = baseline_from_cell(cell, baselines["cells"].get(cid),
+                                   args.enforce_timing)
+        if entry is None:
+            skipped.append(cid)
+            continue
+        baselines["cells"][cid] = entry
+        updated.append(cid)
+
+    baselines["source"] = {
+        "matrix_config_hash": report.get("matrix_config_hash"),
+        "smoke": bool(report.get("smoke")),
+    }
+    text = json.dumps(baselines, indent=1, sort_keys=True) + "\n"
+    if args.dry_run:
+        print(text)
+    else:
+        bpath.write_text(text)
+    enforced = sum(1 for e in baselines["cells"].values() if e.get("enforce"))
+    print(f"{'would update' if args.dry_run else 'updated'} {len(updated)} "
+          f"entr{'y' if len(updated) == 1 else 'ies'} in {bpath} "
+          f"({enforced}/{len(baselines['cells'])} enforced); "
+          f"skipped {len(skipped)} contract/missing cell(s)",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
